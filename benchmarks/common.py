@@ -1,0 +1,34 @@
+"""Benchmark helpers: timing, CSV emission, CPU-budget scaling.
+
+Every figure module prints ``name,us_per_call,derived`` CSV rows (harness
+contract) plus a human-readable block.  This container is a single CPU
+core, so game counts / playout budgets are scaled down (the *methodology*
+is the paper's; EXPERIMENTS.md records the mapping).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+            **kw) -> Tuple[float, object]:
+    """Median wall time (s) of a jitted callable; blocks on results."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2], out
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds * 1e6:.1f},{derived}")

@@ -1,0 +1,58 @@
+"""Fig. 9: scheduling-policy (affinity) sensitivity.
+
+Paper: FUEGO strength vs KMP_AFFINITY in {compact, balanced, scatter};
+*balanced* is most stable, *compact* best at 4 threads/core, and the
+asymmetric thread-per-core regions degrade sharply.
+
+Here (DESIGN.md §2): the policies place MCTS work units on mesh devices.
+Structural metrics reproduce the paper's mechanism: device utilisation
+(compact leaves devices idle = Phi cores idle), imbalance (the paper's
+2-vs-3-threads/core regions => max/mean load > 1 — the step-time tax of a
+synchronous SPMD machine), plus a strength point per policy at equal lane
+count (lane placement changes which lanes share a virtual-loss view).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.config import MCTSConfig
+from repro.core import affinity
+from repro.core.selfplay import match
+from repro.go import GoEngine
+
+DEVICES = 16
+
+
+def run(lane_sweep=(8, 16, 24, 40, 64), strength_games=4) -> None:
+    print("# fig9: affinity policies — structural placement metrics")
+    for policy in affinity.POLICIES:
+        for lanes in lane_sweep:
+            a = affinity.lane_to_device(policy, lanes, DEVICES)
+            util = affinity.utilisation(a, DEVICES)
+            imb = affinity.imbalance(a, DEVICES)
+            # a synchronous step runs at the busiest device's pace
+            slowdown = imb
+            csv_row(f"affinity_{policy}_n{lanes}", 0.0,
+                    f"util={util:.2f};imbalance={imb:.2f};"
+                    f"sync_slowdown={slowdown:.2f}")
+
+    print("# fig9b: strength at equal lanes across policies (CPU-scaled)")
+    eng = GoEngine(5, komi=0.5)
+    base = MCTSConfig(board_size=5, lanes=2, sims_per_move=16,
+                      max_nodes=128, affinity="compact")
+    for policy in affinity.POLICIES:
+        import dataclasses
+        cfg = dataclasses.replace(base, affinity=policy)
+        t0 = time.time()
+        res = match(eng, cfg, base, games=strength_games, seed=7,
+                    max_moves=30)
+        csv_row(f"affinity_match_{policy}",
+                (time.time() - t0) / strength_games,
+                f"winrate_vs_compact={res.rate.rate:.3f}")
+
+
+if __name__ == "__main__":
+    run()

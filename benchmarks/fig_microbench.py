@@ -1,0 +1,54 @@
+"""Figs. 6-8: the FMA micro-benchmark ``c[j] = a[j]*b[j] + c[j]``.
+
+Paper: double-precision and integer arithmetic throughput (Figs. 6/7) and
+memory bandwidth (Fig. 8) vs thread count per affinity mode on the Phi.
+
+Here: the ``fma_stream`` op swept over dtype (f32 / int32 — the TPU VPU
+analogues of the Phi's double/int lanes; f64 runs via the CPU oracle) and
+arithmetic intensity (``repeats``: 1 = bandwidth-bound Fig. 8 regime, 64 =
+compute-bound Figs. 6/7 regime).  The thread-count axis maps to the array
+length (more parallel lanes of work).  Wall time is XLA-CPU on this
+container; the TPU-projected columns use the kernel's exact FLOP/byte
+counts against v5e peaks (the dry-run's roofline constants).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.kernels.fma_stream.ops import fma_stream
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+
+def run() -> None:
+    print("# fig6/7/8: fma_stream throughput + bandwidth")
+    print("# paper: Phi throughput has per-affinity plateaus; here the")
+    print("# analogue sweep is lanes(n) x intensity(repeats) x dtype")
+    for dtype, tag in ((jnp.float32, "f32"), (jnp.int32, "i32")):
+        for n in (1 << 16, 1 << 20, 1 << 22):
+            for repeats in (1, 16, 64):
+                key = jax.random.PRNGKey(0)
+                if dtype == jnp.int32:
+                    a = jnp.ones((n,), dtype)
+                    b = jnp.ones((n,), dtype)
+                    c = jnp.zeros((n,), dtype)
+                else:
+                    a = jax.random.normal(key, (n,), dtype)
+                    b = a + 1.0
+                    c = a * 0.5
+                sec, _ = time_fn(fma_stream, a, b, c, repeats=repeats)
+                flops = 2.0 * n * repeats
+                bytes_moved = 4 * n * 4  # 3 reads + 1 write
+                gflops = flops / sec / 1e9
+                gbps = bytes_moved / sec / 1e9
+                # structural TPU projection from the kernel's exact counts
+                tpu_bound = max(flops / PEAK_FLOPS_BF16,
+                                bytes_moved / HBM_BW)
+                csv_row(f"fma_{tag}_n{n}_r{repeats}", sec,
+                        f"{gflops:.2f}GFLOP/s cpu;{gbps:.2f}GB/s cpu;"
+                        f"tpu_roofline={tpu_bound * 1e6:.2f}us")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Parallelisation-mode comparison: tree vs root vs leaf (related work).
+
+The paper's related-work section ranks the three classical MCTS
+parallelisations (Chaslot et al.): *tree* parallelisation (FUEGO's choice,
+shared tree + virtual loss) > *root* (independent trees, vote merge) >
+*leaf* (one selection, many playouts) at equal playout budget, because
+leaf wastes budget on one path and root never shares deep discoveries.
+
+Here: equal-total-playout matches of each mode against the same
+single-lane sequential baseline (CPU-scaled), plus the structural
+signature of each mode (tree growth per playout).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from benchmarks.common import csv_row
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.core.selfplay import match
+from repro.go import GoEngine
+
+BOARD = 5
+GAMES = 6
+BUDGET = 32   # total playouts/move for every contestant
+
+
+def run() -> None:
+    print("# modes: tree vs root vs leaf at equal playout budget")
+    eng = GoEngine(BOARD, komi=0.5)
+    base = MCTSConfig(board_size=BOARD, lanes=1, sims_per_move=BUDGET,
+                      max_nodes=256, parallelism="tree")
+    contenders = {
+        "tree4": dataclasses.replace(base, lanes=4),
+        "root4": dataclasses.replace(base, parallelism="root",
+                                     root_trees=4, lanes=1),
+        "leaf4": dataclasses.replace(base, parallelism="leaf",
+                                     lanes=1, leaf_playouts=4),
+    }
+    # structural: nodes grown per playout budget
+    for name, cfg in contenders.items():
+        m = MCTS(eng, cfg)
+        res = jax.jit(lambda s, k: m.search(s, k))(
+            eng.init_state(), jax.random.PRNGKey(0))
+        csv_row(f"mode_tree_growth_{name}", 0.0,
+                f"nodes={int(res.tree.size)};iters={m.iterations}")
+
+    # strength vs the same sequential baseline
+    for name, cfg in contenders.items():
+        t0 = time.time()
+        res = match(eng, cfg, base, games=GAMES, seed=11, max_moves=30)
+        csv_row(f"mode_match_{name}", (time.time() - t0) / GAMES,
+                f"winrate_vs_seq={res.rate.rate:.3f};"
+                f"ci=[{res.rate.lo:.2f},{res.rate.hi:.2f}]")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Roofline table (deliverable (g)): read the dry-run cache and emit the
+per-(arch x shape x mesh) terms as CSV.  The dry-run itself is the
+measurement; this figure just renders it for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+
+def run(path: str = RESULTS) -> None:
+    print("# roofline terms per dry-run cell (seconds; dominant term)")
+    if not os.path.exists(path):
+        print(f"# no dry-run cache at {path}; run: "
+              "python -m repro.launch.dryrun --all --both-meshes")
+        return
+    with open(path) as f:
+        results = json.load(f)
+    for key in sorted(results):
+        rec = results[key]
+        if rec.get("status") != "ok":
+            csv_row(key.replace("|", "_"), 0.0,
+                    f"status={rec.get('status')}")
+            continue
+        r = rec["roofline"]
+        uf = rec.get("useful_fraction")
+        csv_row(
+            key.replace("|", "_"), r["roofline_step_s"],
+            f"compute={r['compute_s']:.4f};memory={r['memory_s']:.4f};"
+            f"collective={r['collective_s']:.4f};dom={r['dominant']};"
+            + (f"useful={uf:.3f}" if uf is not None else ""))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Figs. 4/5/11: self-play effective speedup — 2n lanes vs n lanes.
+
+Paper: win-rate of the double-resourced player vs thread count; CPU shows
+a smooth slightly-decreasing line (search overhead), Phi at 1 s/move shows
+a ragged hump that normalises at 10 s/move (problem size).
+
+Here: ``lanes`` is the thread analogue, ``sims_per_move`` the time-per-move
+analogue (small budget = the Phi's starved 1 s/move regime; larger = the
+10 s/move regime).  Budgets are CPU-scaled (5x5 board, few games) — the
+methodology (alternating colours, Heinz 95% CI) is the paper's exactly.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row
+from repro.config import MCTSConfig
+from repro.core.selfplay import effective_speedup_point
+from repro.go import GoEngine
+
+BOARD = 5
+GAMES = 6
+MOVE_CAP = 30
+
+
+def run(lanes_points=(1, 2), budgets=(8, 32)) -> None:
+    print("# fig4/5/11: 2n-vs-n self-play win rate (Heinz 95% CI)")
+    print(f"# CPU-scaled: {BOARD}x{BOARD}, {GAMES} games/point, "
+          f"move cap {MOVE_CAP}")
+    eng = GoEngine(BOARD, komi=0.5)
+    for sims in budgets:          # sims/move = the 1s vs 10s analogue
+        for lanes in lanes_points:
+            cfg = MCTSConfig(board_size=BOARD, lanes=lanes,
+                             sims_per_move=sims, max_nodes=128)
+            t0 = time.time()
+            res = effective_speedup_point(eng, cfg, games=GAMES,
+                                          seed=lanes * 100 + sims,
+                                          max_moves=MOVE_CAP)
+            dt = time.time() - t0
+            csv_row(f"selfplay_b{sims}_n{lanes}", dt / GAMES,
+                    f"winrate={res.rate.rate:.3f};"
+                    f"ci=[{res.rate.lo:.3f},{res.rate.hi:.3f}];"
+                    f"tree={res.mean_tree_nodes:.0f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Fig. 10: games (playouts) per second while making a move.
+
+Paper: FUEGO's games/sec vs thread count on CPU vs Phi — the raw
+*efficiency* measure that hides search overhead.  Here: playouts/sec of
+one search call vs lane count (single CPU device; the lane axis shows the
+vectorisation win of batched playouts, the TPU analogue of SMT filling).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import csv_row, time_fn
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.go import GoEngine
+
+BOARD = 5
+
+
+def run(lanes_points=(1, 2, 4, 8)) -> None:
+    print("# fig10: playouts/sec vs lanes (one move's search)")
+    eng = GoEngine(BOARD, komi=0.5)
+    for lanes in lanes_points:
+        cfg = MCTSConfig(board_size=BOARD, lanes=lanes,
+                         sims_per_move=8 * lanes, max_nodes=256)
+        m = MCTS(eng, cfg)
+        fn = jax.jit(lambda k: m.search(eng.init_state(), k).tree.size)
+        sec, _ = time_fn(fn, jax.random.PRNGKey(0), warmup=1, iters=2)
+        sims = m.iterations * lanes
+        csv_row(f"games_per_sec_n{lanes}", sec,
+                f"playouts_per_s={sims / sec:.1f};sims={sims}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Fig. 12: search-tree size when making a move vs time budget.
+
+Paper: node count of FUEGO's tree at the second move — 10 s/move on the
+Phi builds a tree the size of 1 s/move on the CPU; tree size, not seconds,
+is the operative variable.  Here: nodes vs ``sims_per_move`` and lanes.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import csv_row, time_fn
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.go import GoEngine
+
+BOARD = 5
+
+
+def run(budgets=(8, 16, 32, 64), lanes_points=(1, 4)) -> None:
+    print("# fig12: tree size vs playout budget (the 1s-vs-10s variable)")
+    eng = GoEngine(BOARD, komi=0.5)
+    st1 = eng.play(eng.init_state(), 12)   # measure at the second move
+    for lanes in lanes_points:
+        for sims in budgets:
+            cfg = MCTSConfig(board_size=BOARD, lanes=lanes,
+                             sims_per_move=sims, max_nodes=512)
+            m = MCTS(eng, cfg)
+            fn = jax.jit(lambda k: m.search(st1, k).tree.size)
+            sec, size = time_fn(fn, jax.random.PRNGKey(1), warmup=1,
+                                iters=2)
+            csv_row(f"treesize_n{lanes}_b{sims}", sec,
+                    f"nodes={int(size)}")
+
+
+if __name__ == "__main__":
+    run()

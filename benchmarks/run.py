@@ -1,0 +1,36 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Scaled for a single-CPU
+container (see each module's docstring for the paper mapping and
+EXPERIMENTS.md for the recorded results).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    figures = [
+        ("fig_microbench", "Figs 6-8: FMA throughput + bandwidth"),
+        ("fig_throughput", "Fig 10: playouts/sec vs lanes"),
+        ("fig_treesize", "Fig 12: tree size vs budget"),
+        ("fig_affinity", "Fig 9: affinity policies"),
+        ("fig_selfplay", "Figs 4/5/11: effective speedup"),
+        ("fig_modes", "Related work: tree vs root vs leaf parallelism"),
+        ("fig_roofline", "Roofline table from the dry-run"),
+    ]
+    print("name,us_per_call,derived")
+    for mod_name, desc in figures:
+        if only and only not in mod_name:
+            continue
+        print(f"# === {mod_name}: {desc} ===", flush=True)
+        t0 = time.time()
+        mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+        mod.run()
+        print(f"# {mod_name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

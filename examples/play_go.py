@@ -1,0 +1,61 @@
+"""End-to-end driver for the paper's application: a complete game of Go
+played by two tree-parallel MCTS players (the 2n-vs-n matchup of the
+paper's self-play methodology), rendered move by move.
+
+    PYTHONPATH=src python examples/play_go.py [--board 5] [--moves 20]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources
+from repro.go import GoEngine, BLACK
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--board", type=int, default=5)
+    ap.add_argument("--lanes", type=int, default=2)
+    ap.add_argument("--sims", type=int, default=32)
+    ap.add_argument("--moves", type=int, default=20)
+    args = ap.parse_args()
+
+    eng = GoEngine(args.board, komi=0.5)
+    weak_cfg = MCTSConfig(board_size=args.board, lanes=args.lanes,
+                          sims_per_move=args.sims, max_nodes=512)
+    strong_cfg = double_resources(weak_cfg)   # the paper's 2x player
+    strong = MCTS(eng, strong_cfg)            # plays black
+    weak = MCTS(eng, weak_cfg)                # plays white
+
+    s_move = jax.jit(lambda s, k: strong.search(s, k).action)
+    w_move = jax.jit(lambda s, k: weak.search(s, k).action)
+
+    st = eng.init_state()
+    key = jax.random.PRNGKey(0)
+    print(f"black: {strong_cfg.lanes} lanes x {strong_cfg.sims_per_move} "
+          f"sims | white: {weak_cfg.lanes} x {weak_cfg.sims_per_move}\n")
+    for mv in range(args.moves):
+        if bool(st.done):
+            break
+        key, sub = jax.random.split(key)
+        t0 = time.time()
+        fn = s_move if int(st.to_play) == BLACK else w_move
+        action = int(fn(st, sub))
+        st = eng.play(st, jnp.int32(action))
+        who = "black" if mv % 2 == 0 else "white"
+        name = "pass" if action == eng.pass_action else \
+            f"({action // args.board},{action % args.board})"
+        print(f"move {mv + 1:2d} {who}: {name}  ({time.time() - t0:.1f}s)")
+    print("\nfinal position:")
+    print(eng.render(st.board))
+    score = float(eng.score(st.board)) - eng.komi
+    print(f"\nscore (black - white - komi): {score:+.1f}  "
+          f"winner: {'black' if score > 0 else 'white'}")
+
+
+if __name__ == "__main__":
+    main()

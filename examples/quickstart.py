@@ -1,0 +1,47 @@
+"""Quickstart: tree-parallel MCTS picks a Go move (the paper's workload).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.go import GoEngine
+
+BOARD = 5   # CPU-friendly; use 9 for the paper's board
+
+
+def main() -> None:
+    engine = GoEngine(BOARD, komi=0.5)
+    cfg = MCTSConfig(board_size=BOARD, lanes=8, sims_per_move=128,
+                     max_nodes=1024, virtual_loss=1.0)
+    mcts = MCTS(engine, cfg)
+
+    state = engine.init_state()
+    print(f"{BOARD}x{BOARD} board, {cfg.lanes} parallel lanes "
+          f"('threads'), {cfg.sims_per_move} playouts/move\n")
+
+    t0 = time.time()
+    res = jax.jit(lambda s, k: mcts.search(s, k))(
+        state, jax.random.PRNGKey(0))
+    move = int(res.action)
+    print(f"search: {int(res.tree.size)} tree nodes in "
+          f"{time.time() - t0:.1f}s (compile included)")
+    visits = res.root_visits
+    top = sorted(range(engine.num_actions),
+                 key=lambda a: -float(visits[a]))[:5]
+    for a in top:
+        name = "pass" if a == engine.pass_action else \
+            f"({a // BOARD},{a % BOARD})"
+        print(f"  move {name:8s} visits={float(visits[a]):5.0f} "
+              f"value={float(res.root_values[a]):+.3f}")
+
+    state = engine.play(state, move)
+    print("\nboard after the chosen move:")
+    print(engine.render(state.board))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Mini reproduction of the paper's Fig. 5: effective speedup vs lanes.
+
+Sweeps the 2n-vs-n self-play win rate over lane counts at a fixed playout
+budget per lane — the paper's thread-scaling curve, CPU-budget scaled.
+
+    PYTHONPATH=src python examples/selfplay_scaling.py [--games 6]
+"""
+import argparse
+import time
+
+from repro.config import MCTSConfig
+from repro.core.selfplay import effective_speedup_point
+from repro.go import GoEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--board", type=int, default=5)
+    ap.add_argument("--games", type=int, default=6)
+    ap.add_argument("--sims-per-lane", type=int, default=8)
+    ap.add_argument("--lanes", type=int, nargs="+", default=[1, 2, 4])
+    args = ap.parse_args()
+
+    eng = GoEngine(args.board, komi=0.5)
+    print(f"# {args.board}x{args.board}, {args.games} games/point "
+          f"(paper: 300), {args.sims_per_lane} sims/lane")
+    print("lanes  2x-win-rate  95% CI           mean tree  s/game")
+    for n in args.lanes:
+        cfg = MCTSConfig(board_size=args.board, lanes=n,
+                         sims_per_move=args.sims_per_lane * n,
+                         max_nodes=256)
+        t0 = time.time()
+        res = effective_speedup_point(eng, cfg, games=args.games,
+                                      seed=n, max_moves=30)
+        dt = (time.time() - t0) / args.games
+        r = res.rate
+        print(f"{n:5d}  {r.rate * 100:10.1f}%  "
+              f"[{r.lo * 100:5.1f}, {r.hi * 100:5.1f}]  "
+              f"{res.mean_tree_nodes:9.0f}  {dt:6.1f}")
+    print("\npaper expectation: > 50% everywhere, gently decreasing with n"
+          "\n(search overhead); sharp drops past the hardware knee.")
+
+
+if __name__ == "__main__":
+    main()

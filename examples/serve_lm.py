@@ -1,0 +1,38 @@
+"""Batched serving: prefill + decode over a shared KV cache with the
+ServeEngine (greedy / temperature sampling, EOS handling, fixed buckets).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.reduced import reduced
+from repro.models import build_model
+from repro.serving import ServeEngine
+
+
+def main() -> None:
+    cfg = reduced("yi-6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, batch=4, max_prompt=16,
+                         max_new=12, temperature=0.8)
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(3, cfg.vocab_size, n))
+               for n in (5, 9, 12, 7)]
+    t0 = time.time()
+    outs = engine.generate(prompts, seed=42)
+    dt = time.time() - t0
+    for i, (p, o) in enumerate(zip(prompts, outs)):
+        print(f"request {i}: {len(p)} prompt toks -> {len(o)} generated: "
+              f"{o}")
+    total = sum(len(o) for o in outs)
+    print(f"\n{total} tokens in {dt:.1f}s (compile included) — "
+          f"{total / dt:.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.analysis.hlo import collective_bytes, parse_collectives
+from repro.analysis.roofline import roofline_terms, model_flops
+
+__all__ = ["collective_bytes", "parse_collectives", "roofline_terms",
+           "model_flops"]

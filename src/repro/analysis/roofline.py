@@ -1,0 +1,87 @@
+"""Roofline terms from a compiled dry-run artifact (TPU v5e constants).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw
+
+``compiled.cost_analysis()`` on an SPMD executable reports the per-device
+program, so no extra division by chip count is needed; the collective bytes
+come from the per-device HLO (analysis/hlo.py).  The dominant term is the
+bottleneck the §Perf loop iterates on.
+
+MODEL_FLOPS uses 6*N*D for training (2 fwd + 4 bwd matmul passes per param
+per token) and 2*N_active*D for single forward/decode, plus the attention
+term 12*L*H*hd*S_ctx*D_tokens (train; halved causal) — the "useful" fraction
+MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def roofline_terms(cost: Dict, coll: Dict, chips: int,
+                   peak_flops: float = PEAK_FLOPS_BF16,
+                   hbm_bw: float = HBM_BW, ici_bw: float = ICI_BW
+                   ) -> Dict[str, float]:
+    """``cost``: {'flops', 'hbm_bytes'} from analysis.hlo.analyze (trip-
+    count-aware, per-device); ``coll``: its wire-bytes dict."""
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("hbm_bytes", cost.get("bytes accessed", 0.0)))
+    wire_dev = float(coll.get("total", 0.0))
+    t_compute = flops_dev / peak_flops
+    t_memory = bytes_dev / hbm_bw
+    t_collective = wire_dev / ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective,
+             "flops_per_device": flops_dev,
+             "bytes_per_device": bytes_dev,
+             "wire_bytes_per_device": wire_dev,
+             "chips": chips}
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: terms[k])
+    terms["dominant"] = dom
+    bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
+    terms["roofline_step_s"] = bound
+    # fraction of the step the MXU would be busy if the bound is achieved
+    terms["compute_fraction_of_bound"] = (
+        t_compute / bound if bound > 0 else 0.0)
+    return terms
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic 'useful' FLOPs for one step of this (arch, shape) cell."""
+    n_active = cfg.active_params()
+    L = cfg.num_layers
+    hq = cfg.attn.num_heads
+    hd = cfg.head_dim
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_active * tokens
+        if hq:
+            # causal attention scores+values, fwd+bwd (x3), halved by mask
+            flops += 3.0 * 2.0 * 2.0 * L * hq * hd * shape.seq_len ** 2 \
+                * shape.global_batch / 2.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_active * tokens
+        if hq:
+            flops += 2.0 * 2.0 * L * hq * hd * shape.seq_len ** 2 \
+                * shape.global_batch / 2.0
+    else:  # decode: one token per sequence against the cached context
+        tokens = shape.global_batch
+        flops = 2.0 * n_active * tokens
+        if hq:
+            flops += 2.0 * 2.0 * L * hq * hd * shape.seq_len \
+                * shape.global_batch
+    return flops
+
+
+def useful_fraction(cfg: ModelConfig, shape: ShapeConfig, cost: Dict,
+                    chips: int) -> float:
+    hlo_total = float(cost.get("flops", 0.0)) * chips
+    if hlo_total <= 0:
+        return 0.0
+    return model_flops(cfg, shape) / hlo_total

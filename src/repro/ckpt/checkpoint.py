@@ -1,0 +1,191 @@
+"""Sharded, resharding-on-restore checkpointing (fault-tolerance core).
+
+Design (multi-host ready, no external deps):
+
+* A checkpoint is a directory ``step_<N>/`` holding one ``.npy`` per pytree
+  leaf (flattened key path as filename) plus ``manifest.json`` with the
+  treedef, shapes, dtypes, per-leaf CRC32 and the writing process's count.
+* **Elastic restore**: leaves are stored unsharded (gathered); restore
+  ``device_put``s them under *any* new mesh/sharding — restarting 512-chip
+  training on 256 chips (or a different DP/TP split) is a pure reshard.
+  On real multi-host pods each process would write its addressable shards;
+  the manifest format already carries per-leaf metadata to support that.
+* **Async**: ``AsyncCheckpointer`` snapshots device arrays to host inside
+  the step (cheap) and writes files on a worker thread, overlapping I/O
+  with subsequent compute; ``wait()`` drains before exit/preemption.
+* Atomicity: writes land in ``step_<N>.tmp`` and are renamed after fsync —
+  a killed writer never corrupts the latest complete checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                walk(f"{prefix}.{k}" if prefix else str(k), node[k])
+        elif isinstance(node, (list, tuple)) and not hasattr(node, "_fields"):
+            for i, v in enumerate(node):
+                walk(f"{prefix}[{i}]", v)
+        elif hasattr(node, "_fields"):  # NamedTuple
+            for k in node._fields:
+                walk(f"{prefix}.{k}" if prefix else k, getattr(node, k))
+        elif node is None:
+            flat[prefix] = None
+        else:
+            flat[prefix] = node
+
+    walk("", tree)
+    return flat
+
+
+def _unflatten_like(template, flat: Dict[str, Any]):
+    def walk(prefix, node):
+        if isinstance(node, dict):
+            return {k: walk(f"{prefix}.{k}" if prefix else str(k), node[k])
+                    for k in node}
+        if hasattr(node, "_fields"):
+            vals = {k: walk(f"{prefix}.{k}" if prefix else k,
+                            getattr(node, k)) for k in node._fields}
+            return type(node)(**vals)
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(f"{prefix}[{i}]", v)
+                              for i, v in enumerate(node))
+        if node is None:
+            return None
+        return flat[prefix]
+
+    return walk("", template)
+
+
+def save_checkpoint(directory: str, step: int, tree,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Gather-to-host + atomic write.  Returns the final path."""
+    flat = _flatten_with_paths(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
+            if v is not None}
+    return _write_host_checkpoint(directory, step, host, extra)
+
+
+def _write_host_checkpoint(directory: str, step: int,
+                           host: Dict[str, np.ndarray],
+                           extra: Optional[Dict[str, Any]] = None) -> str:
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": {}, "extra": extra or {},
+                "process_count": jax.process_count()}
+    for key, arr in host.items():
+        fname = key.replace("/", "_") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            & 0xFFFFFFFF,
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: Optional[int] = None,
+                       shardings=None, verify: bool = True
+                       ) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore into ``template``'s structure.
+
+    ``shardings``: optional pytree of NamedShardings (same structure) —
+    the elastic-resume path: the stored arrays are placed onto whatever
+    mesh the *current* job runs, regardless of the writer's mesh.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    shard_flat = _flatten_with_paths(shardings) if shardings is not None \
+        else {}
+
+    flat = {}
+    for key, meta in manifest["leaves"].items():
+        arr = np.load(os.path.join(path, meta["file"]))
+        if verify:
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+            if crc != meta["crc32"]:
+                raise IOError(f"checkpoint corruption in {key} "
+                              f"(crc {crc} != {meta['crc32']})")
+        sh = shard_flat.get(key)
+        flat[key] = jax.device_put(arr, sh) if sh is not None \
+            else jax.device_put(arr)
+    tree = _unflatten_like(template, flat)
+    return tree, step, manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Snapshot-in-step, write-on-thread checkpointing."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extra: Optional[Dict] = None) -> None:
+        self.wait()  # one in flight at a time
+        flat = _flatten_with_paths(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()
+                if v is not None}   # snapshot NOW (device -> host)
+
+        def work():
+            try:
+                _write_host_checkpoint(self.directory, step, host, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(int(d.split("_")[1])
+                       for d in os.listdir(self.directory)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

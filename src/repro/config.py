@@ -1,0 +1,325 @@
+"""Config system for the repro framework.
+
+Plain dataclasses (no external deps), a registry keyed by ``--arch`` id, and
+key=value override parsing for CLI launchers.  Every assigned architecture has a
+module in ``repro.configs`` that registers itself here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int = 0              # 0 => dense FFN
+    top_k: int = 2
+    shared_experts: int = 0           # DeepSeek/Moonlight-style always-on experts
+    first_dense: int = 0              # leading dense layers (Moonlight/K2: 1)
+    dense_ff: int = 0                 # d_ff of those dense layers (0 = d_ff)
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    # expert FFN hidden size lives in ModelConfig.d_ff (per expert)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 SSD parameters."""
+    d_state: int = 128
+    head_dim: int = 64                # P
+    expand: int = 2                   # d_inner = expand * d_model
+    chunk: int = 128                  # SSD chunk length
+    conv_kernel: int = 4
+    n_groups: int = 1
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0                 # 0 => d_model // num_heads
+    rope_theta: float = 10000.0
+    window: int = 0                   # 0 => full attention; else sliding window
+    # gemma2: alternate local(window)/global layers
+    alt_local_global: bool = False
+    logit_softcap: float = 0.0        # gemma2: 50.0 on attn logits
+    causal: bool = True               # False for encoder-only (hubert)
+    # decode-time: shard KV cache sequence over 'model' axis (shard_map LSE combine)
+    kv_seq_shard: bool = False
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"             # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int = 2
+    d_model: int = 128
+    d_ff: int = 512
+    vocab_size: int = 256
+    attn: AttnConfig = field(default_factory=AttnConfig)
+    moe: MoEConfig = field(default_factory=MoEConfig)
+    ssm: SSMConfig = field(default_factory=SSMConfig)
+    act: str = "swiglu"               # swiglu | geglu | gelu
+    tie_embeddings: bool = False
+    final_logit_softcap: float = 0.0  # gemma2: 30.0
+    norm_eps: float = 1e-6
+    post_block_norm: bool = False     # gemma2 pre+post norms
+    # hybrid (hymba): parallel attention + SSM heads in each block
+    hybrid_global_layers: Tuple[int, ...] = ()
+    meta_tokens: int = 0              # hymba learnable prefix tokens
+    # vlm/audio stub frontend: inputs arrive as embeddings for part of the seq
+    frontend_tokens: int = 0          # patches/frames occupying seq positions
+    max_seq_len: int = 8192
+    dtype: str = "bfloat16"
+
+    # -- derived ------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        a = self.attn
+        if a.head_dim:
+            return a.head_dim
+        return self.d_model // max(a.num_heads, 1)
+
+    def num_params(self) -> int:
+        """Analytic parameter count (embeddings + blocks + head)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        n = V * d                                    # token embedding
+        if not self.tie_embeddings:
+            n += V * d                               # lm head
+        n += d                                       # final norm
+        n += self.meta_tokens * d
+        if self.frontend_tokens or self.family == "audio":
+            n += 1024 * d + d * d                    # stub modality projector
+        if self.family == "audio":
+            n += d                                   # [MASK] embedding
+        per_layer = 0
+        extra = 0
+        if self.family == "ssm":
+            per_layer = _ssm_params(self)
+        else:
+            if self.attn.num_heads:
+                per_layer += _attn_params(self)
+            if self.family == "hybrid":
+                per_layer += _ssm_params(self)
+            if self.moe.num_experts:
+                e = self.moe.num_experts + self.moe.shared_experts
+                per_layer += 3 * d * self.d_ff * e + d * self.moe.num_experts
+                # leading dense layers use a dense FFN instead of experts
+                fd = self.moe.first_dense
+                dff = self.moe.dense_ff or self.d_ff
+                extra += fd * (3 * d * dff
+                               - (3 * d * self.d_ff * e
+                                  + d * self.moe.num_experts))
+            elif self.d_ff:
+                mult = 3 if self.act in ("swiglu", "geglu") else 2
+                per_layer += mult * d * self.d_ff
+            per_layer += 2 * d                       # norms
+        return n + per_layer * L + extra
+
+    def active_params(self) -> int:
+        """Params touched per token (MoE: routed top_k + shared only)."""
+        if not self.moe.num_experts:
+            return self.num_params()
+        d, L = self.d_model, self.num_layers
+        e_all = self.moe.num_experts + self.moe.shared_experts
+        e_act = self.moe.top_k + self.moe.shared_experts
+        dead = 3 * d * self.d_ff * (e_all - e_act) * L
+        return self.num_params() - dead
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    a, d, hd = cfg.attn, cfg.d_model, cfg.head_dim
+    return d * a.num_heads * hd + 2 * d * a.num_kv_heads * hd + a.num_heads * hd * d
+
+
+def _ssm_params(cfg: ModelConfig) -> int:
+    s, d = cfg.ssm, cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    proj_in = d * (2 * d_in + 2 * s.n_groups * s.d_state + H)
+    conv = s.conv_kernel * (d_in + 2 * s.n_groups * s.d_state)
+    return proj_in + conv + H + H + d_in + d_in * d  # A, D, gate-norm, out_proj
+
+
+# ---------------------------------------------------------------------------
+# Shapes (the 4 assigned input shapes) and run configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pods: int = 1                     # >1 => leading 'pod' axis
+
+    @property
+    def num_devices(self) -> int:
+        return self.data * self.model * self.pods
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 else ("data", "model")
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        if self.pods > 1:
+            return (self.pods, self.data, self.model)
+        return (self.data, self.model)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1             # grad-accumulation chunks per step
+    optimizer: str = "adamw"          # adamw | adafactor | sgdm
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    schedule: str = "cosine"
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    seed: int = 0
+    remat: bool = True
+    z_loss: float = 1e-4
+    # fault tolerance / distributed opt
+    ckpt_every: int = 500
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    async_ckpt: bool = True
+    compress_pod_grads: bool = False  # PowerSGD on the cross-pod all-reduce
+    powersgd_rank: int = 8
+    pipeline_stages: int = 0          # >0 => GPipe over the pod axis
+
+
+@dataclass(frozen=True)
+class MCTSConfig:
+    """Paper application config (FUEGO analog)."""
+    board_size: int = 9
+    komi: float = 6.0
+    lanes: int = 8                    # "threads": parallel simulations/iteration
+    sims_per_move: int = 64           # playout budget ("seconds per move" analog)
+    max_nodes: int = 4096             # tree arena capacity
+    c_uct: float = 0.9
+    virtual_loss: float = 1.0
+    parallelism: str = "tree"         # tree | root | leaf
+    root_trees: int = 1               # root parallelism degree (across devices)
+    leaf_playouts: int = 1            # playouts per selected leaf
+    affinity: str = "compact"         # compact | balanced | scatter
+    expand_threshold: int = 1
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    arch: str
+    model: ModelConfig
+    shape: ShapeConfig = field(default_factory=lambda: SHAPES["train_4k"])
+    mesh: MeshConfig = field(default_factory=MeshConfig)
+    train: TrainConfig = field(default_factory=TrainConfig)
+    mcts: Optional[MCTSConfig] = None
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+# shapes an arch cannot run, with reason — consumed by dryrun + EXPERIMENTS
+_SKIPS: Dict[str, Dict[str, str]] = {}
+
+
+def register(arch_id: str, fn: Callable[[], ModelConfig],
+             skip_shapes: Optional[Dict[str, str]] = None) -> None:
+    _REGISTRY[arch_id] = fn
+    _SKIPS[arch_id] = dict(skip_shapes or {})
+
+
+def get_model_config(arch_id: str) -> ModelConfig:
+    _ensure_configs_imported()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]()
+
+
+def skip_reason(arch_id: str, shape_name: str) -> Optional[str]:
+    _ensure_configs_imported()
+    return _SKIPS.get(arch_id, {}).get(shape_name)
+
+
+def list_archs() -> List[str]:
+    _ensure_configs_imported()
+    return sorted(_REGISTRY)
+
+
+def _ensure_configs_imported() -> None:
+    import repro.configs  # noqa: F401  (registers everything)
+
+
+# ---------------------------------------------------------------------------
+# Overrides + serialization
+# ---------------------------------------------------------------------------
+
+
+def apply_overrides(cfg: Any, overrides: Dict[str, str]) -> Any:
+    """Apply dotted key=value overrides to a (nested) frozen dataclass."""
+    for key, raw in overrides.items():
+        cfg = _set_dotted(cfg, key.split("."), raw)
+    return cfg
+
+
+def _set_dotted(cfg: Any, path: List[str], raw: str) -> Any:
+    name = path[0]
+    if not dataclasses.is_dataclass(cfg):
+        raise TypeError(f"cannot override {name} on non-dataclass {type(cfg)}")
+    cur = getattr(cfg, name)
+    if len(path) == 1:
+        ftypes = {f.name: f.type for f in dataclasses.fields(cfg)}
+        val = _coerce(raw, cur, ftypes.get(name))
+        return dataclasses.replace(cfg, **{name: val})
+    return dataclasses.replace(cfg, **{name: _set_dotted(cur, path[1:], raw)})
+
+
+def _coerce(raw: str, current: Any, _ftype: Any) -> Any:
+    if isinstance(current, bool):
+        return raw.lower() in ("1", "true", "yes", "on")
+    if isinstance(current, int):
+        return int(raw)
+    if isinstance(current, float):
+        return float(raw)
+    if isinstance(current, tuple):
+        return tuple(int(x) for x in raw.split(",") if x != "")
+    return raw
+
+
+def to_json(cfg: Any) -> str:
+    return json.dumps(dataclasses.asdict(cfg), indent=2, sort_keys=True)
+
+
+def parse_kv(args: List[str]) -> Dict[str, str]:
+    out: Dict[str, str] = {}
+    for a in args:
+        if "=" not in a:
+            raise ValueError(f"override {a!r} is not key=value")
+        k, v = a.split("=", 1)
+        out[k] = v
+    return out

@@ -1,0 +1,11 @@
+"""Assigned-architecture registry: importing this package registers every
+``--arch`` id with ``repro.config``.  One module per architecture with the
+exact published configuration (sources cited per module)."""
+from repro.configs import (fuego9, gemma2_9b, glm4_9b, hubert_xlarge,
+                           hymba_1p5b, kimi_k2_1t_a32b, llava_next_mistral_7b,
+                           mamba2_2p7b, moonshot_v1_16b_a3b, phi3_medium_14b,
+                           yi_6b)
+
+__all__ = ["fuego9", "gemma2_9b", "glm4_9b", "hubert_xlarge", "hymba_1p5b",
+           "kimi_k2_1t_a32b", "llava_next_mistral_7b", "mamba2_2p7b",
+           "moonshot_v1_16b_a3b", "phi3_medium_14b", "yi_6b"]

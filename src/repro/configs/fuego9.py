@@ -1,0 +1,25 @@
+"""fuego9 — the paper's own application: tournament-setting parallel MCTS Go.
+
+9x9 board, komi 6, Chinese rules (paper experimental setup); ``lanes`` is the
+thread-count analogue swept by the benchmarks (FUEGO ran 1..240 threads on
+the Phi).  Registered for the launcher; the LM shapes do not apply to it —
+its dry-run cells are the distributed root-parallel self-play steps.
+"""
+from repro.config import MCTSConfig
+
+SKIP_LM_SHAPES = "MCTS application: LM train/serve shapes do not apply"
+
+
+def config() -> MCTSConfig:
+    return MCTSConfig(
+        board_size=9,
+        komi=6.0,
+        lanes=8,
+        sims_per_move=256,
+        max_nodes=8192,
+        c_uct=0.9,
+        virtual_loss=1.0,
+        parallelism="tree",
+        root_trees=256,
+        affinity="compact",
+    )

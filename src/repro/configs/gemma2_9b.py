@@ -1,0 +1,33 @@
+"""gemma2-9b — Google Gemma 2 9B.
+
+[arXiv:2408.00118; hf] 42L d_model=3584 16H (GQA kv=8) d_ff=14336
+vocab=256000.  Alternating local (4096 sliding window) / global attention,
+attn logit softcap 50, final logit softcap 30, pre+post RMSNorm with (1+w)
+scaling, GeGLU.
+"""
+from repro.config import AttnConfig, ModelConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b",
+        family="dense",
+        num_layers=42,
+        d_model=3584,
+        d_ff=14336,
+        vocab_size=256000,
+        attn=AttnConfig(num_heads=16, num_kv_heads=8, head_dim=256,
+                        rope_theta=10000.0, window=4096,
+                        alt_local_global=True, logit_softcap=50.0,
+                        kv_seq_shard=True),
+        act="geglu",
+        final_logit_softcap=30.0,
+        post_block_norm=True,
+        max_seq_len=8192,
+    )
+
+
+register("gemma2-9b", config, skip_shapes={
+    "long_500k": "half the layers are full-attention (global): 512k decode "
+                 "is out of contract for the global-attention KV cache",
+})

@@ -1,0 +1,29 @@
+"""glm4-9b — THUDM GLM-4 9B dense.
+
+[hf:THUDM/glm-4-9b; hf] 40L d_model=4096 32H (GQA kv=2) d_ff=13696
+vocab=151552, RoPE, GQA.  Only 2 KV heads: the decode cache cannot be
+head-sharded on a 16-way model axis, so the cache *sequence* is sharded and
+decode attention merges shards via the LSE reduction (models/attention.py).
+"""
+from repro.config import AttnConfig, ModelConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="glm4-9b",
+        family="dense",
+        num_layers=40,
+        d_model=4096,
+        d_ff=13696,
+        vocab_size=151552,
+        attn=AttnConfig(num_heads=32, num_kv_heads=2, head_dim=128,
+                        rope_theta=10000.0, kv_seq_shard=True),
+        act="swiglu",
+        max_seq_len=131072,
+    )
+
+
+register("glm4-9b", config, skip_shapes={
+    "long_500k": "pure full-attention arch: 512k decode context is out of "
+                 "contract (quadratic prefill / unbounded KV)",
+})

@@ -1,0 +1,29 @@
+"""hubert-xlarge — HuBERT X-Large audio encoder.
+
+[arXiv:2106.07447; unverified] 48L d_model=1280 16H d_ff=5120 vocab=504
+(masked-prediction codebook).  Encoder-only (bidirectional, no decode step);
+the conv waveform frontend is a STUB per the brief — ``input_specs`` provides
+precomputed frame embeddings [B, S, 1024].
+"""
+from repro.config import AttnConfig, ModelConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hubert-xlarge",
+        family="audio",
+        num_layers=48,
+        d_model=1280,
+        d_ff=5120,
+        vocab_size=504,
+        attn=AttnConfig(num_heads=16, num_kv_heads=16, head_dim=80,
+                        rope_theta=10000.0, causal=False),
+        act="gelu",
+        max_seq_len=32768,
+    )
+
+
+register("hubert-xlarge", config, skip_shapes={
+    "decode_32k": "encoder-only architecture: no autoregressive decode step",
+    "long_500k": "encoder-only architecture: no autoregressive decode step",
+})

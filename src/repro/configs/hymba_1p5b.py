@@ -1,0 +1,33 @@
+"""hymba-1.5b — NVIDIA Hymba 1.5B hybrid (parallel attention + mamba heads).
+
+[arXiv:2411.13676; hf] 32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16.  Every block runs attention and an SSM mixer in
+parallel on the same input and averages their normalised outputs; layers 0,
+15, 31 use global attention, the rest sliding-window 1024; 128 learnable
+meta tokens are prepended.  Hybrid: runs ``long_500k`` (bounded SWA KV +
+O(1) SSM state; the 3 global layers keep full KV — linear, not quadratic).
+"""
+from repro.config import AttnConfig, ModelConfig, SSMConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b",
+        family="hybrid",
+        num_layers=32,
+        d_model=1600,
+        d_ff=5504,
+        vocab_size=32001,
+        attn=AttnConfig(num_heads=25, num_kv_heads=5, head_dim=64,
+                        rope_theta=10000.0, window=1024,
+                        kv_seq_shard=True),
+        ssm=SSMConfig(d_state=16, head_dim=64, expand=2, chunk=128,
+                      conv_kernel=4, n_groups=1),
+        hybrid_global_layers=(0, 15, 31),
+        meta_tokens=128,
+        act="swiglu",
+        max_seq_len=1048576,
+    )
+
+
+register("hymba-1.5b", config)

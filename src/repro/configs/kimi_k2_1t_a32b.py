@@ -1,0 +1,32 @@
+"""kimi-k2-1t-a32b — Kimi K2, trillion-parameter MoE (paper-table).
+
+[arXiv:2501.kimi2; unverified] 61L d_model=7168 64H (GQA kv=8) d_ff=2048
+(per expert) vocab=163840, MoE 384 experts top-8, 1 shared expert, first
+layer dense (d_ff=18432).  Trains with Adafactor (factored second moment) —
+1T params of Adam state does not fit 512 v5e chips (DESIGN.md §5).
+"""
+from repro.config import AttnConfig, MoEConfig, ModelConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b",
+        family="moe",
+        num_layers=61,
+        d_model=7168,
+        d_ff=2048,
+        vocab_size=163840,
+        attn=AttnConfig(num_heads=64, num_kv_heads=8, head_dim=112,
+                        rope_theta=50000.0, kv_seq_shard=True),
+        moe=MoEConfig(num_experts=384, top_k=8, shared_experts=1,
+                      first_dense=1, dense_ff=18432,
+                      capacity_factor=1.25),
+        act="swiglu",
+        max_seq_len=131072,
+    )
+
+
+register("kimi-k2-1t-a32b", config, skip_shapes={
+    "long_500k": "pure full-attention arch: 512k decode context is out of "
+                 "contract (quadratic prefill / unbounded KV)",
+})

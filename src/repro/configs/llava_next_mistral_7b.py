@@ -1,0 +1,33 @@
+"""llava-next-mistral-7b — LLaVA-NeXT on a Mistral-7B backbone.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified] 32L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=32000.  The anyres vision tower is a STUB per
+the brief: ``input_specs`` provides precomputed patch embeddings
+[B, 2880, 1024] (5 anyres tiles x 576 CLIP patches), projected by the
+standard 2-layer MLP into the LM sequence ahead of the text tokens.
+"""
+from repro.config import AttnConfig, ModelConfig, register
+
+ANYRES_PATCHES = 2880  # 5 tiles x 24x24 patches
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-mistral-7b",
+        family="vlm",
+        num_layers=32,
+        d_model=4096,
+        d_ff=14336,
+        vocab_size=32000,
+        attn=AttnConfig(num_heads=32, num_kv_heads=8, head_dim=128,
+                        rope_theta=1000000.0, kv_seq_shard=True),
+        frontend_tokens=ANYRES_PATCHES,
+        act="swiglu",
+        max_seq_len=32768,
+    )
+
+
+register("llava-next-mistral-7b", config, skip_shapes={
+    "long_500k": "pure full-attention backbone: 512k decode context is out "
+                 "of contract (quadratic prefill / unbounded KV)",
+})

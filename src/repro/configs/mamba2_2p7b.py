@@ -1,0 +1,26 @@
+"""mamba2-2.7b — Mamba-2 2.7B (SSD, attention-free).
+
+[arXiv:2405.21060; unverified] 64L d_model=2560 vocab=50280, ssm_state=128,
+head_dim=64, expand=2 (d_inner=5120, 80 heads), conv kernel 4, chunk 128.
+Attention-free: runs the ``long_500k`` shape (O(1) decode state).
+"""
+from repro.config import AttnConfig, ModelConfig, SSMConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        num_layers=64,
+        d_model=2560,
+        d_ff=0,
+        vocab_size=50280,
+        attn=AttnConfig(num_heads=0, num_kv_heads=0),
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk=128,
+                      conv_kernel=4, n_groups=1),
+        tie_embeddings=True,
+        max_seq_len=1048576,
+    )
+
+
+register("mamba2-2.7b", config)

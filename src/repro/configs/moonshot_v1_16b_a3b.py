@@ -1,0 +1,31 @@
+"""moonshot-v1-16b-a3b — Kimi/Moonlight 16B-A3B MoE.
+
+[hf:moonshotai/Moonlight-16B-A3B; hf] 48L d_model=2048 16H (GQA kv=16)
+d_ff=1408 (per expert) vocab=163840, MoE 64 experts top-6, 2 shared experts,
+first layer dense (DeepSeek-V3-style), dense layer d_ff=11264.
+"""
+from repro.config import AttnConfig, MoEConfig, ModelConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="moonshot-v1-16b-a3b",
+        family="moe",
+        num_layers=48,
+        d_model=2048,
+        d_ff=1408,
+        vocab_size=163840,
+        attn=AttnConfig(num_heads=16, num_kv_heads=16, head_dim=128,
+                        rope_theta=50000.0),
+        moe=MoEConfig(num_experts=64, top_k=6, shared_experts=2,
+                      first_dense=1, dense_ff=11264,
+                      capacity_factor=1.25),
+        act="swiglu",
+        max_seq_len=32768,
+    )
+
+
+register("moonshot-v1-16b-a3b", config, skip_shapes={
+    "long_500k": "pure full-attention arch: 512k decode context is out of "
+                 "contract (quadratic prefill / unbounded KV)",
+})

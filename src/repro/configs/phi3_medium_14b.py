@@ -1,0 +1,27 @@
+"""phi3-medium-14b — Microsoft Phi-3 Medium.
+
+[arXiv:2404.14219; unverified] 40L d_model=5120 40H (GQA kv=10) d_ff=17920
+vocab=100352, RoPE + SwiGLU + GQA.
+"""
+from repro.config import AttnConfig, ModelConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3-medium-14b",
+        family="dense",
+        num_layers=40,
+        d_model=5120,
+        d_ff=17920,
+        vocab_size=100352,
+        attn=AttnConfig(num_heads=40, num_kv_heads=10, head_dim=128,
+                        rope_theta=10000.0, kv_seq_shard=True),
+        act="swiglu",
+        max_seq_len=131072,
+    )
+
+
+register("phi3-medium-14b", config, skip_shapes={
+    "long_500k": "pure full-attention arch: 512k decode context is out of "
+                 "contract (quadratic prefill / unbounded KV)",
+})

@@ -1,0 +1,63 @@
+"""Reduced (smoke-test) variants of the assigned architectures.
+
+Same family/topology — MoE stays MoE with a dense first layer, hybrid keeps
+parallel attn+SSM heads, gemma2 keeps alternating windows and softcaps —
+but small widths/layer counts/expert counts so one forward/train step runs
+on a single CPU in seconds.  The FULL configs are exercised only via the
+dry-run (ShapeDtypeStruct, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.config import ModelConfig, get_model_config
+
+
+def reduce_config(cfg: ModelConfig) -> ModelConfig:
+    heads = min(cfg.attn.num_heads, 4) if cfg.attn.num_heads else 0
+    kv = 0
+    if heads:
+        ratio = max(1, cfg.attn.num_heads // max(cfg.attn.num_kv_heads, 1))
+        kv = max(1, heads // min(ratio, heads))
+    attn = dataclasses.replace(
+        cfg.attn,
+        num_heads=heads, num_kv_heads=kv,
+        head_dim=16 if heads else 0,
+        window=min(cfg.attn.window, 16) if cfg.attn.window else 0,
+        kv_seq_shard=False,
+    )
+    moe = cfg.moe
+    if moe.num_experts:
+        moe = dataclasses.replace(
+            moe, num_experts=8, top_k=2,
+            shared_experts=min(moe.shared_experts, 1),
+            first_dense=min(moe.first_dense, 1),
+            dense_ff=128 if moe.dense_ff else 0,
+            # no token drops at smoke scale: keeps per-token determinism so
+            # prefill<->decode consistency is exact
+            capacity_factor=4.0)
+    ssm = dataclasses.replace(
+        cfg.ssm, d_state=16, head_dim=8, expand=2, chunk=16, conv_kernel=4,
+        n_groups=1)
+    n_layers = 3 if moe.num_experts and moe.first_dense else 2
+    globals_ = tuple(g for g in (0,) if cfg.hybrid_global_layers)
+    return dataclasses.replace(
+        cfg,
+        num_layers=n_layers,
+        d_model=64,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=128,
+        attn=attn, moe=moe, ssm=ssm,
+        hybrid_global_layers=globals_,
+        meta_tokens=8 if cfg.meta_tokens else 0,
+        frontend_tokens=16 if cfg.frontend_tokens else 0,
+        max_seq_len=256,
+        # f32 at smoke scale: consistency tests check the *math* (chunked
+        # SSD vs stepwise recurrence, cache vs training attention) without
+        # bf16 accumulation noise; full configs stay bf16
+        dtype="float32",
+    )
+
+
+def reduced(arch_id: str) -> ModelConfig:
+    return reduce_config(get_model_config(arch_id))

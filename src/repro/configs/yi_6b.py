@@ -1,0 +1,27 @@
+"""yi-6b — 01.AI Yi-6B dense (llama-architecture GQA).
+
+[arXiv:2403.04652; hf] 32L d_model=4096 32H (GQA kv=4) d_ff=11008
+vocab=64000.
+"""
+from repro.config import AttnConfig, ModelConfig, register
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="yi-6b",
+        family="dense",
+        num_layers=32,
+        d_model=4096,
+        d_ff=11008,
+        vocab_size=64000,
+        attn=AttnConfig(num_heads=32, num_kv_heads=4, head_dim=128,
+                        rope_theta=5000000.0, kv_seq_shard=True),
+        act="swiglu",
+        max_seq_len=32768,
+    )
+
+
+register("yi-6b", config, skip_shapes={
+    "long_500k": "pure full-attention arch: 512k decode context is out of "
+                 "contract (quadratic prefill / unbounded KV)",
+})

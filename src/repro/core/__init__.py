@@ -1,0 +1,9 @@
+"""The paper's primary contribution: parallel MCTS (tree/root/leaf modes,
+virtual loss, lock-free-analogue scatter backups) + the self-play
+effective-speedup experimental harness, TPU-native (see DESIGN.md §2)."""
+from repro.core.mcts import MCTS, SearchResult, make_mcts
+from repro.core.tree import Tree, init_tree, root_action_visits
+from repro.core import stats, affinity, selfplay
+
+__all__ = ["MCTS", "SearchResult", "make_mcts", "Tree", "init_tree",
+           "root_action_visits", "stats", "affinity", "selfplay"]

@@ -1,0 +1,59 @@
+"""Lane-to-device placement policies — the KMP_AFFINITY analogue.
+
+The paper tunes ``KMP_AFFINITY in {compact, balanced, scatter}`` and finds
+FUEGO's strength is sensitive to it (Fig. 9): *compact* fills each core's 4
+SMT slots before using the next core (maximising cache sharing, leaving cores
+idle), *scatter* round-robins threads across cores (maximising core
+utilisation, thrashing shared caches), *balanced* blocks threads evenly.
+
+The TPU analogue assigns MCTS work units (root-parallel trees or playout
+lanes) to mesh devices.  The policy changes (a) how many devices are busy and
+(b) which collectives the lowered program needs — the structural quantities
+we measure in lieu of cache traffic.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+POLICIES = ("compact", "balanced", "scatter")
+
+
+def lane_to_device(policy: str, lanes: int, devices: int,
+                   slots_per_device: int = 4) -> np.ndarray:
+    """Device index for each lane under a policy.
+
+    ``slots_per_device`` mirrors the Phi's 4 SMT threads/core: *compact*
+    saturates a device before moving on, *scatter* round-robins, *balanced*
+    splits lanes into equal contiguous blocks across all devices.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown affinity {policy!r}; want {POLICIES}")
+    idx = np.arange(lanes)
+    if policy == "compact":
+        dev = idx // slots_per_device
+        return np.minimum(dev, devices - 1)
+    if policy == "scatter":
+        return idx % devices
+    # balanced: ceil-even contiguous blocks over all devices
+    per = -(-lanes // devices)
+    return idx // per
+
+
+def device_load(assignment: np.ndarray, devices: int) -> np.ndarray:
+    """Lanes per device — the utilisation profile the paper plots regions of."""
+    return np.bincount(assignment, minlength=devices)
+
+
+def utilisation(assignment: np.ndarray, devices: int) -> float:
+    """Fraction of devices with work — 'core utilisation' analogue."""
+    return float((device_load(assignment, devices) > 0).mean())
+
+
+def imbalance(assignment: np.ndarray, devices: int) -> float:
+    """max/mean load over busy devices — the paper's asymmetric-region
+    (2-vs-3 threads/core) degradation shows up as imbalance > 1."""
+    load = device_load(assignment, devices)
+    busy = load[load > 0]
+    if busy.size == 0:
+        return 0.0
+    return float(busy.max() / busy.mean())

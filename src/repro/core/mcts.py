@@ -1,0 +1,255 @@
+"""Parallel MCTS: tree / root / leaf parallelism with virtual loss.
+
+This is the paper's algorithm (FUEGO-style tree parallelisation with virtual
+loss and lock-free backups, Chaslot et al. 2008 / Enzenberger & Müller 2010)
+reformulated for a SIMD machine:
+
+* A "thread" is a **lane**.  One search *iteration* selects ``lanes`` leaves
+  from the shared tree, runs all their playouts as a single ``vmap`` batch,
+  and backs all results up with exact ``scatter-add``.
+* Virtual loss is applied **sequentially within an iteration** via
+  ``lax.scan`` over lanes: lane *i* selects under the statistics plus the
+  in-flight virtual losses of lanes *< i*, exactly the decorrelation the Phi
+  threads got from seeing each other's in-flight descents.  Lanes also see
+  nodes expanded by earlier lanes of the same iteration.
+* Backups clear the virtual loss (FUEGO removes it at backup time).
+
+With a fixed *time* budget the paper's "2× threads" player performs 2× the
+playouts per move at the price of staler selection statistics — the search
+overhead the self-play experiments measure.  Here: iterations are the time
+analogue and ``lanes`` the thread count, so ``sims/move = iterations x lanes``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MCTSConfig
+from repro.core import tree as tree_lib
+from repro.core.tree import Tree, UNVISITED
+from repro.go.board import GoEngine, GoState
+
+BIG = 1e9
+FPU = 10.0  # first-play urgency: unvisited edges are searched eagerly
+
+
+class SearchResult(NamedTuple):
+    tree: Tree
+    action: jax.Array          # chosen move (argmax root visits)
+    root_visits: jax.Array     # f32[A] visit distribution at the root
+    root_values: jax.Array     # f32[A] mean black-perspective values
+
+
+class MCTS:
+    """Search driver bound to an engine + config (methods jit/vmap-safe)."""
+
+    def __init__(self, engine: GoEngine, cfg: MCTSConfig,
+                 prior_fn=None, value_fn=None, use_puct: bool = False,
+                 max_depth: int = 64):
+        self.engine = engine
+        self.cfg = cfg
+        self.prior_fn = prior_fn      # optional policy hook: state, legal -> prior
+        self.value_fn = value_fn      # optional value hook replacing playouts
+        self.use_puct = use_puct
+        self.max_depth = max_depth
+        if cfg.parallelism == "tree":
+            self.iterations = max(1, cfg.sims_per_move
+                                  // (cfg.lanes * max(1, cfg.leaf_playouts)))
+        elif cfg.parallelism == "leaf":
+            self.iterations = max(1, cfg.sims_per_move
+                                  // max(1, cfg.leaf_playouts))
+        else:  # root: each tree gets the full iteration budget / root_trees
+            self.iterations = max(1, cfg.sims_per_move
+                                  // (max(1, cfg.root_trees)
+                                      * cfg.lanes * max(1, cfg.leaf_playouts)))
+
+    # ------------------------------------------------------------------ select
+
+    def _edge_scores(self, t: Tree, node, player, rng) -> jax.Array:
+        """UCT/PUCT score for every action at ``node`` under virtual loss.
+
+        Routed through ``kernels.uct_select.ops`` — the Pallas kernel on
+        TPU, its oracle elsewhere — so search and kernel share one call
+        site (see kernels/uct_select/kernel.py).
+        """
+        from repro.kernels.uct_select.ops import uct_scores
+        kids = t.children[node]
+        has_child = kids != UNVISITED
+        cidx = jnp.maximum(kids, 0)
+        parent_n = t.visit[node] + t.vloss[node]
+        score = uct_scores(
+            t.visit[cidx][None], t.value[cidx][None], t.vloss[cidx][None],
+            t.prior[node][None], t.legal[node][None], has_child[None],
+            parent_n[None], player[None],
+            c_uct=self.cfg.c_uct, vl_weight=self.cfg.virtual_loss,
+            use_puct=self.use_puct)[0]
+        # random tie-break (the asynchronous-thread nondeterminism analogue)
+        return score + jax.random.uniform(rng, score.shape) * 1e-3
+
+    def _select_lane(self, t: Tree, rng):
+        """Walk root->leaf under UCT+virtual-loss; expand one node.
+
+        Returns (tree, path i32[max_depth] node ids (-1 pad), playout node).
+        """
+        path0 = jnp.full((self.max_depth,), UNVISITED, jnp.int32).at[0].set(0)
+
+        def cond(c):
+            node, depth, _, _, stop = c
+            return (~stop) & (depth < self.max_depth - 1)
+
+        def body(c):
+            node, depth, path, key, _ = c
+            key, sub = jax.random.split(key)
+            player = tree_lib.node_state(t, node).to_play.astype(jnp.float32)
+            scores = self._edge_scores(t, node, player, sub)
+            act = jnp.argmax(scores).astype(jnp.int32)
+            child = t.children[node, act]
+            # descend only through materialised, expandable children
+            nxt = jnp.where(child == UNVISITED, node, child)
+            stop = (child == UNVISITED) | t.terminal[child] \
+                | ~t.expanded[jnp.maximum(child, 0)]
+            depth = depth + jnp.where(child == UNVISITED, 0, 1)
+            path = path.at[depth].set(nxt)
+            # smuggle chosen action out via stop case
+            return (jnp.where(stop & (child == UNVISITED), node, nxt),
+                    depth, path, key, stop), act
+
+        # hand-rolled while that also yields the last action
+        def loop(carry):
+            state, act = carry
+            state, act = body(state)
+            return (state, act)
+
+        state = (jnp.int32(0), jnp.int32(0), path0, rng, jnp.bool_(False))
+        act = jnp.int32(self.engine.pass_action)
+
+        def wcond(carry):
+            (node, depth, path, key, stop), _ = carry
+            return (~stop) & (depth < self.max_depth - 1)
+
+        (state, act) = jax.lax.while_loop(wcond, loop, (state, act))
+        node, depth, path, key, stop = state
+
+        # expand if we stopped at an unmaterialised edge of a non-terminal,
+        # sufficiently-visited node
+        can_expand = (t.children[node, act] == UNVISITED) \
+            & ~t.terminal[node] \
+            & (t.visit[node] + t.vloss[node] >= self.cfg.expand_threshold) \
+            & t.expanded[node]
+
+        def do_expand(t):
+            t2, idx = tree_lib.allocate(self.engine, t, node, act,
+                                        self.prior_fn)
+            return t2, idx
+
+        t, new_idx = jax.lax.cond(
+            can_expand, do_expand, lambda t: (t, node), t)
+        depth = depth + jnp.where(can_expand & (new_idx != node), 1, 0)
+        path = path.at[depth].set(new_idx)
+
+        # apply virtual loss along the path (visible to later lanes)
+        valid = path != UNVISITED
+        safe = jnp.maximum(path, 0)
+        t = t._replace(vloss=t.vloss.at[safe].add(
+            jnp.where(valid, 1.0, 0.0)))
+        return t, path, new_idx
+
+    # --------------------------------------------------------------- simulate
+
+    def _simulate(self, t: Tree, rng) -> Tree:
+        """One iteration: ``lanes`` selects -> batched playouts -> backup."""
+        L, P = self.cfg.lanes, max(1, self.cfg.leaf_playouts)
+        keys = jax.random.split(rng, L + 1)
+
+        def lane(t, key):
+            t, path, leaf = self._select_lane(t, key)
+            return t, (path, leaf)
+
+        t, (paths, leaves) = jax.lax.scan(lane, t, keys[:L])
+
+        # batched playouts: [L, P]
+        pkeys = jax.random.split(keys[L], L * P).reshape(L, P, 2)
+        leaf_states = jax.tree.map(lambda x: x[leaves], t.states)
+        if self.value_fn is not None:
+            vals = jax.vmap(self.value_fn)(leaf_states)          # [L]
+            vals = jnp.repeat(vals[:, None], P, axis=1)
+        else:
+            vals = jax.vmap(
+                lambda st, ks: jax.vmap(
+                    lambda k: self.engine.playout_value(st, k))(ks)
+            )(leaf_states, pkeys)                                 # [L, P]
+        val_sum = vals.sum(axis=1)                                # black persp.
+
+        # exact scatter-add backup over all lanes at once
+        flat = paths.reshape(-1)
+        ok = flat != UNVISITED
+        safe = jnp.maximum(flat, 0)
+        w = jnp.where(ok, 1.0, 0.0)
+        vrep = jnp.repeat(val_sum, self.max_depth)
+        t = t._replace(
+            visit=t.visit.at[safe].add(w * P),
+            value=t.value.at[safe].add(jnp.where(ok, vrep, 0.0)),
+            vloss=jnp.zeros_like(t.vloss),   # FUEGO: remove at backup
+        )
+        return t
+
+    # ----------------------------------------------------------------- search
+
+    def search(self, root: GoState, rng) -> SearchResult:
+        """Run a full move search from ``root``."""
+        t = tree_lib.init_tree(self.engine, root, self.cfg.max_nodes,
+                               None if self.prior_fn is None
+                               else self.prior_fn(root,
+                                                  self.engine.legal_moves(root)))
+        keys = jax.random.split(rng, self.iterations)
+
+        def it(i, t):
+            return self._simulate(t, keys[i])
+
+        t = jax.lax.fori_loop(0, self.iterations, it, t)
+        visits = tree_lib.root_action_visits(t)
+        legal = t.legal[0]
+        masked = jnp.where(legal, visits, -1.0)
+        action = jnp.argmax(masked).astype(jnp.int32)
+        # no explored legal child (tiny budgets): any legal move
+        fallback = jnp.argmax(legal).astype(jnp.int32)
+        action = jnp.where(masked[action] > 0, action, fallback)
+        return SearchResult(tree=t, action=action, root_visits=visits,
+                            root_values=tree_lib.root_action_values(t))
+
+    def search_root_parallel(self, root: GoState, rng) -> SearchResult:
+        """Root parallelism: ``root_trees`` independent searches, vote merge."""
+        R = max(1, self.cfg.root_trees)
+        keys = jax.random.split(rng, R)
+        res = jax.vmap(lambda k: self.search(root, k))(keys)
+        visits = res.root_visits.sum(axis=0)
+        values = res.root_values.mean(axis=0)
+        legal = self.engine.legal_moves(root)
+        masked = jnp.where(legal, visits, -1.0)
+        action = jnp.argmax(masked).astype(jnp.int32)
+        fallback = jnp.argmax(legal).astype(jnp.int32)
+        action = jnp.where(masked[action] > 0, action, fallback)
+        tree0 = jax.tree.map(lambda x: x[0], res.tree)
+        return SearchResult(tree=tree0, action=action, root_visits=visits,
+                            root_values=values)
+
+    def best_move(self, root: GoState, rng) -> jax.Array:
+        if self.cfg.parallelism == "root":
+            return self.search_root_parallel(root, rng).action
+        return self.search(root, rng).action
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def jit_best_move(self, root: GoState, rng) -> jax.Array:
+        return self.best_move(root, rng)
+
+
+def make_mcts(engine: GoEngine, cfg: MCTSConfig, **kw) -> MCTS:
+    if cfg.parallelism == "leaf":
+        # leaf parallelism: a single selection lane, many playouts per leaf
+        cfg = cfg if cfg.lanes == 1 else cfg.__class__(
+            **{**cfg.__dict__, "lanes": 1,
+               "leaf_playouts": max(cfg.leaf_playouts, cfg.lanes)})
+    return MCTS(engine, cfg, **kw)

@@ -1,0 +1,125 @@
+"""Self-play effective-speedup harness (the paper's experiment).
+
+"We have performed self-play experiments in which a version of the program
+with double the resources (2x # of threads) against a version with single
+resources (1x # of threads) are compared."
+
+``match(cfg_a, cfg_b)`` plays games between two MCTS configurations with
+alternating colours (the paper enables alternating player colour), scores the
+match with the Heinz 95% CI, and is the backend of ``benchmarks/fig_selfplay``
+(Figs. 4, 5, 9, 11) and ``launch/selfplay.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.core import stats
+from repro.go.board import BLACK, GoEngine, GoState
+
+
+class GameRecord(NamedTuple):
+    winner: jax.Array       # +1 black / -1 white / 0 draw
+    moves: jax.Array        # game length
+    tree_nodes: jax.Array   # nodes in the *last* search tree (Fig. 12 metric)
+
+
+def double_resources(cfg: MCTSConfig) -> MCTSConfig:
+    """The paper's 2x player: twice the threads (lanes)."""
+    return dataclasses.replace(cfg, lanes=cfg.lanes * 2,
+                               sims_per_move=cfg.sims_per_move * 2)
+
+
+def play_game(engine: GoEngine, player_a: MCTS, player_b: MCTS,
+              rng: jax.Array, a_is_black: jax.Array,
+              max_moves: Optional[int] = None) -> GameRecord:
+    """One full game, A vs B; jit/vmap-safe."""
+    cap = max_moves or engine.max_moves
+
+    def cond(carry):
+        st, _, _, nmoves = carry
+        return (~st.done) & (nmoves < cap)
+
+    def body(carry):
+        st, key, nodes, nmoves = carry
+        key, ka, kb = jax.random.split(key, 3)
+        black_to_move = st.to_play == BLACK
+        a_to_move = black_to_move == a_is_black
+        res_a = player_a.search(st, ka)
+        res_b = player_b.search(st, kb)
+        move = jnp.where(a_to_move, res_a.action, res_b.action)
+        nodes = jnp.where(a_to_move, res_a.tree.size, res_b.tree.size)
+        return engine.play(st, move), key, nodes, nmoves + 1
+
+    st0 = engine.init_state()
+    st, _, nodes, nmoves = jax.lax.while_loop(
+        cond, body, (st0, rng, jnp.int32(1), jnp.int32(0)))
+    return GameRecord(winner=engine.result(st), moves=nmoves,
+                      tree_nodes=nodes)
+
+
+class MatchResult(NamedTuple):
+    a_wins: int
+    b_wins: int
+    draws: int
+    rate: stats.WinRate          # A's win rate with 95% CI
+    mean_moves: float
+    mean_tree_nodes: float
+
+
+def match(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
+          games: int, seed: int = 0, max_moves: Optional[int] = None,
+          batch: int = 0, **mcts_kw) -> MatchResult:
+    """Play ``games`` games with alternating colours; batched via vmap."""
+    player_a = MCTS(engine, cfg_a, **mcts_kw)
+    player_b = MCTS(engine, cfg_b, **mcts_kw)
+    batch = batch or games
+
+    @jax.jit
+    def run_batch(keys, a_black):
+        return jax.vmap(lambda k, ab: play_game(
+            engine, player_a, player_b, k, ab, max_moves))(keys, a_black)
+
+    key = jax.random.PRNGKey(seed)
+    winners, lengths, nodes, colors = [], [], [], []
+    done = 0
+    while done < games:
+        n = min(batch, games - done)
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, n)
+        a_black = (jnp.arange(done, done + n) % 2) == 0   # alternate colours
+        rec = run_batch(keys, a_black)
+        winners.append(jax.device_get(rec.winner))
+        lengths.append(jax.device_get(rec.moves))
+        nodes.append(jax.device_get(rec.tree_nodes))
+        colors.append(jax.device_get(a_black))
+        done += n
+
+    import numpy as np
+    w = np.concatenate(winners)
+    c = np.concatenate(colors)
+    a_sign = np.where(c, 1, -1)
+    a_res = w * a_sign                     # +1 = A won
+    a_wins = int((a_res > 0).sum())
+    b_wins = int((a_res < 0).sum())
+    draws = int((a_res == 0).sum())
+    return MatchResult(
+        a_wins=a_wins, b_wins=b_wins, draws=draws,
+        rate=stats.win_rate(a_wins, b_wins, draws),
+        mean_moves=float(np.concatenate(lengths).mean()),
+        mean_tree_nodes=float(np.concatenate(nodes).mean()),
+    )
+
+
+def effective_speedup_point(engine: GoEngine, base_cfg: MCTSConfig,
+                            games: int, seed: int = 0,
+                            **mcts_kw) -> MatchResult:
+    """One data point of Figs. 4/5/11: 2n lanes vs n lanes."""
+    return match(engine, double_resources(base_cfg), base_cfg, games,
+                 seed=seed, **mcts_kw)

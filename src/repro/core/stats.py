@@ -1,0 +1,43 @@
+"""Match statistics — the paper's Heinz-2001 confidence machinery.
+
+The paper: "a statistical method based on [Heinz 2001] is used to calculate
+95%-level confidence lower and upper bounds on the real winning rate", with
+two draws counted as one loss plus one win (i.e. a draw scores 1/2).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+
+class WinRate(NamedTuple):
+    games: int
+    score: float        # wins + draws/2
+    rate: float         # score / games
+    lo: float           # 95% CI lower bound
+    hi: float           # 95% CI upper bound
+
+    def __str__(self) -> str:
+        return (f"{self.rate * 100:5.1f}% [{self.lo * 100:5.1f}, "
+                f"{self.hi * 100:5.1f}] over {self.games} games")
+
+
+Z95 = 1.96
+Z90 = 1.645
+
+
+def win_rate(wins: int, losses: int, draws: int = 0, z: float = Z95) -> WinRate:
+    """Paper's estimator: w = x/n with the normal-approximation interval
+    ``w ± z * sqrt(w(1-w)/n)``; draws count as half a win."""
+    n = wins + losses + draws
+    if n == 0:
+        return WinRate(0, 0.0, 0.5, 0.0, 1.0)
+    w = (wins + 0.5 * draws) / n
+    half = z * math.sqrt(max(w * (1.0 - w), 0.0) / n)
+    return WinRate(n, wins + 0.5 * draws, w,
+                   max(0.0, w - half), min(1.0, w + half))
+
+
+def games_for_margin(margin: float, p: float = 0.5, z: float = Z95) -> int:
+    """How many games to shrink the CI half-width below ``margin``."""
+    return int(math.ceil(z * z * p * (1 - p) / (margin * margin)))

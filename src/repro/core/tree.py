@@ -1,0 +1,127 @@
+"""Structure-of-arrays MCTS tree arena.
+
+The Xeon Phi study's FUEGO shares one pointer-linked tree between up to 240
+threads.  The TPU-native analogue is a fixed-capacity structure-of-arrays
+arena: node statistics live in flat arrays, edges in a ``children[node,
+action]`` table, and every "thread" (lane) operation becomes a vectorised
+gather/scatter.  Lost-update races of the lock-free original become exact
+deterministic ``scatter-add`` backups (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.go.board import GoEngine, GoState
+
+UNVISITED = -1  # children-table sentinel: edge not yet materialised
+
+
+class Tree(NamedTuple):
+    """One search tree over a ``max_nodes`` arena (vmap for batches)."""
+    visit: jax.Array      # f32[N]    real visit counts
+    value: jax.Array      # f32[N]    black-perspective outcome sums
+    vloss: jax.Array      # f32[N]    in-flight virtual-loss counts
+    prior: jax.Array      # f32[N,A]  per-action priors (uniform or policy)
+    children: jax.Array   # i32[N,A]  node index per edge, UNVISITED if none
+    parent: jax.Array     # i32[N]
+    action: jax.Array     # i32[N]    action taken from parent into this node
+    legal: jax.Array      # bool[N,A] legal action mask at each node
+    expanded: jax.Array   # bool[N]   node may be descended through
+    terminal: jax.Array   # bool[N]
+    states: GoState       # node game states, batched over N
+    size: jax.Array       # i32 scalar: next free slot
+
+
+def _tile_state(state: GoState, n: int) -> GoState:
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n,) + jnp.shape(x)), state)
+
+
+def init_tree(engine: GoEngine, root: GoState, max_nodes: int,
+              root_prior: jax.Array | None = None) -> Tree:
+    """Arena with the root installed at slot 0."""
+    n, a = max_nodes, engine.num_actions
+    legal0 = engine.legal_moves(root)
+    if root_prior is None:
+        root_prior = uniform_prior(legal0)
+    states = _tile_state(root, n)
+    return Tree(
+        visit=jnp.zeros((n,), jnp.float32).at[0].set(1.0),
+        value=jnp.zeros((n,), jnp.float32),
+        vloss=jnp.zeros((n,), jnp.float32),
+        prior=jnp.zeros((n, a), jnp.float32).at[0].set(root_prior),
+        children=jnp.full((n, a), UNVISITED, jnp.int32),
+        parent=jnp.full((n,), UNVISITED, jnp.int32),
+        action=jnp.full((n,), UNVISITED, jnp.int32),
+        legal=jnp.zeros((n, a), jnp.bool_).at[0].set(legal0),
+        expanded=jnp.zeros((n,), jnp.bool_).at[0].set(~root.done),
+        terminal=jnp.zeros((n,), jnp.bool_).at[0].set(root.done),
+        states=states,
+        size=jnp.int32(1),
+    )
+
+
+def uniform_prior(legal: jax.Array) -> jax.Array:
+    m = legal.astype(jnp.float32)
+    return m / jnp.maximum(m.sum(-1, keepdims=True), 1.0)
+
+
+def node_state(tree: Tree, idx) -> GoState:
+    return jax.tree.map(lambda x: x[idx], tree.states)
+
+
+def write_state(states: GoState, idx, st: GoState) -> GoState:
+    return jax.tree.map(lambda buf, v: buf.at[idx].set(v), states, st)
+
+
+def allocate(engine: GoEngine, tree: Tree, parent, action,
+             prior_fn=None) -> tuple[Tree, jax.Array]:
+    """Materialise the child of ``(parent, action)``.
+
+    Returns the updated tree and the new node index.  If the arena is full,
+    no node is created and ``parent`` is returned (the lane then plays out
+    from the parent — mirrors FUEGO refusing to grow past its memory bound).
+    """
+    full = tree.size >= tree.visit.shape[0]
+    idx = jnp.where(full, parent, tree.size).astype(jnp.int32)
+
+    parent_state = node_state(tree, parent)
+    child_state = engine.play(parent_state, action)
+    legal = engine.legal_moves(child_state)
+    prior = prior_fn(child_state, legal) if prior_fn else uniform_prior(legal)
+
+    def do_alloc(t: Tree) -> Tree:
+        return t._replace(
+            children=t.children.at[parent, action].set(idx),
+            parent=t.parent.at[idx].set(parent),
+            action=t.action.at[idx].set(action),
+            legal=t.legal.at[idx].set(legal),
+            prior=t.prior.at[idx].set(prior),
+            expanded=t.expanded.at[idx].set(~child_state.done),
+            terminal=t.terminal.at[idx].set(child_state.done),
+            states=write_state(t.states, idx, child_state),
+            size=t.size + 1,
+        )
+
+    tree = jax.lax.cond(full, lambda t: t, do_alloc, tree)
+    return tree, idx
+
+
+def root_action_visits(tree: Tree) -> jax.Array:
+    """Visit count per root action (0 where no child)."""
+    kids = tree.children[0]
+    v = jnp.where(kids == UNVISITED, 0.0,
+                  tree.visit[jnp.maximum(kids, 0)])
+    return v
+
+
+def root_action_values(tree: Tree) -> jax.Array:
+    """Black-perspective mean value per root action."""
+    kids = tree.children[0]
+    ok = kids != UNVISITED
+    idx = jnp.maximum(kids, 0)
+    return jnp.where(ok, tree.value[idx] / jnp.maximum(tree.visit[idx], 1.0),
+                     0.0)

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (SyntheticLM, MemmapTokens, make_batch_fn,
+                                 Prefetcher)
+
+__all__ = ["SyntheticLM", "MemmapTokens", "make_batch_fn", "Prefetcher"]

@@ -1,0 +1,128 @@
+"""Deterministic, resumable, sharded data pipeline.
+
+Every batch is a pure function of ``(seed, step)`` — resume after preemption
+needs no iterator state, only the step counter from the checkpoint (the
+fault-tolerance contract runtime/ relies on).  Two sources:
+
+* ``SyntheticLM`` — seeded random token streams (plus modality stubs for the
+  audio/VLM archs), used by tests, benchmarks and the end-to-end examples.
+* ``MemmapTokens`` — a flat binary token file sampled by deterministic
+  random offsets; the production path for real corpora.
+
+``Prefetcher`` overlaps host batch synthesis with device compute (the
+host-side half of compute/comm overlap).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+class SyntheticLM:
+    """Deterministic synthetic batches for any model family."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int, global_batch: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.seq = seq_len
+        self.batch = global_batch
+        self.seed = seed
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        cfg, b, s = self.cfg, self.batch, self.seq
+        if cfg.family == "audio":
+            return {
+                "frontend": rng.standard_normal(
+                    (b, s, 1024), dtype=np.float32),
+                "labels": rng.integers(0, cfg.vocab_size, (b, s),
+                                       dtype=np.int32),
+                "mask": rng.random((b, s)) < 0.3,
+            }
+        text = s - cfg.frontend_tokens
+        toks = rng.integers(0, cfg.vocab_size, (b, text + 1), dtype=np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.frontend_tokens:
+            out["frontend"] = rng.standard_normal(
+                (b, cfg.frontend_tokens, 1024), dtype=np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class MemmapTokens:
+    """Flat binary int32 token file; batches are seeded random windows."""
+
+    def __init__(self, path: str, seq_len: int, global_batch: int,
+                 seed: int = 0):
+        self.tokens = np.memmap(path, dtype=np.int32, mode="r")
+        self.seq = seq_len
+        self.batch = global_batch
+        self.seed = seed
+        if len(self.tokens) < seq_len + 1:
+            raise ValueError("token file shorter than one sequence")
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step]))
+        hi = len(self.tokens) - self.seq - 1
+        starts = rng.integers(0, hi, self.batch)
+        rows = np.stack([np.asarray(self.tokens[s: s + self.seq + 1])
+                         for s in starts])
+        return {"tokens": rows[:, :-1].astype(np.int32),
+                "labels": rows[:, 1:].astype(np.int32)}
+
+
+def make_batch_fn(source) -> Callable[[int], Dict[str, np.ndarray]]:
+    return source.batch_at
+
+
+class Prefetcher:
+    """Host-thread prefetch: synthesise batch t+1 while t computes."""
+
+    def __init__(self, batch_fn: Callable[[int], Dict[str, np.ndarray]],
+                 start_step: int = 0, depth: int = 2,
+                 put_fn: Optional[Callable] = None):
+        self.batch_fn = batch_fn
+        self.put_fn = put_fn or (lambda x: x)
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self.stop = threading.Event()
+        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread.start()
+
+    def _worker(self):
+        step = self.step
+        while not self.stop.is_set():
+            batch = self.put_fn(self.batch_fn(step))
+            while not self.stop.is_set():
+                try:
+                    self.q.put((step, batch), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def __next__(self):
+        step, batch = self.q.get()
+        return step, batch
+
+    def close(self):
+        self.stop.set()
+        try:
+            while True:
+                self.q.get_nowait()
+        except queue.Empty:
+            pass
+        self.thread.join(timeout=2)

@@ -1,0 +1,3 @@
+from repro.go.board import GoEngine, GoState, EMPTY, BLACK, WHITE
+
+__all__ = ["GoEngine", "GoState", "EMPTY", "BLACK", "WHITE"]

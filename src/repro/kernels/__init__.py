@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Three kernels, each a ``kernel.py`` (``pl.pallas_call`` + explicit BlockSpec
+VMEM tiling), ``ops.py`` (jitted dispatch wrapper: Pallas on TPU, oracle math
+on other backends), and ``ref.py`` (pure-jnp oracle):
+
+* ``fma_stream``  — the paper's own micro-benchmark loop
+  ``c[j] = a[j]*b[j] + c[j]`` (Figs. 6-8), tiled for VMEM streaming.
+* ``uct_select``  — the UCT/PUCT edge-scoring inner loop of parallel MCTS
+  under virtual loss (the per-node hot path of selection).
+* ``flash_attention`` — blocked online-softmax attention (causal, sliding
+  window, logit softcap, GQA) for the long-context serving shapes.
+"""

@@ -1,0 +1,122 @@
+"""Pallas TPU flash attention (forward): online softmax over KV blocks.
+
+Hardware adaptation (DESIGN.md §2): blocked so the MXU sees aligned
+``(BQ, D) x (D, BK)`` matmuls while the working set (one Q tile, one KV tile,
+f32 accumulators) stays in VMEM: with BQ = BK = 128 and D = 128 that is
+~260 KiB per step — comfortably double-bufferable in the ~16 MiB of a v5e
+core.  Supports causal masking, sliding window, Gemma-2 logit softcap and
+GQA (KV heads indexed via the BlockSpec index map — no KV replication in
+HBM).
+
+Grid ``(B, Hq, Sq/BQ, Sk/BK)``: the minor-most KV dimension iterates
+sequentially on TPU, carrying the running max / denominator / accumulator in
+VMEM scratch (the standard online-softmax recurrence).  Fully-masked KV
+blocks (beyond the causal frontier or outside the window) still issue on this
+simple grid; the cost model in EXPERIMENTS.md §Perf accounts for the ~2x
+causal saving a skip-list grid would add on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, softcap: float,
+                  kv_offset: int, bq: int, bk: int, kv_blocks: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + kv_offset
+    kpos = kj * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # (bq, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows: keep exp argument finite
+    p = jnp.exp(s - jnp.where(m_new <= NEG_INF / 2, 0.0, m_new))
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(
+        jnp.where(m_prev <= NEG_INF / 2, NEG_INF, m_prev - m_new))
+    alpha = jnp.where(m_new <= NEG_INF / 2, 0.0, alpha)
+    l_new = alpha * l_prev + p.sum(axis=1, keepdims=True)
+    acc = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(kj == kv_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, scale: float | None = None,
+                           kv_offset: int = 0, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK, interpret: bool = False):
+    """q [B, Hq, Sq, D]; k, v [B, Hkv, Sk, D] (dims divisible by bq/bk)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    scale = scale if scale is not None else d ** -0.5
+    kv_blocks = sk // bk
+
+    q_spec = pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0))
+    kv_spec = pl.BlockSpec((1, 1, bk, d),
+                           lambda b_, h, i, j: (b_, h // g, j, 0))
+    o_spec = pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0))
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, kv_offset=kv_offset, bq=bq, bk=bk,
+        kv_blocks=kv_blocks)
+
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        grid=(b, hq, sq // bq, kv_blocks),
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

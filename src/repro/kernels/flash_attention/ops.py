@@ -1,0 +1,56 @@
+"""Dispatch wrapper for flash attention.
+
+TPU -> Pallas kernel; other backends -> the memory-efficient chunked XLA
+implementation in ``repro.models.attention`` (same math, scan over query
+blocks) so large shapes stay lowerable in the CPU dry-run.  ``interpret=True``
+forces the Pallas path for validation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_seq(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width), pad
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "scale", "kv_offset", "bq", "bk",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    kv_offset: int = 0, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q [B, Hq, Sq, D]; k, v [B, Hkv, Sk, D] -> [B, Hq, Sq, D]."""
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale,
+                             kv_offset=kv_offset)
+    sq, sk = q.shape[2], k.shape[2]
+    bq_eff = min(bq, max(8, sq))
+    bk_eff = min(bk, max(8, sk))
+    qp, pq = _pad_seq(q, bq_eff, 2)
+    kp, pk = _pad_seq(k, bk_eff, 2)
+    vp, _ = _pad_seq(v, bk_eff, 2)
+    if pk:
+        # padded KV columns must never win the max: rely on causal/window
+        # masks only if they cover them; otherwise mask via kv_offset trick
+        # (padded kpos > all qpos when causal). For non-causal, forbid pad.
+        assert causal, "KV padding requires causal masking"
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, softcap=softcap,
+        scale=scale, kv_offset=kv_offset, bq=bq_eff, bk=bk_eff,
+        interpret=interpret)
+    return out[:, :, :sq]

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for attention (causal / sliding-window / softcap / GQA).
+
+Materialises the full [Sq, Sk] score matrix — the ground truth the blocked
+kernel must match on every swept shape/dtype.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, scale: float | None = None,
+                  kv_offset: int = 0):
+    """q [B, Hq, Sq, D]; k, v [B, Hkv, Sk, D]; Hq % Hkv == 0.
+
+    ``kv_offset``: absolute position of q[0] relative to k[0] (decode: the
+    query sits at the end of the cache, offset = Sk - Sq).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    kr = jnp.repeat(k, g, axis=1)
+    vr = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None] + kv_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    denom = p.sum(axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, p / jnp.maximum(denom, 1e-30), 0.0)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.fma_stream.ops import fma_stream

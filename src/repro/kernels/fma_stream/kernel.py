@@ -1,0 +1,67 @@
+"""Pallas kernel for the Xeon-Phi FMA micro-benchmark, TPU-native.
+
+Hardware adaptation (DESIGN.md §2): the paper stresses the Phi's 512-bit VPU
+with a scalar loop the compiler vectorises; on TPU the same stream maps onto
+the VPU (8x128 vector registers) with explicit HBM->VMEM tiling.  One grid
+step owns a ``(8, block)`` VMEM tile of each operand; ``repeats`` re-uses the
+tile in registers/VMEM, dialling arithmetic intensity from 1 FMA/4 moved
+words (bandwidth-bound, Fig. 8) up to compute-bound (Figs. 6-7) — the same
+two regimes the paper sweeps.
+
+f64 note: TPUs have no 64-bit VPU lanes, so the paper's double-precision
+variant is represented by f32 (VPU-native) and int32; the f64 oracle path
+still runs on CPU for completeness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# 8 sublanes x 1024 lanes x 4 B = 32 KiB per operand tile; 4 tiles resident
+# (a, b, c, out) = 128 KiB of VMEM — far below the ~16 MiB budget, letting
+# the pipeline double-buffer aggressively.
+SUBLANES = 8
+DEFAULT_BLOCK = 1024
+
+
+def _fma_kernel(a_ref, b_ref, c_ref, o_ref, *, repeats: int):
+    a = a_ref[...]
+    b = b_ref[...]
+    acc = c_ref[...]
+
+    def body(_, acc):
+        return a * b + acc
+
+    acc = jax.lax.fori_loop(0, repeats, body, acc)
+    o_ref[...] = acc
+
+
+def fma_stream_pallas(a: jax.Array, b: jax.Array, c: jax.Array,
+                      repeats: int = 1, block: int = DEFAULT_BLOCK,
+                      interpret: bool = False) -> jax.Array:
+    """c <- a*b + c applied ``repeats`` times; 1-D inputs of equal length.
+
+    The wrapper reshapes to ``(rows, SUBLANES, block)`` so each grid step
+    streams one VMEM tile (inputs must divide; ``ops.py`` pads).
+    """
+    (n,) = a.shape
+    tile = SUBLANES * block
+    assert n % tile == 0, f"padded length {n} not a multiple of {tile}"
+    rows = n // tile
+    shp = (rows, SUBLANES, block)
+    a3, b3, c3 = (x.reshape(shp) for x in (a, b, c))
+
+    spec = pl.BlockSpec((1, SUBLANES, block), lambda i: (i, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_fma_kernel, repeats=repeats),
+        out_shape=jax.ShapeDtypeStruct(shp, a.dtype),
+        grid=(rows,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        interpret=interpret,
+    )(a3, b3, c3)
+    return out.reshape(n)

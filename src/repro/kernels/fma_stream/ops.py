@@ -1,0 +1,40 @@
+"""Jitted dispatch wrapper for ``fma_stream``.
+
+Pallas on TPU; on CPU the oracle math (same numerics) so the op is usable
+everywhere.  ``interpret=True`` forces the Pallas path in interpret mode for
+kernel validation on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fma_stream.kernel import (DEFAULT_BLOCK, SUBLANES,
+                                             fma_stream_pallas)
+from repro.kernels.fma_stream.ref import fma_stream_ref
+
+
+def _pad_to(x: jax.Array, mult: int) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("repeats", "block", "interpret"))
+def fma_stream(a, b, c, repeats: int = 1, block: int = DEFAULT_BLOCK,
+               interpret: bool = False):
+    """The paper's loop ``repeats x (c = a*b + c)`` on 1-D arrays."""
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        return fma_stream_ref(a, b, c, repeats)
+    n = a.shape[0]
+    tile = SUBLANES * block
+    a2, b2, c2 = (_pad_to(x, tile) for x in (a, b, c))
+    out = fma_stream_pallas(a2, b2, c2, repeats=repeats, block=block,
+                            interpret=interpret)
+    return out[:n]

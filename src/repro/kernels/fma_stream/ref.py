@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the paper's micro-benchmark loop.
+
+Figs. 6-8 of the paper time ``for many times: c[j] = a[j]*b[j] + c[j]`` —
+three streamed reads + one write and one FMA per element.  ``repeats`` is the
+paper's "many times" (arithmetic-intensity dial: high repeats = compute-bound
+Fig. 6/7 regime, repeats=1 = bandwidth-bound Fig. 8 regime).
+"""
+import jax.numpy as jnp
+
+
+def fma_stream_ref(a, b, c, repeats: int = 1):
+    for _ in range(repeats):
+        c = a * b + c
+    return c

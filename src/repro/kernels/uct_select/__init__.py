@@ -1,0 +1,1 @@
+from repro.kernels.uct_select.ops import uct_scores

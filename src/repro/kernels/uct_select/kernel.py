@@ -1,0 +1,73 @@
+"""Pallas kernel: batched UCT/PUCT edge scoring under virtual loss.
+
+Hardware adaptation (DESIGN.md §2): FUEGO's selection walks pointers and does
+scalar math per child — exactly what the paper found the Phi's in-order cores
+to be slow at.  On TPU the per-node child statistics are already a dense
+``[batch_of_nodes, actions]`` tile, so one VPU pass computes every child's
+exploitation + exploration score; the transcendentals (log/sqrt) vectorise
+over the 8x128 VREG lanes.
+
+Tiling: one grid step owns a ``(ROWS, A_pad)`` tile of each [B, A] statistic
+(A padded to a lane multiple of 128 by ``ops.py``).  Per-row scalars
+(parent_n, player) ride along as ``(ROWS, 1)`` tiles.  For the 9x9 Go action
+space (A=82 -> 128) and ROWS=8 that is 6 tiles x 4 KiB — tiny, letting many
+node-batches pipeline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.uct_select.ref import BIG, FPU
+
+ROWS = 8
+LANE = 128
+
+
+def _uct_kernel(visit_ref, value_ref, vloss_ref, prior_ref, legal_ref,
+                hasc_ref, parent_ref, player_ref, out_ref, *,
+                c_uct: float, vl_weight: float, use_puct: bool):
+    n = visit_ref[...]
+    v = value_ref[...]
+    vl = vloss_ref[...]
+    prior = prior_ref[...]
+    legal = legal_ref[...]
+    has_child = hasc_ref[...]
+    parent_n = parent_ref[...]          # (ROWS, 1)
+    player = player_ref[...]            # (ROWS, 1)
+
+    n_eff = jnp.maximum(n + vl, 1.0)
+    q = (player * v - vl * vl_weight) / n_eff
+    if use_puct:
+        root_term = jnp.sqrt(parent_n)
+        u = c_uct * prior * root_term / (1.0 + n + vl)
+        score = jnp.where(has_child != 0, q + u, c_uct * prior * root_term)
+    else:
+        pn = jnp.maximum(parent_n, 2.0)
+        u = c_uct * jnp.sqrt(jnp.log(pn) / n_eff)
+        score = jnp.where(has_child != 0, q + u, FPU + prior)
+    out_ref[...] = jnp.where(legal != 0, score, -BIG)
+
+
+def uct_scores_pallas(child_visit, child_value, child_vloss, prior, legal,
+                      has_child, parent_n, player, *, c_uct: float,
+                      vl_weight: float, use_puct: bool,
+                      interpret: bool = False):
+    """Inputs [B, A_pad] (f32; masks as f32 0/1), parent_n/player [B, 1]."""
+    b, a = child_visit.shape
+    assert b % ROWS == 0 and a % LANE == 0, (b, a)
+    tile = pl.BlockSpec((ROWS, a), lambda i: (i, 0))
+    col = pl.BlockSpec((ROWS, 1), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_uct_kernel, c_uct=c_uct, vl_weight=vl_weight,
+                          use_puct=use_puct),
+        out_shape=jax.ShapeDtypeStruct((b, a), jnp.float32),
+        grid=(b // ROWS,),
+        in_specs=[tile, tile, tile, tile, tile, tile, col, col],
+        out_specs=tile,
+        interpret=interpret,
+    )(child_visit, child_value, child_vloss, prior, legal, has_child,
+      parent_n, player)

@@ -1,0 +1,50 @@
+"""Jitted dispatch wrapper for ``uct_scores``: Pallas on TPU, oracle on CPU.
+
+Pads the action axis to a 128-lane multiple and the batch axis to the row
+tile, calls the kernel, and slices back.  ``repro.core.mcts`` routes its
+edge scoring through here so the kernel and the search share one call site.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.uct_select.kernel import LANE, ROWS, uct_scores_pallas
+from repro.kernels.uct_select.ref import uct_scores_ref
+
+
+def _pad2(x, b_to, a_to):
+    pb = b_to - x.shape[0]
+    pa = a_to - x.shape[1]
+    return jnp.pad(x, ((0, pb), (0, pa)))
+
+
+@functools.partial(jax.jit, static_argnames=("c_uct", "vl_weight",
+                                             "use_puct", "interpret"))
+def uct_scores(child_visit, child_value, child_vloss, prior, legal,
+               has_child, parent_n, player, *, c_uct: float = 0.9,
+               vl_weight: float = 1.0, use_puct: bool = False,
+               interpret: bool = False):
+    """Batched edge scores [B, A]; see ref.py for semantics."""
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    legal = legal.astype(jnp.float32)
+    has_child = has_child.astype(jnp.float32)
+    if not use_pallas:
+        return uct_scores_ref(child_visit, child_value, child_vloss, prior,
+                              legal, has_child, parent_n, player,
+                              c_uct=c_uct, vl_weight=vl_weight,
+                              use_puct=use_puct)
+    b, a = child_visit.shape
+    bp = -(-b // ROWS) * ROWS
+    ap = -(-a // LANE) * LANE
+    args2 = [_pad2(x.astype(jnp.float32), bp, ap)
+             for x in (child_visit, child_value, child_vloss, prior, legal,
+                       has_child)]
+    pn = jnp.pad(parent_n.astype(jnp.float32), (0, bp - b))[:, None]
+    pidx = jnp.pad(player.astype(jnp.float32), (0, bp - b))[:, None]
+    out = uct_scores_pallas(*args2, pn, pidx, c_uct=c_uct,
+                            vl_weight=vl_weight, use_puct=use_puct,
+                            interpret=interpret)
+    return out[:b, :a]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for UCT/PUCT edge scoring under virtual loss.
+
+This is the arithmetic every selection step of every lane performs at every
+tree level — the paper's hottest loop (FUEGO spends its selection time here;
+its low integer/scalar throughput on the Phi is one of the paper's findings).
+
+Semantics (matches ``repro.core.mcts.MCTS._edge_scores`` exactly):
+  q    = (player * value - vloss * vl_weight) / max(n + vloss, 1)
+  uct  : u = c * sqrt(log(max(parent_n, 2)) / max(n + vloss, 1))
+         score = has_child ? q + u : FPU + prior
+  puct : u = c * prior * sqrt(parent_n) / (1 + n + vloss)
+         score = has_child ? q + u : c * prior * sqrt(parent_n)
+  illegal edges score -BIG.
+"""
+import jax.numpy as jnp
+
+BIG = 1e9
+FPU = 10.0
+
+
+def uct_scores_ref(child_visit, child_value, child_vloss, prior, legal,
+                   has_child, parent_n, player, *, c_uct: float,
+                   vl_weight: float, use_puct: bool):
+    """All inputs [B, A] except parent_n, player [B]; returns scores [B, A]."""
+    n_eff = jnp.maximum(child_visit + child_vloss, 1.0)
+    q = (player[:, None] * child_value - child_vloss * vl_weight) / n_eff
+    if use_puct:
+        root_term = jnp.sqrt(parent_n)[:, None]
+        u = c_uct * prior * root_term / (1.0 + child_visit + child_vloss)
+        score = jnp.where(has_child, q + u, c_uct * prior * root_term)
+    else:
+        pn = jnp.maximum(parent_n, 2.0)[:, None]
+        u = c_uct * jnp.sqrt(jnp.log(pn) / n_eff)
+        score = jnp.where(has_child, q + u, FPU + prior)
+    return jnp.where(legal, score, -BIG)

@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (one v5e-256 pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the leading ``pod`` axis
+crosses DCN, so only pure-DP traffic (gradient all-reduce, optionally
+PowerSGD-compressed) or pipeline handoffs ride it.
+
+Functions, not module constants: importing this module must never touch jax
+device state (the dry-run sets the fake-device count before first jax init).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+# hardware constants used across the roofline analysis (TPU v5e class)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+# XLA flags a real pod job would launch with (latency-hiding scheduler
+# overlaps collectives with compute; async collectives enable the overlap)
+TPU_XLA_FLAGS = " ".join([
+    "--xla_tpu_enable_latency_hiding_scheduler=true",
+    "--xla_enable_async_all_gather=true",
+    "--xla_enable_async_collective_permute=true",
+    "--xla_tpu_enable_async_collective_fusion=true",
+])
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(data: int, model: int, pods: int = 1):
+    if pods > 1:
+        return jax.make_mesh((pods, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def ensure_fake_devices(n: int = 512) -> None:
+    """For dry-run entrypoints only — must run before any jax device use."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()

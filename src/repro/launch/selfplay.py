@@ -1,0 +1,54 @@
+"""Self-play launcher: the paper's experiment as a CLI.
+
+Runs the effective-speedup match (2n lanes vs n lanes) for one point of
+Figs. 4/5/11, or a full sweep.
+
+    PYTHONPATH=src python -m repro.launch.selfplay --board 5 --lanes 2 \
+        --sims 32 --games 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.config import MCTSConfig
+from repro.core.selfplay import effective_speedup_point
+from repro.go import GoEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--board", type=int, default=9)
+    ap.add_argument("--komi", type=float, default=6.0)
+    ap.add_argument("--lanes", type=int, default=4,
+                    help="base thread count n (plays 2n vs n)")
+    ap.add_argument("--sims", type=int, default=64,
+                    help="playouts/move for the base player")
+    ap.add_argument("--games", type=int, default=16)
+    ap.add_argument("--max-nodes", type=int, default=2048)
+    ap.add_argument("--parallelism", default="tree",
+                    choices=("tree", "root", "leaf"))
+    ap.add_argument("--affinity", default="compact")
+    ap.add_argument("--virtual-loss", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    eng = GoEngine(args.board, args.komi)
+    cfg = MCTSConfig(board_size=args.board, komi=args.komi,
+                     lanes=args.lanes, sims_per_move=args.sims,
+                     max_nodes=args.max_nodes, parallelism=args.parallelism,
+                     affinity=args.affinity, virtual_loss=args.virtual_loss)
+    t0 = time.time()
+    res = effective_speedup_point(eng, cfg, games=args.games,
+                                  seed=args.seed)
+    dt = time.time() - t0
+    print(f"board {args.board}x{args.board}  {2 * args.lanes} vs "
+          f"{args.lanes} lanes  {args.sims} sims/move")
+    print(f"  2x player win rate: {res.rate}")
+    print(f"  games {res.a_wins}W/{res.b_wins}L/{res.draws}D  "
+          f"mean length {res.mean_moves:.1f}  "
+          f"mean tree {res.mean_tree_nodes:.0f} nodes  {dt:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Model zoo: one ``TransformerLM`` covering dense / MoE / SSM / hybrid /
+audio-encoder / VLM families, plus ``input_specs`` — the ShapeDtypeStruct
+stand-ins (weak-type-correct, shardable, zero allocation) the multi-pod
+dry-run lowers against."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import sharding
+from repro.models.transformer import LMCache, TransformerLM
+
+
+def build_model(cfg: ModelConfig, mesh=None) -> TransformerLM:
+    return TransformerLM(cfg, mesh=mesh)
+
+
+def _sds(shape, dtype, logical, mesh):
+    sh = sharding.named_sharding(logical, shape, mesh) if mesh else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None,
+                ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch stand-ins for one global batch."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_ax = ("batch", None)
+    specs: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        specs["frontend"] = _sds((b, s, 1024), jnp.bfloat16,
+                                 ("batch", None, None), mesh)
+        specs["labels"] = _sds((b, s), jnp.int32, tok_ax, mesh)
+        specs["mask"] = _sds((b, s), jnp.bool_, tok_ax, mesh)
+        return specs
+    text = s - cfg.frontend_tokens
+    specs["tokens"] = _sds((b, text), jnp.int32, tok_ax, mesh)
+    specs["labels"] = _sds((b, text), jnp.int32, tok_ax, mesh)
+    if cfg.frontend_tokens:
+        specs["frontend"] = _sds((b, cfg.frontend_tokens, 1024), jnp.bfloat16,
+                                 ("batch", None, None), mesh)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh=None
+                ) -> LMCache:
+    """Abstract decode-cache stand-ins."""
+    model = TransformerLM(cfg)
+    shapes = model.cache_shapes(batch, max_len)
+    logical = model.cache_logical()
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(shp, lg, dtype):
+        if shp is None:
+            return None
+        return _sds(shp, dtype, lg, mesh)
+
+    return LMCache(
+        k=one(shapes.k, logical.k, dt),
+        v=one(shapes.v, logical.v, dt),
+        conv=one(shapes.conv, logical.conv, dt),
+        ssm=one(shapes.ssm, logical.ssm, jnp.float32),
+        length=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh=None):
+    """(cache, tokens) stand-ins for one ``serve_step``: a single new token
+    against a KV/SSM cache of ``shape.seq_len``."""
+    b = shape.global_batch
+    cache = cache_specs(cfg, b, shape.seq_len, mesh)
+    tokens = _sds((b, 1), jnp.int32, ("batch", None), mesh)
+    return cache, tokens
+
+
+def param_specs(cfg: ModelConfig, mesh=None):
+    """ShapeDtypeStructs (with shardings) for the parameter pytree."""
+    model = TransformerLM(cfg)
+    shapes = model.param_shapes()
+    logical = model.param_logical()
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(
+        lambda shp, lg: _sds(shp, dt, lg, mesh), shapes, logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(v, int) for v in x))
+
+
+def param_shardings(cfg: ModelConfig, mesh):
+    model = TransformerLM(cfg)
+    return jax.tree.map(
+        lambda shp, lg: sharding.named_sharding(lg, shp, mesh),
+        model.param_shapes(), model.param_logical(),
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(v, int) for v in x))
+
+
+__all__ = ["build_model", "TransformerLM", "LMCache", "batch_specs",
+           "cache_specs", "decode_specs", "param_specs", "param_shardings"]

@@ -1,0 +1,158 @@
+"""Shared neural layers: norms, RoPE, embeddings, gated MLPs, param plumbing.
+
+Parameters are declared through ``ParamDef`` descriptors so a single source
+of truth yields (a) the initialised pytree, (b) the logical-axis tree that
+``models.sharding`` turns into ``in_shardings`` for pjit, and (c) analytic
+param counts.  Params are stored bf16 (configurable); norms and softmaxes
+compute in f32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import sharding
+
+
+class ParamDef(NamedTuple):
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | embed
+    scale: float = 1.0          # fan-in override multiplier
+
+
+ParamTree = Dict  # nested {name: ParamDef | ParamTree}
+
+
+def init_params(defs: ParamTree, key: jax.Array, dtype=jnp.bfloat16):
+    """Initialise a pytree of ParamDefs (fan-in scaled normal)."""
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+
+    def one(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "embed":
+            return (jax.random.normal(k, d.shape, jnp.float32)
+                    * d.scale).astype(dtype)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32)
+                * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(d, k)
+                                        for d, k in zip(leaves, keys)])
+
+
+def logical_tree(defs: ParamTree):
+    """Extract the logical-axes pytree (same structure as the params)."""
+    return jax.tree.map(lambda d: d.logical, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def shape_tree(defs: ParamTree):
+    return jax.tree.map(lambda d: d.shape, defs,
+                        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def count_params(defs: ParamTree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return sum(math.prod(d.shape) for d in leaves)
+
+
+def stack_layer_defs(defs: ParamTree, num_layers: int) -> ParamTree:
+    """Prepend a scanned 'layers' axis to every descriptor."""
+    return jax.tree.map(
+        lambda d: ParamDef((num_layers,) + d.shape, ("layers",) + d.logical,
+                           d.init, d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm in f32; ``plus_one`` = gemma-style (1 + w) scaling."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    y = y * (1.0 + w) if plus_one else y * w
+    return y.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding; x [..., S, H, D], positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq   # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]                           # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, wi: jax.Array, wg: Optional[jax.Array],
+              wo: jax.Array, act: str = "swiglu") -> jax.Array:
+    """SwiGLU / GeGLU: (act(x@wg) * (x@wi)) @ wo; plain gelu if wg is None."""
+    h = x @ wi
+    if wg is None:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        g = x @ wg
+        g = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) \
+            if act == "geglu" \
+            else jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+        h = h * g
+    h = sharding.constrain(h, "batch", None, "ffn")
+    return h @ wo
+
+
+def embed_lookup(embed: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(embed, tokens, axis=0)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    xf = x.astype(jnp.float32)
+    return (cap * jnp.tanh(xf / cap)).astype(x.dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  z_loss: float = 0.0, ignore: int = -1):
+    """Token CE with optional z-loss; logits [..., V] f32, labels int.
+
+    With ``optflags.ce_onehot`` the gold logit is a fused one-hot
+    contraction (sharding-friendly over a vocab-sharded axis: partial sums
+    + a scalar-ish psum); the baseline take_along_axis gather forces GSPMD
+    to replicate the full logits tensor.
+    """
+    from repro.models.optflags import flags
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    safe = jnp.maximum(labels, 0)
+    if flags().ce_onehot:
+        iota = jax.lax.broadcasted_iota(
+            jnp.int32, logits.shape, logits.ndim - 1)
+        gold = jnp.sum(
+            jnp.where(iota == safe[..., None], logits, 0.0), axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss > 0:
+        nll = nll + z_loss * lse ** 2
+    mask = (labels != ignore).astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / total

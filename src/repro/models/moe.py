@@ -1,0 +1,130 @@
+"""Mixture-of-Experts FFN: sort-based capacity routing + shared experts.
+
+TPU-native dispatch (DESIGN.md §5): instead of a GShard one-hot dispatch
+tensor (O(T*E*C) memory — infeasible at 384 experts x 32k tokens) tokens are
+*sorted by expert id*; each expert receives a contiguous ``[capacity, d]``
+tile and all experts batch into one ``[E, C, d] x [E, d, f]`` einsum that the
+MXU executes as E aligned matmuls.  Tokens over capacity are dropped (their
+residual passes through), the standard capacity-factor contract.
+
+Sharding: experts -> ``model`` axis (EP: 384/16 = 24 experts per column for
+kimi-k2), expert weight rows -> ``data`` (FSDP).  XLA inserts the token
+all-to-all at the dispatch/combine boundaries.
+
+Losses: switch-style load-balance aux loss + router z-loss, returned to be
+added to the LM loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import sharding
+from repro.models.layers import ParamDef
+
+
+def moe_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    e, se = cfg.moe.num_experts, cfg.moe.shared_experts
+    defs = {
+        "router": ParamDef((d, e), ("embed", None)),
+        "wi": ParamDef((e, d, f), ("experts", "embed", None)),
+        "wg": ParamDef((e, d, f), ("experts", "embed", None)),
+        "wo": ParamDef((e, f, d), ("experts", None, "embed")),
+    }
+    if se:
+        defs.update({
+            "shared_wi": ParamDef((d, se * f), ("embed", "ffn")),
+            "shared_wg": ParamDef((d, se * f), ("embed", "ffn")),
+            "shared_wo": ParamDef((se * f, d), ("ffn", "embed")),
+        })
+    return defs
+
+
+def moe_ffn(x: jax.Array, params: Dict, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x [T, d] -> (y [T, d], aux_loss scalar).  T = tokens in microbatch."""
+    m = cfg.moe
+    t, d = x.shape
+    e, k = m.num_experts, m.top_k
+    cap = int(max(1, t * k / e * m.capacity_factor))
+
+    # --- routing ---------------------------------------------------------
+    logits = (x.astype(jnp.float32)
+              @ params["router"].astype(jnp.float32))       # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # [T, k]
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # aux losses (switch-transformer style)
+    density = jnp.zeros((e,)).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    mean_prob = probs.mean(axis=0)
+    aux = e * jnp.sum(density * mean_prob)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux_loss = aux + m.router_z_loss * zloss
+
+    # --- sort-based dispatch ----------------------------------------------
+    flat_e = top_i.reshape(-1)                              # [T*k]
+    flat_t = jnp.repeat(jnp.arange(t), k)                   # [T*k]
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)                             # stable
+    se_, st_, sp_ = flat_e[order], flat_t[order], flat_p[order]
+    counts = jnp.zeros((e,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(t * k, dtype=jnp.int32) - offsets[se_]  # rank in expert
+    keep = pos < cap
+    slot = jnp.where(keep, se_ * cap + pos, e * cap)        # overflow slot
+
+    from repro.models.optflags import flags
+    xb = x.astype(jnp.bfloat16)
+    if flags().moe_slot_centric:
+        # O1: index from the slot side.  slot -> token (+1 overflow row
+        # swallows dropped assignments); unfilled slots hit the zero row.
+        tok_of_slot = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(
+            st_.astype(jnp.int32))[: e * cap]
+        w_of_slot = jnp.zeros((e * cap + 1,)).at[slot].set(
+            jnp.where(keep, sp_, 0.0))[: e * cap]
+        xb_pad = jnp.concatenate([xb, jnp.zeros((1, d), xb.dtype)])
+        xe = xb_pad[tok_of_slot].reshape(e, cap, d)
+    else:
+        buf = jnp.zeros((e * cap + 1, d), xb.dtype).at[slot].set(xb[st_])
+        xe = buf[: e * cap].reshape(e, cap, d)
+    xe = sharding.constrain(xe, "experts", None, None)
+
+    # --- expert computation (batched einsum = E aligned MXU matmuls) ------
+    h = jnp.einsum("ecd,edf->ecf", xe, params["wi"])
+    g = jnp.einsum("ecd,edf->ecf", xe, params["wg"])
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    out_e = jnp.einsum("ecf,efd->ecd", act, params["wo"])
+    out_e = sharding.constrain(out_e, "experts", None, None)
+
+    # --- combine -----------------------------------------------------------
+    if flags().moe_slot_centric:
+        # scatter-add straight from expert space: one [T, d] partial sum
+        # reconciled across the expert shards instead of [T*k, d]
+        contrib = out_e.reshape(e * cap, d).astype(jnp.float32) \
+            * w_of_slot[:, None]
+        y = jnp.zeros((t + 1, d), jnp.float32).at[tok_of_slot].add(
+            contrib)[: t]
+        y = sharding.constrain(y, "batch", None)
+    else:
+        flat_out = jnp.concatenate(
+            [out_e.reshape(e * cap, d), jnp.zeros((1, d), out_e.dtype)])
+        tok_out = flat_out[slot]                            # [T*k, d]
+        w = jnp.where(keep, sp_, 0.0).astype(jnp.float32)
+        y = jnp.zeros((t, d), jnp.float32).at[st_].add(
+            tok_out.astype(jnp.float32) * w[:, None])
+
+    # --- shared (always-on) experts ---------------------------------------
+    if m.shared_experts:
+        hs = xb @ params["shared_wi"]
+        gs = xb @ params["shared_wg"]
+        ys = (jax.nn.silu(gs.astype(jnp.float32)).astype(hs.dtype) * hs) \
+            @ params["shared_wo"]
+        y = y + ys.astype(jnp.float32)
+
+    return y.astype(x.dtype), aux_loss

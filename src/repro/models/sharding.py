@@ -1,0 +1,152 @@
+"""Logical-axis sharding rules -> mesh PartitionSpecs.
+
+One source of truth for how every tensor lays out on the production mesh
+(``data``/``model``(+``pod``), see launch/mesh.py):
+
+* ``batch``  -> ("pod", "data")   pure DP across pods (slow DCN crosses pods
+                                  only for gradient all-reduce)
+* ``heads`` / ``ffn`` / ``vocab`` / ``experts`` -> "model"  (TP / EP)
+* ``embed``  -> "data"            FSDP-style row sharding of large weights;
+                                  XLA all-gathers per layer inside the scan
+* ``seq``    -> "model"           sequence sharding (long-context KV caches)
+* anything else -> replicated
+
+Rules are *divisibility-aware*: an axis that does not divide evenly over its
+mesh axes is replicated instead (e.g. glm4's 2 KV heads on a 16-way model
+axis).  ``logical_to_mesh`` is used both for parameter ``in_shardings`` and
+for ``constrain`` (activation sharding constraints inside jit).
+"""
+from __future__ import annotations
+
+import math
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "seq_shard": ("model",),
+    "ssm_inner": ("model",),
+    # never sharded
+    "layers": (), "seq": (), "head_dim": (), "state": (), "capacity": (),
+    "conv": (), "patch": (), None: (),
+}
+
+# ---------------------------------------------------------------------------
+# ambient mesh (set by launchers; None => all constraints are no-ops)
+# ---------------------------------------------------------------------------
+
+_MESH: Optional[Mesh] = None
+_MANUAL: frozenset = frozenset()
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev, _MESH = _MESH, mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+@contextmanager
+def manual_axes(axes):
+    """Trace-time marker: we are inside a shard_map manual over ``axes``.
+
+    Activation constraints are suppressed there (a NamedSharding over the
+    full mesh would illegally mix Manual with Auto axes); GSPMD still
+    propagates the in_specs shardings of params/batch through the body.
+    """
+    global _MANUAL
+    prev, _MANUAL = _MANUAL, _MANUAL | frozenset(axes)
+    try:
+        yield
+    finally:
+        _MANUAL = prev
+
+
+# ---------------------------------------------------------------------------
+# logical axes -> PartitionSpec
+# ---------------------------------------------------------------------------
+
+
+def _mesh_axes_for(logical: Optional[str], mesh: Mesh,
+                   dim_size: int) -> Union[Tuple[str, ...], None]:
+    axes = LOGICAL_RULES.get(logical, ())
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    total = math.prod(mesh.shape[a] for a in axes)
+    if dim_size % total != 0:
+        # try a prefix that divides (e.g. batch over pod only)
+        for cut in range(len(axes) - 1, 0, -1):
+            sub = axes[:cut]
+            if dim_size % math.prod(mesh.shape[a] for a in sub) == 0:
+                return sub
+        return None
+    return axes
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]], shape,
+                    mesh: Optional[Mesh] = None) -> P:
+    """PartitionSpec for a tensor with the given logical axes + shape."""
+    mesh = mesh or _MESH
+    if mesh is None:
+        return P()
+    used: set = set()
+    parts = []
+    for lg, dim in zip(logical_axes, shape):
+        axes = _mesh_axes_for(lg, mesh, dim)
+        if axes and not (set(axes) & used):
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Sharding constraint by logical axes; no-op without an ambient mesh
+    or inside a manual shard_map region."""
+    mesh = _MESH
+    if mesh is None or _MANUAL or x.ndim != len(logical_axes):
+        return x
+    spec = logical_to_spec(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(logical_axes: Sequence[Optional[str]], shape,
+                   mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    mesh = mesh or _MESH
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(logical_axes, shape, mesh))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-axis tuples + shapes -> NamedShardings."""
+    mesh = mesh or _MESH
+    return jax.tree.map(
+        lambda axes, shp: named_sharding(axes, shp, mesh),
+        spec_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )

@@ -1,0 +1,205 @@
+"""Mamba-2 SSD (state-space duality) mixer: chunked scan + O(1) decode.
+
+The SSD algorithm (Dao & Gu 2024) splits the sequence into chunks: within a
+chunk the recurrence is computed as a masked attention-like quadratic form
+(two MXU-friendly ``[Q, N] x [N, Q]`` einsums per head), between chunks a
+single recurrent state ``[H, P, N]`` scans forward.  Because A < 0 and
+dt > 0 all decay factors are exp(negative) <= 1 — numerically safe in f32.
+
+TPU adaptation: chunk length defaults to 128 (MXU tile), the chunk loop is a
+``lax.scan`` (keeps the HLO small for 32k prefill: 256 sequential chunk
+steps, each dense), and the per-chunk working set is O(B*H*Q*Q) — VMEM-scale
+rather than the O(S^2) a naive SSD attention-form would need.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import ParamDef, rms_norm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # [B, convdim, K-1] last inputs of the causal conv
+    ssm: jax.Array    # [B, H, P, N] recurrent state
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    heads = d_in // s.head_dim
+    convdim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, heads, convdim
+
+
+def ssm_param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, heads, convdim = _dims(cfg)
+    return {
+        "in_proj": ParamDef(
+            (d, 2 * d_in + 2 * s.n_groups * s.d_state + heads),
+            ("embed", "ssm_inner")),
+        "conv_w": ParamDef((s.conv_kernel, convdim), ("conv", None)),
+        "conv_b": ParamDef((convdim,), (None,), "zeros"),
+        "a_log": ParamDef((heads,), (None,), "ones"),
+        "dt_bias": ParamDef((heads,), (None,), "zeros"),
+        "d_skip": ParamDef((heads,), (None,), "ones"),
+        "norm_w": ParamDef((d_in,), (None,), "ones"),
+        "out_proj": ParamDef((d_in, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    d_in, heads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * gn], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def _ssd_chunk_scan(x, dt, a, b, c, chunk: int):
+    """Chunked SSD.  x [B,S,H,P]; dt [B,S,H]; a [H]<0; b,c [B,S,G,N]."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    nc = s // chunk
+    rep = h // g
+
+    def resh(t):
+        return t.reshape(bsz, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = (resh(x * dt[..., None]),             # dt-weighted input
+          resh(dt), resh(b), resh(c))
+
+    def body(state, xs_c):
+        xdt, dtc, bc, cc = xs_c                 # [B,Q,H,P], [B,Q,H], [B,Q,G,N]
+        da = dtc * a                            # [B,Q,H] (negative)
+        cum = jnp.cumsum(da, axis=1)            # [B,Q,H]
+        bh = jnp.repeat(bc, rep, axis=2).astype(jnp.float32)   # [B,Q,H,N]
+        ch = jnp.repeat(cc, rep, axis=2).astype(jnp.float32)
+        xdtf = xdt.astype(jnp.float32)
+
+        # intra-chunk (attention-like, lower-triangular)
+        seg = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # [B,Q,Q,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        seg = jnp.where(tri[None, :, :, None], seg, 0.0)
+        scores = jnp.einsum("bihn,bjhn->bijh", ch, bh) * seg
+        y = jnp.einsum("bijh,bjhp->bihp", scores, xdtf)
+
+        # inter-chunk: contribution of the carried state
+        decay_out = jnp.exp(cum)                                 # [B,Q,H]
+        y = y + jnp.einsum("bihn,bhpn->bihp", ch, state) \
+            * decay_out[..., None]
+
+        # state update for the next chunk
+        decay_in = jnp.exp(cum[:, -1:, :] - cum)                 # [B,Q,H]
+        new_state = state * jnp.exp(cum[:, -1, :])[..., None, None] \
+            + jnp.einsum("bjhn,bjhp->bhpn", bh * decay_in[..., None], xdtf)
+        return new_state, y.astype(x.dtype)
+
+    state0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, ys = jax.lax.scan(body, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def mamba_mixer(x: jax.Array, params: Dict, cfg: ModelConfig,
+                return_state: bool = False):
+    """Full Mamba-2 block on [B, S, d_model] (train / prefill)."""
+    s_cfg = cfg.ssm
+    d_in, heads, convdim = _dims(cfg)
+    bsz, s, _ = x.shape
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    gn = s_cfg.n_groups * s_cfg.d_state
+    xi, b, c = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xi.reshape(bsz, s, heads, s_cfg.head_dim)
+    bg = b.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+    cg = c.reshape(bsz, s, s_cfg.n_groups, s_cfg.d_state)
+
+    chunk = min(s_cfg.chunk, s)
+    while s % chunk:          # largest divisor <= configured chunk
+        chunk -= 1
+    y, final_state = _ssd_chunk_scan(xh, dt, a, bg, cg, chunk)
+    y = y + xh * params["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, d_in)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        k = s_cfg.conv_kernel
+        conv_state = jnp.pad(
+            xbc_raw, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):, :] \
+            .swapaxes(1, 2)                                   # [B, C, K-1]
+        return out, SSMState(conv=conv_state, ssm=final_state)
+    return out
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int,
+                   dtype=jnp.bfloat16) -> SSMState:
+    s = cfg.ssm
+    d_in, heads, convdim = _dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, convdim, s.conv_kernel - 1), dtype),
+        ssm=jnp.zeros((batch, heads, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def mamba_decode_step(x: jax.Array, state: SSMState, params: Dict,
+                      cfg: ModelConfig) -> Tuple[jax.Array, SSMState]:
+    """One-token step: x [B, d_model] -> (out [B, d_model], new state)."""
+    s_cfg = cfg.ssm
+    d_in, heads, convdim = _dims(cfg)
+    bsz = x.shape[0]
+
+    zxbcdt = x @ params["in_proj"]
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)
+
+    # rolling causal conv
+    k = s_cfg.conv_kernel
+    window = jnp.concatenate([state.conv, xbc_new[:, :, None]], axis=2)
+    conv_out = jnp.einsum("bck,kc->bc", window,
+                          params["conv_w"].astype(window.dtype))
+    xbc = jax.nn.silu(
+        (conv_out + params["conv_b"]).astype(jnp.float32)).astype(x.dtype)
+    new_conv = window[:, :, 1:]
+
+    gn = s_cfg.n_groups * s_cfg.d_state
+    xi, b, c = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    xh = xi.reshape(bsz, heads, s_cfg.head_dim).astype(jnp.float32)
+    bg = jnp.repeat(b.reshape(bsz, s_cfg.n_groups, s_cfg.d_state),
+                    heads // s_cfg.n_groups, axis=1).astype(jnp.float32)
+    cg = jnp.repeat(c.reshape(bsz, s_cfg.n_groups, s_cfg.d_state),
+                    heads // s_cfg.n_groups, axis=1).astype(jnp.float32)
+
+    da = jnp.exp(dt * a)                                   # [B, H]
+    new_ssm = state.ssm * da[..., None, None] \
+        + jnp.einsum("bhn,bhp->bhpn", bg * dt[..., None], xh)
+    y = jnp.einsum("bhn,bhpn->bhp", cg, new_ssm)
+    y = y + xh * params["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["norm_w"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, SSMState(conv=new_conv, ssm=new_ssm)

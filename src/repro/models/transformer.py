@@ -1,0 +1,546 @@
+"""Decoder-only LM covering the dense / MoE / SSM / hybrid families.
+
+One scanned layer body per family; per-layer variation (gemma2's alternating
+local/global windows, hymba's three global-attention layers) rides along the
+scan as data so all layers share one traced body.  Params are declared as
+``ParamDef`` descriptors (models/layers.py) giving init + sharding from one
+source.  Training forward uses ``jax.checkpoint`` per layer (remat) and
+activation sharding constraints; serving exposes ``prefill`` + single-token
+``decode_step`` over a stacked per-layer KV/SSM cache.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models import sharding
+from repro.models.attention import (KVCache, cache_update, decode_attention,
+                                    decode_attention_seq_sharded,
+                                    full_attention)
+from repro.models.layers import (ParamDef, cross_entropy, embed_lookup,
+                                 gated_mlp, init_params, logical_tree,
+                                 rms_norm, rope, shape_tree, softcap,
+                                 stack_layer_defs)
+from repro.models.moe import moe_ffn, moe_param_defs
+from repro.models.ssm import (SSMState, init_ssm_state, mamba_decode_step,
+                              mamba_mixer, ssm_param_defs)
+
+
+class LMCache(NamedTuple):
+    """Stacked per-layer decode state; unused fields are None."""
+    k: Optional[jax.Array]          # [L, B, Hkv, S, D]
+    v: Optional[jax.Array]
+    conv: Optional[jax.Array]       # [L, B, convdim, K-1]
+    ssm: Optional[jax.Array]        # [L, B, H, P, N]
+    length: jax.Array               # i32 scalar
+
+
+# ---------------------------------------------------------------------------
+# parameter declaration
+# ---------------------------------------------------------------------------
+
+
+def _padded_heads(num_heads: int) -> int:
+    """O3 pad_heads: query heads padded to a model-axis multiple (16)."""
+    from repro.models.optflags import flags
+    if flags().pad_heads:
+        return -(-num_heads // 16) * 16
+    return num_heads
+
+
+def _attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    a, d, hd = cfg.attn, cfg.d_model, cfg.head_dim
+    hq = _padded_heads(a.num_heads)
+    return {
+        "wq": ParamDef((d, hq * hd), ("embed", "heads")),
+        "wk": ParamDef((d, a.num_kv_heads * hd), ("embed", "kv_heads")),
+        "wv": ParamDef((d, a.num_kv_heads * hd), ("embed", "kv_heads")),
+        "wo": ParamDef((hq * hd, d), ("heads", "embed")),
+    }
+
+
+def _mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None
+              ) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    defs = {
+        "wi": ParamDef((d, f), ("embed", "ffn")),
+        "wo": ParamDef((f, d), ("ffn", "embed")),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        defs["wg"] = ParamDef((d, f), ("embed", "ffn"))
+    return defs
+
+
+def _layer_defs(cfg: ModelConfig, moe: bool, dense_ff: int = 0
+                ) -> Dict[str, Any]:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {"ln1": ParamDef((d,), (None,), "ones")}
+    if cfg.family == "ssm":
+        defs["ssm"] = ssm_param_defs(cfg)
+        return defs
+    defs["attn"] = _attn_defs(cfg)
+    defs["ln2"] = ParamDef((d,), (None,), "ones")
+    if cfg.family == "hybrid":
+        defs["ssm"] = ssm_param_defs(cfg)
+        defs["fuse_na"] = ParamDef((d,), (None,), "ones")
+        defs["fuse_ns"] = ParamDef((d,), (None,), "ones")
+    if moe:
+        defs["moe"] = moe_param_defs(cfg)
+    elif cfg.d_ff:
+        defs["mlp"] = _mlp_defs(cfg, dense_ff or None)
+    if cfg.post_block_norm:
+        defs["ln1_post"] = ParamDef((d,), (None,), "ones")
+        defs["ln2_post"] = ParamDef((d,), (None,), "ones")
+    return defs
+
+
+class LayerIO(NamedTuple):
+    """Optional per-layer decode/prefill state flowing through a block."""
+    kv: Optional[KVCache] = None        # decode: cache to append+attend
+    ssm: Optional[SSMState] = None      # decode: recurrent state
+    emit_state: bool = False            # prefill: emit k/v + final ssm state
+
+
+class TransformerLM:
+    """Builds init/apply/serve functions for one ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.is_moe = cfg.moe.num_experts > 0
+        self.n_front = cfg.moe.first_dense if self.is_moe else 0
+        self.n_scan = cfg.num_layers - self.n_front
+        # gemma2 style: (1+w) norms, sqrt(d) embedding scale, post norms
+        self.gemma_style = cfg.post_block_norm
+        self.windows = self._window_schedule()
+
+    # -- per-layer static schedule -------------------------------------------
+    def _window_schedule(self) -> np.ndarray:
+        cfg = self.cfg
+        w = np.zeros(cfg.num_layers, np.int32)
+        if cfg.attn.alt_local_global:
+            w[::2] = cfg.attn.window or 4096   # even local, odd global
+        elif cfg.family == "hybrid":
+            w[:] = cfg.attn.window or 1024
+            for g in cfg.hybrid_global_layers:
+                w[g] = 0
+        elif cfg.attn.window:
+            w[:] = cfg.attn.window
+        return w
+
+    # -- params ----------------------------------------------------------------
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d, v = cfg.d_model, cfg.vocab_size
+        from repro.models.optflags import flags
+        embed_axes = ("vocab", None) if flags().embed_vocab_only \
+            else ("vocab", "embed")
+        defs: Dict[str, Any] = {
+            "embed": ParamDef((v, d), embed_axes, "embed"),
+            "final_norm": ParamDef((d,), (None,), "ones"),
+        }
+        if not cfg.tie_embeddings:
+            defs["head"] = ParamDef((d, v), ("embed", "vocab"))
+        if cfg.meta_tokens:
+            defs["meta"] = ParamDef((cfg.meta_tokens, d), (None, "embed"),
+                                    "embed", 0.02)
+        if cfg.frontend_tokens or cfg.family == "audio":
+            # stub modality projector (LLaVA 2-layer MLP / HuBERT feat proj)
+            defs["frontend"] = {
+                "proj1": ParamDef((1024, d), (None, "embed")),
+                "proj2": ParamDef((d, d), ("embed", None)),
+            }
+        if cfg.family == "audio":
+            # encoder-only masked prediction: learned [MASK] frame embedding
+            defs["mask_embed"] = ParamDef((d,), (None,), "embed", 0.02)
+        if self.n_front:
+            defs["front_layers"] = stack_layer_defs(
+                _layer_defs(cfg, moe=False, dense_ff=cfg.moe.dense_ff),
+                self.n_front)
+        defs["layers"] = stack_layer_defs(
+            _layer_defs(cfg, moe=self.is_moe), self.n_scan)
+        return defs
+
+    def init(self, key: jax.Array):
+        return init_params(self.param_defs(), key, jnp.dtype(self.cfg.dtype))
+
+    def param_logical(self):
+        return logical_tree(self.param_defs())
+
+    def param_shapes(self):
+        return shape_tree(self.param_defs())
+
+    # -- blocks ------------------------------------------------------------------
+    def _attn(self, x, p, window, positions, io: LayerIO):
+        """Returns (attn_out, new_kv_cache | (k, v) | None).
+
+        O3 ``pad_heads``: query heads padded to a 16-multiple and K/V
+        repeated to match (MHA-ised) so attention shards fully over the
+        model axis even when Hq/Hkv are mesh-indivisible; the pad heads'
+        K/V are zero, so their outputs vanish exactly.
+        """
+        from repro.models.optflags import flags
+        fl = flags()
+        cfg = self.cfg
+        a, hd = cfg.attn, self.cfg.head_dim
+        hq_real = a.num_heads
+        hq_pad = _padded_heads(hq_real)
+        b, s, d = x.shape
+        q = (x @ p["wq"]).reshape(b, s, hq_pad, hd)
+        k = (x @ p["wk"]).reshape(b, s, a.num_kv_heads, hd)
+        v = (x @ p["wv"]).reshape(b, s, a.num_kv_heads, hd)
+        q = rope(q, positions, a.rope_theta)
+        k = rope(k, positions, a.rope_theta)
+        q, k, v = (t.swapaxes(1, 2) for t in (q, k, v))  # [B, H, S, D]
+        q = sharding.constrain(q, "batch", "heads", None, None)
+        k = sharding.constrain(k, "batch", "kv_heads", None, None)
+        v = sharding.constrain(v, "batch", "kv_heads", None, None)
+
+        if io.kv is not None:   # decode against a cache (real heads only)
+            q_dec = q[:, :hq_real] if hq_pad != hq_real else q
+            new_cache = cache_update(io.kv, k, v)
+            if a.kv_seq_shard and self.mesh is not None \
+                    and "model" in self.mesh.axis_names:
+                out = decode_attention_seq_sharded(
+                    q_dec, new_cache, self.mesh, window=window,
+                    softcap=a.logit_softcap)
+            else:
+                out = decode_attention(q_dec, new_cache, window=window,
+                                       softcap=a.logit_softcap)
+            if hq_pad != hq_real:
+                out = jnp.concatenate(
+                    [out, jnp.zeros((b, hq_pad - hq_real) + out.shape[2:],
+                                    out.dtype)], axis=1)
+            state_out = new_cache
+        else:
+            if fl.pad_heads:
+                g = hq_real // a.num_kv_heads
+                k_att = jnp.tile(k, (1, g, 1, 1))     # head h -> kv h%Hkv
+                v_att = jnp.tile(v, (1, g, 1, 1))
+                if hq_pad != hq_real:
+                    zpad = jnp.zeros(
+                        (b, hq_pad - hq_real) + k_att.shape[2:], k.dtype)
+                    k_att = jnp.concatenate([k_att, zpad], axis=1)
+                    v_att = jnp.concatenate([v_att, zpad], axis=1)
+                k_att = sharding.constrain(k_att, "batch", "heads", None,
+                                           None)
+                v_att = sharding.constrain(v_att, "batch", "heads", None,
+                                           None)
+                out = full_attention(q, k_att, v_att, causal=a.causal,
+                                     window=window,
+                                     softcap=a.logit_softcap)
+            else:
+                out = full_attention(q, k, v, causal=a.causal,
+                                     window=window,
+                                     softcap=a.logit_softcap)
+            state_out = (k, v) if io.emit_state else None
+        out = out.swapaxes(1, 2).reshape(b, s, hq_pad * hd)
+        return out @ p["wo"], state_out
+
+    def _layer(self, h, p, window, positions, moe: bool,
+               io: LayerIO = LayerIO()):
+        """One block; returns (h, aux, kv_state, ssm_state)."""
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        x = rms_norm(h, p["ln1"], cfg.norm_eps, self.gemma_style)
+
+        def run_ssm(x):
+            if io.ssm is not None and x.shape[1] == 1:
+                out, st = mamba_decode_step(x[:, 0], io.ssm, p["ssm"], cfg)
+                return out[:, None], st
+            if io.emit_state or io.ssm is not None:
+                return mamba_mixer(x, p["ssm"], cfg, return_state=True)
+            return mamba_mixer(x, p["ssm"], cfg), None
+
+        if cfg.family == "ssm":
+            mixed, new_ssm = run_ssm(x)
+            return h + mixed, aux, None, new_ssm
+
+        attn_out, kv_state = self._attn(x, p["attn"], window, positions, io)
+        new_ssm = None
+        if cfg.family == "hybrid":
+            ssm_out, new_ssm = run_ssm(x)
+            # hymba: mean of per-path normalised outputs
+            attn_out = 0.5 * (rms_norm(attn_out, p["fuse_na"], cfg.norm_eps)
+                              + rms_norm(ssm_out, p["fuse_ns"], cfg.norm_eps))
+        if cfg.post_block_norm:
+            attn_out = rms_norm(attn_out, p["ln1_post"], cfg.norm_eps,
+                                self.gemma_style)
+        h = h + attn_out
+        h = sharding.constrain(h, "batch", None, None)
+
+        x2 = rms_norm(h, p["ln2"], cfg.norm_eps, self.gemma_style)
+        if moe:
+            b, s, d = x2.shape
+            y2d, aux = moe_ffn(x2.reshape(b * s, d), p["moe"], cfg)
+            ffn_out = y2d.reshape(b, s, d)
+        else:
+            ffn_out = gated_mlp(x2, p["mlp"]["wi"], p["mlp"].get("wg"),
+                                p["mlp"]["wo"], cfg.act)
+        if cfg.post_block_norm:
+            ffn_out = rms_norm(ffn_out, p["ln2_post"], cfg.norm_eps,
+                               self.gemma_style)
+        h = h + ffn_out
+        return sharding.constrain(h, "batch", None, None), aux, kv_state, \
+            new_ssm
+
+    # -- embedding helpers ---------------------------------------------------
+    def _embed_inputs(self, params, tokens, frontend_embeds, mask=None):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            # encoder-only: the (stub) frame features ARE the sequence
+            fe = frontend_embeds @ params["frontend"]["proj1"]
+            fe = jax.nn.gelu(fe.astype(jnp.float32)).astype(fe.dtype)
+            fe = fe @ params["frontend"]["proj2"]
+            if mask is not None:
+                fe = jnp.where(mask[..., None],
+                               params["mask_embed"].astype(fe.dtype), fe)
+            return sharding.constrain(fe, "batch", None, None)
+        h = embed_lookup(params["embed"], tokens)
+        if self.gemma_style:
+            h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+        parts = []
+        if cfg.meta_tokens:
+            meta = jnp.broadcast_to(
+                params["meta"], (h.shape[0],) + params["meta"].shape)
+            parts.append(meta.astype(h.dtype))
+        if cfg.frontend_tokens:
+            fe = frontend_embeds.astype(h.dtype) @ params["frontend"]["proj1"]
+            fe = jax.nn.gelu(fe.astype(jnp.float32)).astype(h.dtype)
+            fe = fe @ params["frontend"]["proj2"]
+            parts.append(fe)
+        if parts:
+            h = jnp.concatenate(parts + [h], axis=1)
+        return sharding.constrain(h, "batch", None, None)
+
+    @property
+    def prefix_tokens(self) -> int:
+        return self.cfg.meta_tokens + self.cfg.frontend_tokens
+
+    def _logits(self, params, h):
+        cfg = self.cfg
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps, self.gemma_style)
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        logits = (h @ head).astype(jnp.float32)
+        logits = softcap(logits, cfg.final_logit_softcap)
+        return sharding.constrain(logits, "batch", None, "vocab")
+
+    # -- training forward -----------------------------------------------------
+    def forward(self, params, tokens, frontend_embeds=None, mask=None):
+        """tokens [B, S] -> (logits [B, S_total, V] f32, aux scalar)."""
+        cfg = self.cfg
+        h = self._embed_inputs(params, tokens, frontend_embeds, mask)
+        positions = jnp.arange(h.shape[1])
+        aux_total = jnp.float32(0.0)
+
+        no_window = not bool(self.windows.any())
+
+        def run_stack(h, aux_total, stack, windows, moe):
+            def body(carry, xs):
+                hh, aux = carry
+                p, w = xs
+                if no_window:
+                    w = 0          # static: lets attention skip masks/bias
+                hh, a, _, _ = self._layer(hh, p, w, positions, moe)
+                return (hh, aux + a), None
+
+            body = jax.checkpoint(body) if cfg.num_layers > 2 else body
+            (h, aux_total), _ = jax.lax.scan(
+                body, (h, aux_total), (stack, windows))
+            return h, aux_total
+
+        wins = jnp.asarray(self.windows)
+        if self.n_front:
+            h, aux_total = run_stack(h, aux_total, params["front_layers"],
+                                     wins[: self.n_front], False)
+        h, aux_total = run_stack(h, aux_total, params["layers"],
+                                 wins[self.n_front:], self.is_moe)
+        return self._logits(params, h), aux_total
+
+    def loss(self, params, batch, z_loss: float = 1e-4):
+        """batch: {tokens, labels[, frontend, mask]} -> (scalar, metrics).
+
+        For ``audio`` (encoder-only masked prediction) loss is computed on
+        masked positions only (HuBERT-style); otherwise next-token CE.
+        """
+        logits, aux = self.forward(params, batch.get("tokens"),
+                                   batch.get("frontend"),
+                                   batch.get("mask"))
+        labels = batch["labels"]
+        if self.cfg.family == "audio":
+            labels = jnp.where(batch["mask"], labels, -1)
+        elif self.prefix_tokens:
+            pad = jnp.full(
+                (labels.shape[0], self.prefix_tokens), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        ce = cross_entropy(logits, labels, z_loss=z_loss)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- serving ------------------------------------------------------------------
+    def cache_shapes(self, batch: int, max_len: int) -> LMCache:
+        """Abstract cache description (shapes) for dry-run input_specs."""
+        cfg = self.cfg
+        L = cfg.num_layers
+        s = max_len + self.prefix_tokens
+        k = v = conv = ssm = None
+        if cfg.family != "ssm":
+            k = v = (L, batch, cfg.attn.num_kv_heads, s, self.cfg.head_dim)
+        if cfg.family in ("ssm", "hybrid"):
+            st = init_ssm_state(cfg, 1)
+            conv = (L, batch) + st.conv.shape[1:]
+            ssm = (L, batch) + st.ssm.shape[1:]
+        return LMCache(k=k, v=v, conv=conv, ssm=ssm, length=())
+
+    def cache_logical(self) -> LMCache:
+        """Logical sharding axes for each cache member."""
+        cfg = self.cfg
+        seq_ax = "seq_shard" if cfg.attn.kv_seq_shard else None
+        kv_ax = None if cfg.attn.kv_seq_shard else "kv_heads"
+        kv = ("layers", "batch", kv_ax, seq_ax, None) \
+            if cfg.family != "ssm" else None
+        conv = ssm = None
+        if cfg.family in ("ssm", "hybrid"):
+            conv = ("layers", "batch", "ssm_inner", None)
+            ssm = ("layers", "batch", "heads", None, None)
+        return LMCache(k=kv, v=kv, conv=conv, ssm=ssm, length=())
+
+    def init_cache(self, batch: int, max_len: int,
+                   dtype=None) -> LMCache:
+        cfg = self.cfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        L = cfg.num_layers
+        max_len = max_len + self.prefix_tokens
+        k = v = conv = ssm = None
+        if cfg.family != "ssm":
+            hd = self.cfg.head_dim
+            k = jnp.zeros((L, batch, cfg.attn.num_kv_heads, max_len, hd),
+                          dtype)
+            v = jnp.zeros_like(k)
+        if cfg.family in ("ssm", "hybrid"):
+            st = init_ssm_state(cfg, batch, dtype)
+            conv = jnp.broadcast_to(st.conv, (L,) + st.conv.shape)
+            ssm = jnp.broadcast_to(st.ssm, (L,) + st.ssm.shape)
+        return LMCache(k=k, v=v, conv=conv, ssm=ssm, length=jnp.int32(0))
+
+    def _stack_scan(self, h, stack, wins_l, positions, moe, cache, base,
+                    emit: bool):
+        """Scan a layer stack threading per-layer cache slices.
+
+        ``cache``: LMCache or None.  ``base``: first layer index of this
+        stack inside the stacked cache arrays.  Returns (h, per-layer ys).
+        """
+        cfg = self.cfg
+        n = wins_l.shape[0]
+        need_kv = cfg.family != "ssm"
+        need_ssm = cfg.family in ("ssm", "hybrid")
+        dummy = jnp.zeros((n, 1))
+        xs = (stack, wins_l,
+              cache.k[base: base + n] if cache is not None and need_kv
+              else dummy,
+              cache.v[base: base + n] if cache is not None and need_kv
+              else dummy,
+              cache.conv[base: base + n] if cache is not None and need_ssm
+              else dummy,
+              cache.ssm[base: base + n] if cache is not None and need_ssm
+              else dummy)
+
+        no_window = not bool(self.windows.any())
+
+        def sbody(hh, x):
+            p, w, kl, vl, cl, sl = x
+            if no_window:
+                w = 0
+            io = LayerIO(
+                kv=KVCache(k=kl, v=vl, length=cache.length)
+                if cache is not None and need_kv else None,
+                ssm=SSMState(conv=cl, ssm=sl)
+                if cache is not None and need_ssm else None,
+                emit_state=emit)
+            hh, _, kv_state, ssm_state = self._layer(
+                hh, p, w, positions, moe, io)
+            z = jnp.zeros((1,))
+            if cache is not None and need_kv:
+                ys_kv = (kv_state.k, kv_state.v)
+            elif emit and need_kv:
+                ys_kv = kv_state          # (k, v)
+            else:
+                ys_kv = (z, z)
+            ys_ssm = (ssm_state.conv, ssm_state.ssm) \
+                if ssm_state is not None else (z, z)
+            return hh, (ys_kv[0], ys_kv[1], ys_ssm[0], ys_ssm[1])
+
+        if emit is False and cache is None and cfg.num_layers > 2:
+            sbody = jax.checkpoint(sbody)
+        return jax.lax.scan(sbody, h, xs)
+
+    def decode_step(self, params, cache: LMCache, tokens):
+        """tokens [B, T(=1)] -> (logits [B, T, V], new cache)."""
+        cfg = self.cfg
+        h = embed_lookup(params["embed"], tokens)
+        if self.gemma_style:
+            h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+        positions = cache.length + jnp.arange(tokens.shape[1])
+        wins = jnp.asarray(self.windows)
+        front = self.n_front
+        parts = []
+        if front:
+            h, ys = self._stack_scan(h, params["front_layers"], wins[:front],
+                                     positions, False, cache, 0, False)
+            parts.append(ys)
+        h, ys = self._stack_scan(h, params["layers"], wins[front:],
+                                 positions, self.is_moe, cache, front, False)
+        parts.append(ys)
+
+        need_kv = cfg.family != "ssm"
+        need_ssm = cfg.family in ("ssm", "hybrid")
+        cat = lambda i: jnp.concatenate([p[i] for p in parts], 0)
+        new_cache = LMCache(
+            k=cat(0) if need_kv else None,
+            v=cat(1) if need_kv else None,
+            conv=cat(2) if need_ssm else None,
+            ssm=cat(3) if need_ssm else None,
+            length=cache.length + tokens.shape[1])
+        return self._logits(params, h), new_cache
+
+    def prefill(self, params, tokens, frontend_embeds=None,
+                max_len: Optional[int] = None):
+        """Prompt pass -> (last-position logits [B, 1, V], filled cache)."""
+        cfg = self.cfg
+        b = tokens.shape[0]
+        h = self._embed_inputs(params, tokens, frontend_embeds)
+        s_total = h.shape[1]
+        max_len = max_len or s_total
+        positions = jnp.arange(s_total)
+        wins = jnp.asarray(self.windows)
+        front = self.n_front
+        parts = []
+        if front:
+            h, ys = self._stack_scan(h, params["front_layers"], wins[:front],
+                                     positions, False, None, 0, True)
+            parts.append(ys)
+        h, ys = self._stack_scan(h, params["layers"], wins[front:],
+                                 positions, self.is_moe, None, front, True)
+        parts.append(ys)
+
+        need_kv = cfg.family != "ssm"
+        need_ssm = cfg.family in ("ssm", "hybrid")
+        cat = lambda i: jnp.concatenate([p[i] for p in parts], 0)
+        k_all = v_all = None
+        if need_kv:
+            k_all, v_all = cat(0), cat(1)
+            pad = max_len + self.prefix_tokens - s_total
+            if pad > 0:
+                padw = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
+                k_all = jnp.pad(k_all, padw)
+                v_all = jnp.pad(v_all, padw)
+        new_cache = LMCache(
+            k=k_all, v=v_all,
+            conv=cat(2) if need_ssm else None,
+            ssm=cat(3) if need_ssm else None,
+            length=jnp.int32(s_total))
+        return self._logits(params, h[:, -1:]), new_cache

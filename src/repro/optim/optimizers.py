@@ -1,0 +1,184 @@
+"""Optimizers as pure pytree transforms: AdamW, Adafactor, SGD-momentum.
+
+No external deps.  State layout mirrors the param tree so every state leaf
+inherits the parameter's sharding (critical at 1T params: Adafactor's
+factored second moment is the only optimizer whose state fits the kimi-k2
+training dry-run — see DESIGN.md §5).
+
+All update math runs in f32 regardless of param dtype; params may be bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, lr) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(step=jnp.int32(0), m=zeros,
+                         v=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        c1 = 1 - b1 ** t
+        c2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            upd_ = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+            upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * upd_).astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda o: o[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, beta1=0) — for the 1T-param MoE
+# ---------------------------------------------------------------------------
+
+
+class FactorState(NamedTuple):
+    step: jax.Array
+    vr: Any       # row accumulators (or full v for <2D leaves)
+    vc: Any       # col accumulators (dummy for <2D leaves)
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0
+              ) -> Optimizer:
+    def init(params):
+        def vr_init(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vc_init(p):
+            if _factored(p.shape):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,), jnp.float32)
+
+        return FactorState(step=jnp.int32(0),
+                           vr=jax.tree.map(vr_init, params),
+                           vc=jax.tree.map(vc_init, params))
+
+    def update(grads, state, params, lr):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay_pow)
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                vr2 = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+                vc2 = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+                denom = jnp.maximum(
+                    vr2.mean(axis=-1, keepdims=True), eps)
+                r = (vr2 / denom)[..., None]
+                u = g * jax.lax.rsqrt(r * vc2[..., None, :] + eps)
+            else:
+                vr2 = beta2 * vr + (1 - beta2) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(vr2 + eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr2, vc2
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), FactorState(step=step, vr=pick(1), vc=pick(2))
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    mom: Any
+
+
+def sgdm(momentum: float = 0.9, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return SGDMState(step=jnp.int32(0), mom=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+            m2 = momentum * m + g
+            return (p.astype(jnp.float32) - lr * m2).astype(p.dtype), m2
+
+        out = jax.tree.map(upd, grads, state.mom, params)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), SGDMState(step=state.step + 1, mom=pick(1))
+
+    return Optimizer(init=init, update=update)
+
+
+def make_optimizer(name: str, weight_decay: float = 0.1) -> Optimizer:
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(weight_decay=weight_decay * 0.0)
+    if name == "sgdm":
+        return sgdm(weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

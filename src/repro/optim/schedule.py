@@ -1,0 +1,25 @@
+"""LR schedules: linear warmup into cosine / linear / constant decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, peak_lr: float, warmup_steps: int,
+                  total_steps: int, final_frac: float = 0.1):
+    """Returns step -> lr (jittable)."""
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps)
+                     / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        if kind == "cosine":
+            decay = final_frac + (1 - final_frac) * 0.5 \
+                * (1 + jnp.cos(jnp.pi * t))
+        elif kind == "linear":
+            decay = 1.0 - (1 - final_frac) * t
+        else:  # constant
+            decay = jnp.asarray(1.0)
+        return jnp.where(step < warmup_steps, warm, peak_lr * decay)
+
+    return sched

@@ -1,0 +1,7 @@
+from repro.parallel.compress import (powersgd_compress, powersgd_decompress,
+                                     PowerSGDState, init_powersgd,
+                                     compressed_cross_pod_mean)
+from repro.parallel.pipeline import pipeline_forward
+
+__all__ = ["powersgd_compress", "powersgd_decompress", "PowerSGDState",
+           "init_powersgd", "compressed_cross_pod_mean", "pipeline_forward"]

@@ -1,0 +1,96 @@
+"""PowerSGD gradient compression for the cross-pod all-reduce.
+
+Between pods the gradient all-reduce crosses DCN (orders of magnitude slower
+than ICI), so the pod axis is where compression pays.  Rank-r PowerSGD
+(Vogels et al. 2019) with error feedback:
+
+    M ~ P Q^T,  P = orthonormalise(M Q),  Q = M^T P
+
+Only P and Q cross the slow link: a [m, n] gradient costs r*(m+n) instead of
+m*n — e.g. a 4096x14336 block at rank 8 moves 0.25% of the bytes.  Error
+feedback accumulates the residual locally so the compression error is
+re-injected next step instead of biasing convergence.
+
+Matrix leaves (>=2-D, both folded dims >= 8) are compressed; small leaves
+pass through an uncompressed pmean.  Placeholders are size-0 arrays so the
+state is a uniform pytree (checkpointable, shardable).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PowerSGDState(NamedTuple):
+    q: Any        # per-leaf Q matrices (size-0 placeholder if uncompressed)
+    error: Any    # per-leaf error-feedback residuals (same convention)
+
+
+_EMPTY = lambda: jnp.zeros((0,), jnp.float32)
+
+
+def _as_matrix(x: jax.Array) -> jax.Array:
+    return x.reshape(-1, x.shape[-1])
+
+
+def _compressible(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 8 \
+        and int(np.prod(shape[:-1])) >= 8
+
+
+def init_powersgd(grads, rank: int = 8, seed: int = 0) -> PowerSGDState:
+    leaves = jax.tree.leaves(grads)
+    keys = iter(jax.random.split(jax.random.PRNGKey(seed), len(leaves)))
+
+    def init_q(g):
+        k = next(keys)
+        if not _compressible(g.shape):
+            return _EMPTY()
+        return jax.random.normal(k, (g.shape[-1], rank), jnp.float32)
+
+    q = jax.tree.map(init_q, grads)
+    err = jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32)
+        if _compressible(g.shape) else _EMPTY(), grads)
+    return PowerSGDState(q=q, error=err)
+
+
+def _orthonormalise(p: jax.Array) -> jax.Array:
+    q, _ = jnp.linalg.qr(p)   # r is tiny; QR cost negligible
+    return q
+
+
+def powersgd_compress(g: jax.Array, q: jax.Array, err: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One matrix leaf -> (P, new_Q, error-fed matrix) before reduction."""
+    m = _as_matrix(g.astype(jnp.float32)) + _as_matrix(err)
+    p = _orthonormalise(m @ q)            # [rows, r]
+    q_new = m.T @ p                       # [cols, r]
+    return p, q_new, m
+
+
+def powersgd_decompress(p: jax.Array, q: jax.Array, shape) -> jax.Array:
+    return (p @ q.T).reshape(shape)
+
+
+def compressed_cross_pod_mean(grads, state: PowerSGDState, axis: str = "pod"):
+    """Inside shard_map over ``axis``: mean grads across pods moving only
+    rank-r factors for matrix leaves.  Returns (mean grads, new state)."""
+
+    def leaf(g, q, err):
+        if q.size == 0:
+            return jax.lax.pmean(g, axis), q, err
+        p, q_new, m = powersgd_compress(g, q, err)
+        p = jax.lax.pmean(p, axis)            # the only cross-pod traffic
+        q_new = jax.lax.pmean(q_new, axis)
+        approx = powersgd_decompress(p, q_new, g.shape)
+        new_err = (m - _as_matrix(approx)).reshape(g.shape)  # feedback
+        return approx.astype(g.dtype), q_new, new_err
+
+    out = jax.tree.map(leaf, grads, state.q, state.error)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), PowerSGDState(q=pick(1), error=pick(2))

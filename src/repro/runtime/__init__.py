@@ -1,0 +1,5 @@
+from repro.runtime.ft import (Heartbeat, PreemptionHandler, StragglerMonitor,
+                              elastic_mesh_for)
+
+__all__ = ["Heartbeat", "PreemptionHandler", "StragglerMonitor",
+           "elastic_mesh_for"]

@@ -1,0 +1,134 @@
+"""Fault-tolerance runtime: preemption, heartbeats, stragglers, elasticity.
+
+At 1000+ nodes the failure model is: (a) planned preemption (SIGTERM with a
+grace window), (b) silent node loss (detected by missing heartbeats), and
+(c) stragglers (a slow host stretching every synchronous step).  The
+training loop (launch/train.py) composes:
+
+* ``PreemptionHandler`` — SIGTERM/SIGINT flip a flag; the loop checkpoints
+  at the next step boundary and exits cleanly (data pipeline resume is a
+  pure function of the restored step counter — repro.data).
+* ``Heartbeat`` / ``StragglerMonitor`` — per-host step-time beacons to a
+  shared directory (on pods: GCS/NFS); the monitor flags hosts whose recent
+  step times exceed ``threshold`` x the fleet median, the restart policy the
+  paper's "asymmetric thread regions" finding maps onto at pod scale.
+* ``elastic_mesh_for`` — rebuild the largest usable (data, model) mesh from
+  the devices that survive, preferring to shrink the *data* axis (pure-DP
+  loss) so TP groups stay intact; combined with resharding restore
+  (repro.ckpt) this is elastic scaling.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT -> graceful checkpoint-and-exit flag."""
+
+    def __init__(self, signals: Sequence[int] = (signal.SIGTERM,)):
+        self._flag = threading.Event()
+        self._prev = {}
+        for s in signals:
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:  # not main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._flag.set()
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag.is_set()
+
+    def trigger(self) -> None:  # for tests / manual drain
+        self._flag.set()
+
+    def restore(self) -> None:
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+
+
+class Heartbeat:
+    """Per-host liveness + step-time beacon (file-based; GCS/NFS on pods)."""
+
+    def __init__(self, directory: str, host_id: int):
+        self.path = os.path.join(directory, f"heartbeat_{host_id}.json")
+        os.makedirs(directory, exist_ok=True)
+        self.host_id = host_id
+
+    def beat(self, step: int, step_time_s: float) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"host": self.host_id, "step": step,
+                       "step_time_s": step_time_s, "ts": time.time()}, f)
+        os.replace(tmp, self.path)
+
+
+class StragglerMonitor:
+    """Reads all heartbeats; flags dead hosts and stragglers.
+
+    Synchronous SPMD steps run at the pace of the slowest host, so a
+    straggler taxes the whole fleet; the mitigation at scale is restart /
+    exclusion plus checkpoint-resume, which this monitor drives.
+    """
+
+    def __init__(self, directory: str, dead_after_s: float = 60.0,
+                 straggler_factor: float = 2.0):
+        self.directory = directory
+        self.dead_after_s = dead_after_s
+        self.factor = straggler_factor
+
+    def read(self) -> List[Dict]:
+        beats = []
+        if not os.path.isdir(self.directory):
+            return beats
+        for f in os.listdir(self.directory):
+            if f.startswith("heartbeat_") and f.endswith(".json"):
+                try:
+                    with open(os.path.join(self.directory, f)) as fh:
+                        beats.append(json.load(fh))
+                except (json.JSONDecodeError, OSError):
+                    continue  # torn read: treat as missing this round
+        return beats
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = now or time.time()
+        return sorted(b["host"] for b in self.read()
+                      if now - b["ts"] > self.dead_after_s)
+
+    def stragglers(self) -> List[int]:
+        beats = self.read()
+        if len(beats) < 2:
+            return []
+        times = np.array([b["step_time_s"] for b in beats])
+        med = float(np.median(times))
+        if med <= 0:
+            return []
+        return sorted(b["host"] for b, t in zip(beats, times)
+                      if t > self.factor * med)
+
+
+def elastic_mesh_for(n_devices: int, model_parallel: int
+                     ) -> Tuple[int, int]:
+    """Largest (data, model) grid for the surviving device count.
+
+    Keeps the TP degree fixed (param shardings stay valid) and shrinks the
+    data axis — the restored checkpoint reshards onto the smaller mesh and
+    training continues with a smaller global batch or more microbatches.
+    """
+    if n_devices < model_parallel:
+        # degenerate loss: shrink TP to the largest power-of-two that fits
+        mp = 1
+        while mp * 2 <= n_devices:
+            mp *= 2
+        model_parallel = mp
+    data = n_devices // model_parallel
+    return data, model_parallel

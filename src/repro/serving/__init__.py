@@ -1,0 +1,3 @@
+from repro.serving.engine import ServeEngine, make_prefill_fn, make_decode_fn
+
+__all__ = ["ServeEngine", "make_prefill_fn", "make_decode_fn"]

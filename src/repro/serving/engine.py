@@ -1,0 +1,90 @@
+"""Batched serving engine: jitted prefill + decode over a shared KV cache.
+
+Production shape: requests are padded into fixed (batch, prompt_len)
+buckets so the jitted ``prefill``/``decode_step`` executables are reused
+across requests (one compilation per bucket).  Greedy and temperature
+sampling; per-request EOS masking; donation of the cache between steps so
+decode runs in place.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import LMCache, TransformerLM
+
+
+def make_prefill_fn(model: TransformerLM, max_len: int):
+    @functools.partial(jax.jit, static_argnums=())
+    def prefill(params, tokens, frontend=None):
+        return model.prefill(params, tokens, frontend, max_len=max_len)
+
+    return prefill
+
+
+def make_decode_fn(model: TransformerLM, temperature: float = 0.0):
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def decode(params, cache: LMCache, tokens, rng):
+        logits, cache = model.decode_step(params, cache, tokens)
+        logits = logits[:, -1]
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], cache
+
+    return decode
+
+
+class ServeEngine:
+    """Fixed-bucket batched generation."""
+
+    def __init__(self, model: TransformerLM, params, batch: int,
+                 max_prompt: int, max_new: int, eos_id: int = 2,
+                 temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_prompt = max_prompt
+        self.max_new = max_new
+        self.eos = eos_id
+        self.prefill = make_prefill_fn(model, max_prompt + max_new)
+        self.decode = make_decode_fn(model, temperature)
+
+    def _pad_prompts(self, prompts: List[List[int]]):
+        assert len(prompts) <= self.batch
+        toks = np.zeros((self.batch, self.max_prompt), np.int32)
+        for i, p in enumerate(prompts):
+            p = p[-self.max_prompt:]
+            toks[i, -len(p):] = p          # left-pad: end-aligned prompts
+        return jnp.asarray(toks)
+
+    def generate(self, prompts: List[List[int]], seed: int = 0,
+                 frontend=None) -> List[List[int]]:
+        """Greedy/temperature generation for a batch of token prompts."""
+        tokens = self._pad_prompts(prompts)
+        logits, cache = self.prefill(self.params, tokens, frontend)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        rng = jax.random.PRNGKey(seed)
+        outs = [np.asarray(nxt)]
+        done = np.zeros((self.batch,), bool)
+        for _ in range(self.max_new - 1):
+            rng, sub = jax.random.split(rng)
+            nxt, cache = self.decode(self.params, cache, nxt, sub)
+            host = np.asarray(nxt)
+            done |= (host[:, 0] == self.eos)
+            outs.append(host)
+            if done[: len(prompts)].all():
+                break
+        gen = np.concatenate(outs, axis=1)
+        result = []
+        for i in range(len(prompts)):
+            row = gen[i].tolist()
+            if self.eos in row:
+                row = row[: row.index(self.eos) + 1]
+            result.append(row)
+        return result

@@ -1,0 +1,25 @@
+"""Shared fixtures.
+
+NOTE: do NOT set XLA_FLAGS / host device count here — smoke tests and
+benchmarks must see the single real CPU device.  Multi-device tests spawn
+subprocesses that set ``--xla_force_host_platform_device_count`` themselves.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def engine5():
+    from repro.go import GoEngine
+    return GoEngine(5, komi=0.5)
+
+
+@pytest.fixture(scope="session")
+def engine9():
+    from repro.go import GoEngine
+    return GoEngine(9, komi=6.0)

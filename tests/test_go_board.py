@@ -1,0 +1,230 @@
+"""Go engine rules tests: groups, liberties, capture, suicide, ko, eyes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.go import GoEngine, BLACK, WHITE
+from repro.go.board import NO_KO
+
+
+def put(engine, stones):
+    b = np.zeros(engine.n2, np.int8)
+    for p, c in stones.items():
+        b[p] = c
+    return jnp.asarray(b)
+
+
+class TestGroups:
+    def test_single_stone_liberties(self, engine5):
+        b = put(engine5, {12: BLACK})            # centre of 5x5
+        ids, libs = engine5.group_info(b)
+        assert int(libs[12]) == 4
+        assert int(ids[12]) == 12
+
+    def test_corner_liberties(self, engine5):
+        b = put(engine5, {0: BLACK})
+        _, libs = engine5.group_info(b)
+        assert int(libs[0]) == 2
+
+    def test_group_merge_shares_liberties(self, engine5):
+        # two adjacent stones: 6 distinct liberties on 5x5 interior row
+        b = put(engine5, {11: BLACK, 12: BLACK})
+        ids, libs = engine5.group_info(b)
+        assert int(ids[11]) == int(ids[12])
+        assert int(libs[11]) == int(libs[12]) == 6
+
+    def test_liberty_not_double_counted(self, engine5):
+        # diagonal stones sharing two common liberty points stay separate
+        b = put(engine5, {6: BLACK, 12: BLACK})
+        ids, libs = engine5.group_info(b)
+        assert int(ids[6]) != int(ids[12])
+        assert int(libs[6]) == 4 and int(libs[12]) == 4
+
+    def test_enemy_reduces_liberties(self, engine5):
+        b = put(engine5, {12: BLACK, 11: WHITE})
+        _, libs = engine5.group_info(b)
+        assert int(libs[12]) == 3
+        assert int(libs[11]) == 3
+
+
+class TestCapture:
+    def test_corner_capture(self, engine5):
+        st = engine5.init_state()
+        st = engine5.play(st, 1)   # B (0,1)
+        st = engine5.play(st, 0)   # W corner
+        st = engine5.play(st, 5)   # B (1,0): captures
+        assert int(st.board[0]) == 0
+
+    def test_multi_stone_capture(self, engine5):
+        st = engine5.init_state()
+        b = put(engine5, {1: WHITE, 2: WHITE,          # white pair on top edge
+                          0: BLACK, 5: BLACK, 6: BLACK, 7: BLACK, 8: BLACK})
+        st = st._replace(board=b)
+        st = engine5.play(st, 3)   # B seals the last liberty
+        assert int(st.board[1]) == 0 and int(st.board[2]) == 0
+
+    def test_atari_then_capture(self, engine5):
+        # white corner stone with one liberty survives until it is filled
+        st = engine5.init_state()
+        b = put(engine5, {0: WHITE, 1: BLACK})
+        st = st._replace(board=b, to_play=jnp.int8(BLACK))
+        _, libs = engine5.group_info(st.board)
+        assert int(libs[0]) == 1           # atari
+        st2 = engine5.play(st, 5)          # black fills the last liberty
+        assert int(st2.board[0]) == 0      # captured now, not before
+
+
+class TestLegality:
+    def test_suicide_illegal(self, engine5):
+        st = engine5.init_state()
+        b = put(engine5, {1: BLACK, 5: BLACK})
+        st = st._replace(board=b, to_play=jnp.int8(WHITE))
+        legal = engine5.legal_moves(st)
+        assert not bool(legal[0])
+
+    def test_multi_stone_suicide_illegal(self, engine5):
+        # white group of 2 would have zero liberties
+        st = engine5.init_state()
+        b = put(engine5, {0: BLACK, 2: BLACK, 5: BLACK, 7: BLACK, 10: BLACK,
+                          12: BLACK, 11: BLACK, 1: WHITE})
+        st = st._replace(board=b, to_play=jnp.int8(WHITE))
+        legal = engine5.legal_moves(st)
+        assert not bool(legal[6])
+
+    def test_capture_in_enemy_eye_is_legal(self, engine5):
+        # playing inside an enemy eye is legal when it captures
+        st = engine5.init_state()
+        b = put(engine5, {1: BLACK, 5: BLACK,            # black corner group
+                          2: WHITE, 6: WHITE, 10: WHITE})  # white surrounds
+        st = st._replace(board=b, to_play=jnp.int8(WHITE))
+        legal = engine5.legal_moves(st)
+        assert bool(legal[0])  # W at corner captures nothing... black 1,5 have libs
+        # tighter: black group {1,5} liberties: 0? nbrs of 1: 0,2,6; of 5: 0,6,10
+        _, libs = engine5.group_info(b)
+        assert int(libs[1]) == 1  # only the corner
+        st2 = engine5.play(st, 0)
+        assert int(st2.board[1]) == 0 and int(st2.board[5]) == 0
+
+    def test_pass_always_legal(self, engine5):
+        legal = engine5.legal_moves(engine5.init_state())
+        assert bool(legal[engine5.pass_action])
+
+    def test_occupied_illegal(self, engine5):
+        st = engine5.play(engine5.init_state(), 12)
+        assert not bool(engine5.legal_moves(st)[12])
+
+
+class TestKo:
+    def _ko_state(self, engine5):
+        st = engine5.init_state()
+        b = put(engine5, {1: BLACK, 5: BLACK, 11: BLACK,
+                          2: WHITE, 8: WHITE, 12: WHITE, 6: WHITE})
+        return st._replace(board=b, to_play=jnp.int8(BLACK))
+
+    def test_ko_point_set(self, engine5):
+        st = engine5.play(self._ko_state(engine5), 7)  # B captures W at 6
+        assert int(st.board[6]) == 0
+        assert int(st.ko) == 6
+
+    def test_ko_retake_illegal(self, engine5):
+        st = engine5.play(self._ko_state(engine5), 7)
+        assert not bool(engine5.legal_moves(st)[6])
+
+    def test_ko_cleared_after_other_move(self, engine5):
+        st = engine5.play(self._ko_state(engine5), 7)
+        st = engine5.play(st, 20)  # white plays elsewhere
+        assert int(st.ko) == NO_KO
+
+    def test_multi_capture_no_ko(self, engine5):
+        st = engine5.init_state()
+        b = put(engine5, {1: WHITE, 2: WHITE, 0: BLACK, 5: BLACK,
+                          6: BLACK, 7: BLACK, 8: BLACK})
+        st = st._replace(board=b, to_play=jnp.int8(BLACK))
+        st = engine5.play(st, 3)
+        assert int(st.ko) == NO_KO
+
+
+class TestEyesAndPlayout:
+    def test_true_eye_detected(self, engine9):
+        # black ring around (1,1)=10 in the corner region
+        stones = {1: BLACK, 9: BLACK, 11: BLACK, 19: BLACK,
+                  0: BLACK, 2: BLACK, 18: BLACK, 20: BLACK}
+        b = put(engine9, stones)
+        eyes = engine9.true_eyes(b, BLACK)
+        assert bool(eyes[10])
+
+    def test_eye_with_two_enemy_diagonals_rejected(self, engine9):
+        stones = {1: BLACK, 9: BLACK, 11: BLACK, 19: BLACK,
+                  0: WHITE, 2: WHITE, 18: BLACK, 20: BLACK}
+        b = put(engine9, stones)
+        eyes = engine9.true_eyes(b, BLACK)
+        assert not bool(eyes[10])
+
+    def test_playout_mask_excludes_own_eye(self, engine9):
+        stones = {1: BLACK, 9: BLACK, 11: BLACK, 19: BLACK,
+                  0: BLACK, 2: BLACK, 18: BLACK, 20: BLACK}
+        st = engine9.init_state()._replace(board=put(engine9, stones))
+        mask = engine9.playout_mask(st)
+        assert not bool(mask[10])
+
+    def test_playout_terminates_and_scores(self, engine5, rng):
+        final = engine5.random_playout(engine5.init_state(), rng)
+        assert bool(final.done)
+        v = engine5.result(final)
+        assert int(v) in (-1, 0, 1)
+
+
+class TestScoring:
+    def test_empty_board_draw_pre_komi(self, engine5):
+        assert float(engine5.score(jnp.zeros(25, jnp.int8))) == 0.0
+
+    def test_all_black(self, engine5):
+        b = put(engine5, {12: BLACK})
+        assert float(engine5.score(b)) == 25.0
+
+    def test_split_board(self, engine9):
+        # black wall on column 4 of 9x9 row 0..8? build wall on row 4
+        stones = {4 * 9 + c: BLACK for c in range(9)}
+        stones.update({6 * 9 + 4: WHITE})
+        b = put(engine9, stones)
+        s = float(engine9.score(b))
+        # black: wall 9 + rows 0-3 territory 36 = 45; white: 1 stone; the
+        # empty region below the wall touches both colours -> dame (TT rules)
+        assert s == (9 + 36) - 1
+
+    def test_game_end_two_passes(self, engine5):
+        st = engine5.init_state()
+        st = engine5.play(st, engine5.pass_action)
+        assert not bool(st.done)
+        st = engine5.play(st, engine5.pass_action)
+        assert bool(st.done)
+
+
+class TestInvariantsProperty:
+    """Property-style: random move sequences keep board invariants."""
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_no_zero_liberty_groups_ever(self, engine5, seed):
+        key = jax.random.PRNGKey(seed)
+        st = engine5.init_state()
+        for _ in range(30):
+            key, sub = jax.random.split(key)
+            mask = engine5.playout_mask(st)
+            if not bool(mask[: engine5.n2].any()):
+                break
+            st = engine5.playout_step(st, sub)
+            _, libs = engine5.group_info(st.board)
+            stone = np.asarray(st.board) != 0
+            assert (np.asarray(libs)[stone] > 0).all(), \
+                "a group with zero liberties survived"
+
+    @pytest.mark.parametrize("seed", range(2))
+    def test_vmap_matches_sequential(self, engine5, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+        singles = [engine5.playout_value(engine5.init_state(), k)
+                   for k in keys]
+        batched = jax.vmap(
+            lambda k: engine5.playout_value(engine5.init_state(), k))(keys)
+        np.testing.assert_array_equal(np.asarray(singles),
+                                      np.asarray(batched))

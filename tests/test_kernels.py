@@ -1,0 +1,199 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fma_stream.ops import fma_stream
+from repro.kernels.fma_stream.ref import fma_stream_ref
+from repro.kernels.uct_select.ops import uct_scores
+from repro.kernels.uct_select.ref import uct_scores_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+class TestFmaStream:
+    @pytest.mark.parametrize("n", [8192, 16384, 65536, 100000])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+    def test_matches_ref(self, n, dtype):
+        key = jax.random.PRNGKey(n)
+        ka, kb, kc = jax.random.split(key, 3)
+        if dtype == jnp.int32:
+            a = jax.random.randint(ka, (n,), -5, 5, dtype)
+            b = jax.random.randint(kb, (n,), -5, 5, dtype)
+            c = jax.random.randint(kc, (n,), -5, 5, dtype)
+        else:
+            a = jax.random.normal(ka, (n,), dtype)
+            b = jax.random.normal(kb, (n,), dtype)
+            c = jax.random.normal(kc, (n,), dtype)
+        got = fma_stream(a, b, c, repeats=3, interpret=True)
+        want = fma_stream_ref(a, b, c, repeats=3)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_repeats_scale_intensity(self):
+        a = jnp.ones(8192); b = jnp.ones(8192); c = jnp.zeros(8192)
+        out = fma_stream(a, b, c, repeats=7, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), 7.0)
+
+    def test_bf16(self):
+        n = 16384
+        a = jnp.full((n,), 1.5, jnp.bfloat16)
+        b = jnp.full((n,), 2.0, jnp.bfloat16)
+        c = jnp.zeros((n,), jnp.bfloat16)
+        out = fma_stream(a, b, c, repeats=1, interpret=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32), 3.0)
+
+
+def _uct_inputs(key, b, a):
+    ks = jax.random.split(key, 8)
+    visit = jnp.floor(jax.random.uniform(ks[0], (b, a)) * 50)
+    value = jax.random.normal(ks[1], (b, a)) * visit
+    vloss = jnp.floor(jax.random.uniform(ks[2], (b, a)) * 3)
+    prior = jax.nn.softmax(jax.random.normal(ks[3], (b, a)))
+    legal = jax.random.bernoulli(ks[4], 0.8, (b, a))
+    has_child = jax.random.bernoulli(ks[5], 0.6, (b, a)) & legal
+    visit = jnp.where(has_child, jnp.maximum(visit, 1), 0)
+    parent_n = 1 + jnp.floor(jax.random.uniform(ks[6], (b,)) * 200)
+    player = jnp.where(jax.random.bernoulli(ks[7], 0.5, (b,)), 1.0, -1.0)
+    return visit, value, vloss, prior, legal, has_child, parent_n, player
+
+
+class TestUctSelect:
+    @pytest.mark.parametrize("b,a", [(8, 82), (16, 128), (3, 26), (32, 362)])
+    @pytest.mark.parametrize("use_puct", [False, True])
+    def test_matches_ref(self, b, a, use_puct):
+        args = _uct_inputs(jax.random.PRNGKey(b * a), b, a)
+        got = uct_scores(*args, c_uct=0.9, vl_weight=1.0, use_puct=use_puct,
+                         interpret=True)
+        want = uct_scores_ref(*[x.astype(jnp.float32) for x in args],
+                              c_uct=0.9, vl_weight=1.0, use_puct=use_puct)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-6, atol=2e-6)
+
+    def test_argmax_agrees_with_search_math(self):
+        """Kernel scores reproduce MCTS._edge_scores (minus the tiebreak)."""
+        import dataclasses
+        from repro.config import MCTSConfig
+        from repro.core.mcts import MCTS
+        from repro.core import tree as tree_lib
+        from repro.go import GoEngine
+
+        eng = GoEngine(5, komi=0.5)
+        cfg = MCTSConfig(board_size=5, lanes=2, sims_per_move=16,
+                         max_nodes=64)
+        m = MCTS(eng, cfg)
+        t = jax.jit(lambda s, k: m.search(s, k))(
+            eng.init_state(), jax.random.PRNGKey(0)).tree
+
+        node = 0
+        kids = t.children[node]
+        has_child = kids != -1
+        cidx = jnp.maximum(kids, 0)
+        player = tree_lib.node_state(t, node).to_play.astype(jnp.float32)
+        args = (t.visit[cidx][None] * has_child[None],
+                t.value[cidx][None] * has_child[None],
+                t.vloss[cidx][None],
+                t.prior[node][None],
+                t.legal[node][None],
+                has_child[None],
+                (t.visit[node] + t.vloss[node])[None],
+                player[None])
+        kern = uct_scores(*args, c_uct=cfg.c_uct, vl_weight=cfg.virtual_loss,
+                          use_puct=False, interpret=True)
+        ref = m._edge_scores(t, node, player, jax.random.PRNGKey(1))
+        # strip the stochastic tiebreak (<=1e-3) before comparing argmax sets
+        np.testing.assert_allclose(np.asarray(kern[0]), np.asarray(ref),
+                                   atol=2e-3)
+
+    def test_virtual_loss_lowers_score(self):
+        """With outcomes in [-1, 1] (as in Go), virtual loss can only make
+        an edge less attractive — the decorrelation property the paper's
+        tree parallelisation relies on."""
+        b, a = 8, 128
+        args = list(_uct_inputs(jax.random.PRNGKey(0), b, a))
+        # bound mean values to the game-outcome range [-1, 1]
+        args[1] = jnp.clip(args[1], -args[0], args[0])
+        base = uct_scores(*args, interpret=True)
+        args2 = list(args)
+        args2[2] = args[2] + 5.0  # add virtual loss everywhere
+        loaded = uct_scores(*args2, interpret=True)
+        mask = np.asarray(args[5]) & np.asarray(args[4])
+        assert (np.asarray(loaded)[mask] <= np.asarray(base)[mask] + 1e-5).all()
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,sk,d", [
+        (1, 2, 2, 128, 128, 64),
+        (2, 4, 2, 256, 256, 64),      # GQA group=2
+        (1, 8, 1, 128, 256, 128),     # MQA, decode-ish kv_offset
+        (1, 2, 2, 96, 96, 32),        # non-multiple of block -> padding
+    ])
+    def test_causal_matches_ref(self, b, hq, hkv, sq, sk, d):
+        key = jax.random.PRNGKey(hash((b, hq, sq)) % 2**31)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (b, hq, sq, d), jnp.float32)
+        k = jax.random.normal(kk, (b, hkv, sk, d), jnp.float32)
+        v = jax.random.normal(kv, (b, hkv, sk, d), jnp.float32)
+        off = sk - sq
+        got = flash_attention(q, k, v, causal=True, kv_offset=off,
+                              bq=64, bk=64, interpret=True)
+        want = attention_ref(q, k, v, causal=True, kv_offset=off)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("window", [32, 64])
+    def test_sliding_window(self, window):
+        key = jax.random.PRNGKey(7)
+        kq, kk, kv = jax.random.split(key, 3)
+        shape = (1, 2, 128, 64)
+        q = jax.random.normal(kq, shape)
+        k = jax.random.normal(kk, shape)
+        v = jax.random.normal(kv, shape)
+        got = flash_attention(q, k, v, causal=True, window=window,
+                              bq=64, bk=64, interpret=True)
+        want = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_softcap(self):
+        key = jax.random.PRNGKey(9)
+        kq, kk, kv = jax.random.split(key, 3)
+        shape = (1, 2, 128, 64)
+        q = jax.random.normal(kq, shape) * 3
+        k = jax.random.normal(kk, shape) * 3
+        v = jax.random.normal(kv, shape)
+        got = flash_attention(q, k, v, causal=True, softcap=50.0,
+                              bq=64, bk=64, interpret=True)
+        want = attention_ref(q, k, v, causal=True, softcap=50.0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bf16_io(self):
+        key = jax.random.PRNGKey(11)
+        kq, kk, kv = jax.random.split(key, 3)
+        shape = (1, 2, 128, 64)
+        q = jax.random.normal(kq, shape).astype(jnp.bfloat16)
+        k = jax.random.normal(kk, shape).astype(jnp.bfloat16)
+        v = jax.random.normal(kv, shape).astype(jnp.bfloat16)
+        got = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                              interpret=True)
+        want = attention_ref(q, k, v, causal=True)
+        assert got.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=2e-2, atol=2e-2)
+
+    def test_decode_single_query(self):
+        """Sq=1 against a long cache — the serve_step shape."""
+        key = jax.random.PRNGKey(13)
+        kq, kk, kv = jax.random.split(key, 3)
+        q = jax.random.normal(kq, (2, 4, 1, 64))
+        k = jax.random.normal(kk, (2, 2, 256, 64))
+        v = jax.random.normal(kv, (2, 2, 256, 64))
+        got = flash_attention(q, k, v, causal=True, kv_offset=255,
+                              bq=8, bk=64, interpret=True)
+        want = attention_ref(q, k, v, causal=True, kv_offset=255)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)

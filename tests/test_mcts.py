@@ -1,0 +1,219 @@
+"""MCTS invariants + parallel-mode tests (the paper's algorithm)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.core import tree as tree_lib
+from repro.core import stats, affinity
+from repro.core.selfplay import double_resources, match, play_game
+from repro.go import GoEngine, BLACK, WHITE
+
+
+CFG5 = MCTSConfig(board_size=5, lanes=4, sims_per_move=32, max_nodes=128)
+
+
+@pytest.fixture(scope="module")
+def search5(engine5):
+    m = MCTS(engine5, CFG5)
+    fn = jax.jit(lambda s, k: m.search(s, k))
+    return m, fn
+
+
+class TestTreeInvariants:
+    def test_visit_conservation(self, engine5, search5, rng):
+        m, fn = search5
+        res = fn(engine5.init_state(), rng)
+        t = res.tree
+        # root visits = 1 (init) + iterations * lanes * leaf_playouts
+        expected = 1 + m.iterations * CFG5.lanes * max(1, CFG5.leaf_playouts)
+        assert float(t.visit[0]) == expected
+
+    def test_child_visits_sum_to_parent(self, engine5, search5, rng):
+        _, fn = search5
+        t = fn(engine5.init_state(), rng).tree
+        size = int(t.size)
+        visit = np.asarray(t.visit)
+        children = np.asarray(t.children)
+        for n in range(size):
+            kids = children[n]
+            kid_sum = sum(visit[k] for k in kids if k >= 0)
+            # parent visits >= sum of children (parent counted when it was
+            # itself the playout leaf)
+            assert visit[n] >= kid_sum
+
+    def test_virtual_loss_cleared(self, engine5, search5, rng):
+        _, fn = search5
+        t = fn(engine5.init_state(), rng).tree
+        assert float(jnp.abs(t.vloss).sum()) == 0.0
+
+    def test_values_bounded(self, engine5, search5, rng):
+        _, fn = search5
+        t = fn(engine5.init_state(), rng).tree
+        v = np.asarray(t.value)
+        n = np.asarray(t.visit)
+        ok = n > 0
+        assert (np.abs(v[ok]) <= n[ok] + 1e-6).all()
+
+    def test_parent_child_consistency(self, engine5, search5, rng):
+        _, fn = search5
+        t = fn(engine5.init_state(), rng).tree
+        size = int(t.size)
+        children = np.asarray(t.children)
+        parent = np.asarray(t.parent)
+        action = np.asarray(t.action)
+        for n in range(1, size):
+            p, a = parent[n], action[n]
+            assert p >= 0 and children[p, a] == n
+
+    def test_capacity_respected(self, engine5, rng):
+        cfg = dataclasses.replace(CFG5, max_nodes=8, sims_per_move=64)
+        m = MCTS(engine5, cfg)
+        t = jax.jit(lambda s, k: m.search(s, k))(
+            engine5.init_state(), rng).tree
+        assert int(t.size) <= 8
+
+    def test_action_is_legal(self, engine5, search5, rng):
+        _, fn = search5
+        res = fn(engine5.init_state(), rng)
+        legal = engine5.legal_moves(engine5.init_state())
+        assert bool(legal[int(res.action)])
+
+
+class TestVirtualLossDiversification:
+    """The paper's reason for virtual loss: parallel threads must not all
+    descend the same path.  With VL, one iteration's lanes spread over
+    distinct root children; without, they pile onto one."""
+
+    def _first_iteration_leaves(self, engine5, vl):
+        cfg = dataclasses.replace(CFG5, lanes=8, virtual_loss=vl,
+                                  sims_per_move=8)
+        m = MCTS(engine5, cfg)
+        t = tree_lib.init_tree(engine5, engine5.init_state(), cfg.max_nodes)
+
+        def one_iter(t, key):
+            return m._simulate(t, key)
+
+        t = jax.jit(one_iter)(t, jax.random.PRNGKey(3))
+        kids = np.asarray(t.children[0])
+        return (kids >= 0).sum()
+
+    def test_virtual_loss_spreads_lanes(self, engine5):
+        spread_vl = self._first_iteration_leaves(engine5, 1.0)
+        assert spread_vl >= 6  # 8 lanes explore >= 6 distinct root children
+
+    def test_fpu_alone_also_spreads_but_vl_required_deeper(self, engine5):
+        # with FPU, unvisited children already attract lanes at the root;
+        # the invariant worth pinning: VL never *reduces* spread
+        spread_no = self._first_iteration_leaves(engine5, 0.0)
+        spread_vl = self._first_iteration_leaves(engine5, 1.0)
+        assert spread_vl >= spread_no - 1
+
+
+class TestParallelModes:
+    def test_root_parallel_runs(self, engine5, rng):
+        cfg = dataclasses.replace(CFG5, parallelism="root", root_trees=4,
+                                  sims_per_move=64)
+        m = MCTS(engine5, cfg)
+        res = jax.jit(lambda s, k: m.search_root_parallel(s, k))(
+            engine5.init_state(), rng)
+        legal = engine5.legal_moves(engine5.init_state())
+        assert bool(legal[int(res.action)])
+        # merged visits are the sum over trees
+        assert float(res.root_visits.sum()) > 0
+
+    def test_leaf_parallel_counts(self, engine5, rng):
+        cfg = dataclasses.replace(CFG5, lanes=1, leaf_playouts=4,
+                                  sims_per_move=32)
+        m = MCTS(engine5, cfg)
+        res = jax.jit(lambda s, k: m.search(s, k))(engine5.init_state(), rng)
+        expected = 1 + m.iterations * 1 * 4
+        assert float(res.tree.visit[0]) == expected
+
+    def test_more_sims_beat_fewer(self, engine5):
+        """Sanity strength check (paper Fig. 4 direction): 8x sims should
+        not lose a small match to 1x."""
+        weak = dataclasses.replace(CFG5, lanes=1, sims_per_move=4,
+                                   max_nodes=64)
+        strong = dataclasses.replace(CFG5, lanes=4, sims_per_move=64,
+                                     max_nodes=256)
+        eng = GoEngine(5, komi=0.5)
+        res = match(eng, strong, weak, games=6, seed=7)
+        assert res.rate.rate >= 0.5
+
+
+class TestSelfplayHarness:
+    def test_double_resources(self):
+        d = double_resources(CFG5)
+        assert d.lanes == CFG5.lanes * 2
+        assert d.sims_per_move == CFG5.sims_per_move * 2
+
+    def test_play_game_terminates(self, engine5, rng):
+        m = MCTS(engine5, dataclasses.replace(CFG5, sims_per_move=8))
+        rec = jax.jit(lambda k: play_game(
+            engine5, m, m, k, jnp.bool_(True)))(rng)
+        assert int(rec.moves) > 0
+        assert int(rec.winner) in (-1, 0, 1)
+
+    def test_match_accounting(self, engine5):
+        cfg = dataclasses.replace(CFG5, sims_per_move=8, max_nodes=64)
+        res = match(engine5, cfg, cfg, games=4, seed=1)
+        assert res.a_wins + res.b_wins + res.draws == 4
+        assert res.rate.games == 4
+        assert 0.0 <= res.rate.lo <= res.rate.rate <= res.rate.hi <= 1.0
+
+
+class TestStats:
+    def test_heinz_interval_matches_paper_formula(self):
+        # w ± 1.96 sqrt(w(1-w)/n)
+        r = stats.win_rate(58, 42)
+        import math
+        w = 0.58
+        half = 1.96 * math.sqrt(w * (1 - w) / 100)
+        assert abs(r.rate - w) < 1e-12
+        assert abs(r.hi - (w + half)) < 1e-12
+        assert abs(r.lo - (w - half)) < 1e-12
+
+    def test_draws_count_half(self):
+        r = stats.win_rate(0, 0, draws=10)
+        assert r.rate == 0.5
+
+    def test_clipping(self):
+        r = stats.win_rate(10, 0)
+        assert r.hi <= 1.0 and r.lo >= 0.0
+
+    def test_games_for_margin(self):
+        n = stats.games_for_margin(0.05)
+        assert 380 <= n <= 390  # 1.96^2*0.25/0.0025 = 384.16
+
+
+class TestAffinity:
+    def test_compact_fills_first_devices(self):
+        a = affinity.lane_to_device("compact", 8, devices=4,
+                                    slots_per_device=4)
+        assert list(a) == [0, 0, 0, 0, 1, 1, 1, 1]
+        assert affinity.utilisation(a, 4) == 0.5
+
+    def test_scatter_round_robin(self):
+        a = affinity.lane_to_device("scatter", 8, devices=4)
+        assert list(a) == [0, 1, 2, 3, 0, 1, 2, 3]
+        assert affinity.utilisation(a, 4) == 1.0
+
+    def test_balanced_even_blocks(self):
+        a = affinity.lane_to_device("balanced", 8, devices=4)
+        assert list(a) == [0, 0, 1, 1, 2, 2, 3, 3]
+
+    def test_balanced_asymmetric_region(self):
+        # the paper's 122..183-thread region: some devices get 2, some 3
+        a = affinity.lane_to_device("balanced", 10, devices=4)
+        load = affinity.device_load(a, 4)
+        assert load.max() == 3 and load.min() >= 1
+        assert affinity.imbalance(a, 4) > 1.0
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError):
+            affinity.lane_to_device("weird", 8, 4)

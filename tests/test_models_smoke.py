@@ -1,0 +1,159 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finiteness; prefill<->decode consistency for the
+decode-capable families (this pins the SSD chunk-scan against the stepwise
+recurrence and the KV cache against the training attention)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import list_archs, skip_reason
+from repro.configs.reduced import reduced
+from repro.models import build_model
+
+ARCHS = [a for a in list_archs()]
+
+
+def tiny_batch(cfg, key, batch=2, seq=32):
+    ks = jax.random.split(key, 4)
+    b = {}
+    if cfg.family == "audio":
+        b["frontend"] = jax.random.normal(ks[0], (batch, seq, 1024),
+                                          jnp.bfloat16)
+        b["labels"] = jax.random.randint(ks[1], (batch, seq), 0,
+                                         cfg.vocab_size)
+        b["mask"] = jax.random.bernoulli(ks[2], 0.3, (batch, seq))
+        return b
+    text = seq - cfg.frontend_tokens if cfg.frontend_tokens else seq
+    b["tokens"] = jax.random.randint(ks[0], (batch, text), 0, cfg.vocab_size)
+    b["labels"] = jax.random.randint(ks[1], (batch, text), 0, cfg.vocab_size)
+    if cfg.frontend_tokens:
+        b["frontend"] = jax.random.normal(
+            ks[2], (batch, cfg.frontend_tokens, 1024), jnp.bfloat16)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestSmoke:
+    def test_forward_and_train_step(self, arch):
+        cfg = reduced(arch)
+        model = build_model(cfg)
+        key = jax.random.PRNGKey(0)
+        params = model.init(key)
+        batch = tiny_batch(cfg, jax.random.PRNGKey(1), batch=2,
+                           seq=32 + cfg.frontend_tokens)
+
+        def loss_fn(p):
+            l, m = model.loss(p, batch)
+            return l, m
+
+        (loss, metrics), grads = jax.jit(
+            jax.value_and_grad(loss_fn, has_aux=True))(params)
+        assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+        assert float(loss) > 0
+        # logits shape check
+        logits, aux = jax.jit(
+            lambda p: model.forward(p, batch.get("tokens"),
+                                    batch.get("frontend"),
+                                    batch.get("mask")))(params)
+        b = 2
+        s_total = (batch["frontend"].shape[1] if cfg.family == "audio"
+                   else batch["tokens"].shape[1] + model.prefix_tokens)
+        assert logits.shape == (b, s_total, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        # gradients flow to every leaf
+        gnorms = jax.tree.map(
+            lambda g: float(jnp.abs(g.astype(jnp.float32)).sum()), grads)
+        flat = jax.tree.leaves(gnorms)
+        assert all(np.isfinite(v) for v in flat)
+        nonzero = sum(v > 0 for v in flat)
+        assert nonzero >= len(flat) * 0.7, \
+            f"{arch}: only {nonzero}/{len(flat)} grads nonzero"
+
+    def test_prefill_decode_consistency(self, arch):
+        if skip_reason(arch, "decode_32k"):
+            pytest.skip(skip_reason(arch, "decode_32k"))
+        cfg = reduced(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        seq = 24
+        toks = jax.random.randint(jax.random.PRNGKey(2), (1, seq), 0,
+                                  cfg.vocab_size)
+        fe = (jax.random.normal(jax.random.PRNGKey(3),
+                                (1, cfg.frontend_tokens, 1024), jnp.bfloat16)
+              if cfg.frontend_tokens else None)
+
+        # ground truth: full forward over all tokens
+        full_logits, _ = jax.jit(
+            lambda p: model.forward(p, toks, fe))(params)
+
+        # prefill on the first seq-1 tokens, then one decode step
+        prefill_logits, cache = jax.jit(
+            lambda p: model.prefill(p, toks[:, : seq - 1], fe,
+                                    max_len=seq + 4))(params)
+        np.testing.assert_allclose(
+            np.asarray(prefill_logits[:, 0]),
+            np.asarray(full_logits[:, seq - 2 + model.prefix_tokens]),
+            rtol=2e-2, atol=2e-2)
+
+        step_logits, cache2 = jax.jit(
+            lambda p, c: model.decode_step(p, c, toks[:, seq - 1:]))(
+                params, cache)
+        np.testing.assert_allclose(
+            np.asarray(step_logits[:, 0]),
+            np.asarray(full_logits[:, seq - 1 + model.prefix_tokens]),
+            rtol=5e-2, atol=5e-2)
+        assert int(cache2.length) == int(cache.length) + 1
+
+    def test_param_count_close_to_analytic(self, arch):
+        from repro.models.layers import count_params
+        cfg = reduced(arch)
+        model = build_model(cfg)
+        actual = count_params(model.param_defs())
+        analytic = cfg.num_params()
+        # analytic formula ignores small bits (frontend proj, fuse norms...)
+        assert abs(actual - analytic) / max(analytic, 1) < 0.25, \
+            f"{arch}: actual {actual} vs analytic {analytic}"
+
+
+class TestFullConfigsAbstract:
+    """Full configs must *declare* cleanly (no allocation)."""
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_param_shapes_and_count(self, arch):
+        from repro.config import get_model_config
+        from repro.models.layers import count_params
+        cfg = get_model_config(arch)
+        model = build_model(cfg)
+        n = count_params(model.param_defs())
+        analytic = cfg.num_params()
+        assert abs(n - analytic) / analytic < 0.1, \
+            f"{arch}: declared {n/1e9:.2f}B vs analytic {analytic/1e9:.2f}B"
+
+    def test_published_param_totals(self):
+        """Sanity-pin the headline sizes of the named checkpoints."""
+        from repro.config import get_model_config
+        from repro.models.layers import count_params
+        from repro.models import build_model as bm
+        # NOTE: ranges pin the ASSIGNED specs (which are authoritative here),
+        # not the hf checkpoints — e.g. the assigned moonshot spec says 48L
+        # where the Moonlight-16B checkpoint has 27, so the assigned variant
+        # is ~28B total (still 3B active).
+        expect = {
+            "kimi-k2-1t-a32b": (0.9e12, 1.15e12),
+            "moonshot-v1-16b-a3b": (26e9, 30e9),
+            "glm4-9b": (8e9, 10.5e9),
+            "phi3-medium-14b": (12e9, 15e9),
+            "gemma2-9b": (8e9, 11e9),
+            "yi-6b": (5.5e9, 7e9),
+            "mamba2-2.7b": (2.4e9, 3.0e9),
+            "hubert-xlarge": (0.8e9, 1.1e9),
+            "hymba-1.5b": (1.2e9, 1.8e9),
+            "llava-next-mistral-7b": (6.5e9, 8e9),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = count_params(bm(get_model_config(arch)).param_defs())
+            assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}," \
+                                  f" {hi/1e9}]B"

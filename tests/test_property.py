@@ -1,0 +1,167 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import stats
+from repro.go import GoEngine, BLACK, WHITE
+
+SETTINGS = dict(max_examples=15, deadline=None,
+                suppress_health_check=list(hypothesis.HealthCheck))
+
+
+@st.composite
+def random_board(draw, size=5):
+    cells = draw(st.lists(st.sampled_from([0, 1, -1]),
+                          min_size=size * size, max_size=size * size))
+    return jnp.asarray(np.array(cells, np.int8))
+
+
+class TestGoProperties:
+    @settings(**SETTINGS)
+    @given(random_board())
+    def test_group_info_partitions_stones(self, board):
+        """Every stone belongs to exactly one group rooted at a stone of
+        the same colour; empty cells have no group."""
+        eng = GoEngine(5)
+        ids, libs = eng.group_info(board)
+        ids = np.asarray(ids)
+        b = np.asarray(board)
+        for p in range(25):
+            if b[p] == 0:
+                assert ids[p] == 25
+            else:
+                root = ids[p]
+                assert 0 <= root < 25
+                assert b[root] == b[p]          # root has the same colour
+                assert ids[root] == root        # root is canonical
+
+    @settings(**SETTINGS)
+    @given(random_board())
+    def test_liberties_bounded_and_consistent(self, board):
+        eng = GoEngine(5)
+        ids, libs = eng.group_info(board)
+        libs = np.asarray(libs)
+        b = np.asarray(board)
+        empty = int((b == 0).sum())
+        for p in range(25):
+            if b[p] != 0:
+                assert 0 <= libs[p] <= empty
+                # same group => same liberty count
+                same = np.asarray(ids) == np.asarray(ids)[p]
+                assert (libs[same] == libs[p]).all()
+
+    @settings(**SETTINGS)
+    @given(random_board())
+    def test_score_bounded(self, board):
+        eng = GoEngine(5)
+        s = float(eng.score(board))
+        assert -25.0 <= s <= 25.0
+
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_random_games_keep_invariants(self, seed):
+        """A full random playout never leaves a zero-liberty group on the
+        board and always terminates with a legal score."""
+        eng = GoEngine(5, komi=0.5)
+        final = eng.random_playout(eng.init_state(),
+                                   jax.random.PRNGKey(seed))
+        assert bool(final.done)
+        _, libs = eng.group_info(final.board)
+        stones = np.asarray(final.board) != 0
+        assert (np.asarray(libs)[stones] > 0).all()
+        assert int(final.move_count) <= eng.max_moves
+
+    @settings(**SETTINGS)
+    @given(st.integers(0, 2 ** 31 - 1), st.integers(1, 24))
+    def test_play_flips_player_and_grows_or_keeps_stones(self, seed, moves):
+        eng = GoEngine(5, komi=0.5)
+        st_ = eng.init_state()
+        key = jax.random.PRNGKey(seed)
+        for _ in range(moves):
+            if bool(st_.done):
+                break
+            prev_player = int(st_.to_play)
+            key, sub = jax.random.split(key)
+            st_ = eng.playout_step(st_, sub)
+            assert int(st_.to_play) == -prev_player
+
+
+class TestStatsProperties:
+    @settings(**SETTINGS)
+    @given(st.integers(0, 200), st.integers(0, 200))
+    def test_ci_contains_point_and_shrinks(self, w, l):
+        r = stats.win_rate(w, l)
+        assert r.lo <= r.rate <= r.hi
+        if w + l > 0:
+            r2 = stats.win_rate(w * 4, l * 4)
+            assert (r2.hi - r2.lo) <= (r.hi - r.lo) + 1e-12
+
+    @settings(**SETTINGS)
+    @given(st.integers(1, 100))
+    def test_symmetry(self, n):
+        a = stats.win_rate(n, n)
+        assert abs(a.rate - 0.5) < 1e-12
+        assert abs((a.hi - 0.5) - (0.5 - a.lo)) < 1e-12
+
+
+class TestConfigProperties:
+    @settings(**SETTINGS)
+    @given(st.integers(1, 64), st.integers(1, 8), st.integers(1, 8))
+    def test_override_roundtrip(self, lanes, a, b):
+        from repro.config import MCTSConfig, apply_overrides
+        cfg = MCTSConfig()
+        out = apply_overrides(cfg, {"lanes": str(lanes),
+                                    "sims_per_move": str(a * b)})
+        assert out.lanes == lanes and out.sims_per_move == a * b
+        assert cfg.lanes == 8                 # original untouched (frozen)
+
+    @settings(**SETTINGS)
+    @given(st.sampled_from(["compact", "balanced", "scatter"]),
+           st.integers(1, 256), st.integers(1, 64))
+    def test_affinity_total_conservation(self, policy, lanes, devices):
+        from repro.core import affinity
+        a = affinity.lane_to_device(policy, lanes, devices)
+        load = affinity.device_load(a, devices)
+        assert load.sum() == lanes            # every lane placed exactly once
+        assert (a >= 0).all() and (a < devices).all()
+
+
+class TestHloCostProperties:
+    @settings(**SETTINGS)
+    @given(st.integers(1, 64), st.integers(1, 64), st.integers(1, 64),
+           st.integers(1, 12))
+    def test_dot_flops_formula(self, m, k, n, trips):
+        """Synthetic HLO: scan of a [m,k]x[k,n] dot must cost 2mkn*trips."""
+        from repro.analysis.hlo import analyze
+        hlo = f"""
+HloModule test
+
+%body (p: (s32[], f32[{m},{k}])) -> (s32[], f32[{m},{k}]) {{
+  %p = (s32[], f32[{m},{k}]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[{m},{k}] get-tuple-element(%p), index=1
+  %w = f32[{k},{n}] constant(0)
+  %d = f32[{m},{n}] dot(%x, %w), lhs_contracting_dims={{1}}, rhs_contracting_dims={{0}}
+  ROOT %t = (s32[], f32[{m},{k}]) tuple(%i, %x)
+}}
+
+%cond (p: (s32[], f32[{m},{k}])) -> pred[] {{
+  %p = (s32[], f32[{m},{k}]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}}
+
+ENTRY %main (a: f32[{m},{k}]) -> (s32[], f32[{m},{k}]) {{
+  %a = f32[{m},{k}] parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[{m},{k}]) tuple(%z, %a)
+  ROOT %w0 = (s32[], f32[{m},{k}]) while(%t0), condition=%cond, body=%body, backend_config={{"known_trip_count":{{"n":"{trips}"}}}}
+}}
+"""
+        res = analyze(hlo)
+        assert res["flops"] == 2.0 * m * k * n * trips
