@@ -1,0 +1,190 @@
+"""Arena self-play throughput benchmark -> BENCH_selfplay.json.
+
+Measures steady-state self-play throughput (sims/sec, moves/sec,
+games/sec) of the batched arena (core/arena.py) against the seed match
+loop (vmapped double-search ``play_game``, rebuilt in ``time_seed_path``
+below) on the 5x5 reference config, then sweeps ``(games, lanes,
+parallelism)``.  Both paths are warmed (compile excluded) — the metric is
+sustained match throughput, what the scaling experiments actually spend.
+
+"Useful" sims are the mover's: per recorded move, the player to move
+spent ``sims_per_move`` playouts.  The seed path *computes* both players'
+searches per move but only the mover's counts — that discarded half is
+exactly what the arena reclaims.
+
+    PYTHONPATH=src python benchmarks/bench_arena.py [--out BENCH_selfplay.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+if __package__ in (None, ""):                    # `python benchmarks/...`
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.config import MCTSConfig
+from repro.core.arena import Arena
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources, play_game
+from repro.go import GoEngine
+
+BOARD = 5
+KOMI = 0.5
+MOVE_CAP = 30
+MAX_NODES = 128
+SCHEMA = "bench_selfplay/v1"
+
+
+def _useful_sims(total_moves: float, sims_a: int, sims_b: int) -> float:
+    """Movers alternate, so each path charges the same per-move average."""
+    return total_moves * (sims_a + sims_b) / 2.0
+
+
+def time_seed_path(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
+                   games: int, seed: int) -> dict:
+    """Seed ``match`` loop with a persistent jit so compile is excluded."""
+    player_a = MCTS(engine, cfg_a)
+    player_b = MCTS(engine, cfg_b)
+
+    @jax.jit
+    def run_batch(keys, a_black):
+        return jax.vmap(lambda k, ab: play_game(
+            engine, player_a, player_b, k, ab, MOVE_CAP))(keys, a_black)
+
+    def one_match(s):
+        keys = jax.random.split(jax.random.PRNGKey(s), games)
+        a_black = (jnp.arange(games) % 2) == 0
+        rec = run_batch(keys, a_black)
+        jax.block_until_ready(rec)
+        return rec
+
+    one_match(seed + 1000)                       # warm / compile
+    t0 = time.perf_counter()
+    rec = one_match(seed)
+    wall = time.perf_counter() - t0
+    moves = float(rec.moves.sum())
+    return {"wall_s": wall, "moves": moves,
+            "sims": _useful_sims(moves, cfg_a.sims_per_move,
+                                 cfg_b.sims_per_move)}
+
+
+def time_arena_path(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
+                    games: int, seed: int, slots: int = 0) -> dict:
+    player_a = MCTS(engine, cfg_a)
+    player_b = MCTS(engine, cfg_b)
+    slots = slots or games
+    slots = max(2, slots + (slots % 2))          # arena needs an even count
+    arena = Arena(engine, player_a, player_b, slots=slots,
+                  max_moves=MOVE_CAP)
+    arena.play_games(games, seed=seed + 1000)    # warm / compile
+    t0 = time.perf_counter()
+    recs = arena.play_games(games, seed=seed)
+    wall = time.perf_counter() - t0
+    moves = float(sum(r.moves for r in recs))
+    return {"wall_s": wall, "moves": moves, "games": len(recs),
+            "sims": _useful_sims(moves, cfg_a.sims_per_move,
+                                 cfg_b.sims_per_move)}
+
+
+def run_reference(games: int, seed: int) -> dict:
+    """The acceptance cell: 2n-vs-n on the 5x5 reference config."""
+    engine = GoEngine(BOARD, komi=KOMI)
+    base = MCTSConfig(board_size=BOARD, lanes=2, sims_per_move=16,
+                      max_nodes=MAX_NODES)
+    cfg_a, cfg_b = double_resources(base), base
+    ref = time_seed_path(engine, cfg_a, cfg_b, games, seed)
+    arena = time_arena_path(engine, cfg_a, cfg_b, games, seed)
+    out = {
+        "board": BOARD, "games": games, "lanes": base.lanes,
+        "sims_per_move": base.sims_per_move, "move_cap": MOVE_CAP,
+        "seed_wall_s": ref["wall_s"],
+        "seed_sims_per_sec": ref["sims"] / ref["wall_s"],
+        "arena_wall_s": arena["wall_s"],
+        "arena_sims_per_sec": arena["sims"] / arena["wall_s"],
+        "arena_moves_per_sec": arena["moves"] / arena["wall_s"],
+        "arena_games_per_sec": arena["games"] / arena["wall_s"],
+    }
+    out["speedup"] = out["arena_sims_per_sec"] / out["seed_sims_per_sec"]
+    return out
+
+
+def run_sweep(games_points, lanes_points, modes, seed: int) -> list:
+    engine = GoEngine(BOARD, komi=KOMI)
+    rows = []
+    for games in games_points:
+        for lanes in lanes_points:
+            for mode in modes:
+                cfg = MCTSConfig(board_size=BOARD, lanes=lanes,
+                                 sims_per_move=8 * lanes,
+                                 max_nodes=MAX_NODES, parallelism=mode)
+                r = time_arena_path(engine, cfg, cfg, games, seed)
+                row = {
+                    "games": games, "lanes": lanes, "parallelism": mode,
+                    "sims_per_move": cfg.sims_per_move,
+                    "wall_s": r["wall_s"],
+                    "sims_per_sec": r["sims"] / r["wall_s"],
+                    "moves_per_sec": r["moves"] / r["wall_s"],
+                    "games_per_sec": r["games"] / r["wall_s"],
+                }
+                rows.append(row)
+                csv_row(f"arena_g{games}_n{lanes}_{mode}",
+                        r["wall_s"] / games,
+                        f"sims/s={row['sims_per_sec']:.0f};"
+                        f"moves/s={row['moves_per_sec']:.1f}")
+    return rows
+
+
+def run() -> None:
+    """benchmarks.run entry: reference cell + small sweep, default output."""
+    ref = run_reference(games=8, seed=0)
+    csv_row("arena_reference_speedup", ref["arena_wall_s"] / 8,
+            f"speedup={ref['speedup']:.2f}")
+    sweep = run_sweep((8,), (1, 2), ("tree",), seed=0)
+    payload = {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
+               "move_cap": MOVE_CAP, "max_nodes": MAX_NODES,
+               "reference": ref, "sweep": sweep}
+    with open("BENCH_selfplay.json", "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_selfplay.json")
+    ap.add_argument("--games", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="bigger (games, lanes, mode) sweep")
+    args = ap.parse_args()
+
+    print("# arena vs seed self-play throughput "
+          f"({BOARD}x{BOARD}, move cap {MOVE_CAP})")
+    ref = run_reference(args.games, args.seed)
+    print(f"reference 2n-vs-n: seed {ref['seed_sims_per_sec']:.0f} sims/s  "
+          f"arena {ref['arena_sims_per_sec']:.0f} sims/s  "
+          f"speedup {ref['speedup']:.2f}x")
+    csv_row("arena_reference_speedup", ref["arena_wall_s"] / args.games,
+            f"speedup={ref['speedup']:.2f}")
+
+    if args.full:
+        sweep = run_sweep((4, 8, 16), (1, 2, 4), ("tree", "leaf"), args.seed)
+    else:
+        sweep = run_sweep((args.games,), (1, 2, 4), ("tree",), args.seed)
+
+    payload = {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
+               "move_cap": MOVE_CAP, "max_nodes": MAX_NODES,
+               "reference": ref, "sweep": sweep}
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ def main() -> None:
         ("fig_selfplay", "Figs 4/5/11: effective speedup"),
         ("fig_modes", "Related work: tree vs root vs leaf parallelism"),
         ("fig_roofline", "Roofline table from the dry-run"),
+        ("bench_arena", "Arena self-play throughput (BENCH_selfplay.json)"),
     ]
     print("name,us_per_call,derived")
     for mod_name, desc in figures:

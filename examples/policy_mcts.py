@@ -8,7 +8,6 @@ tree parallelisation (lanes + virtual loss) now amortises policy batches.
 
     PYTHONPATH=src python examples/policy_mcts.py
 """
-import dataclasses
 import time
 
 import jax
@@ -16,7 +15,6 @@ import jax.numpy as jnp
 
 from repro.config import AttnConfig, MCTSConfig, ModelConfig
 from repro.core.mcts import MCTS
-from repro.core.tree import uniform_prior
 from repro.go import GoEngine
 
 BOARD = 5

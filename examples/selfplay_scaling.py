@@ -19,6 +19,8 @@ def main() -> None:
     ap.add_argument("--games", type=int, default=6)
     ap.add_argument("--sims-per-lane", type=int, default=8)
     ap.add_argument("--lanes", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--slots", type=int, default=0,
+                    help="concurrent arena games (0 = one slot per game)")
     args = ap.parse_args()
 
     eng = GoEngine(args.board, komi=0.5)
@@ -31,7 +33,8 @@ def main() -> None:
                          max_nodes=256)
         t0 = time.time()
         res = effective_speedup_point(eng, cfg, games=args.games,
-                                      seed=n, max_moves=30)
+                                      seed=n, max_moves=30,
+                                      batch=args.slots)
         dt = (time.time() - t0) / args.games
         r = res.rate
         print(f"{n:5d}  {r.rate * 100:10.1f}%  "

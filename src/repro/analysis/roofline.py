@@ -16,7 +16,7 @@ MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/redundancy waste.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.config import ModelConfig, ShapeConfig
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16

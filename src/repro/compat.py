@@ -1,0 +1,48 @@
+"""Cross-version JAX API shims.
+
+The repo targets the new-style ``jax.shard_map`` surface (``check_vma`` /
+``axis_names``).  Older JAX releases (<= 0.4.x) only ship
+``jax.experimental.shard_map.shard_map`` whose equivalent knobs are
+``check_rep`` and ``auto`` (the *complement* of ``axis_names``).  Every
+shard_map call in the codebase goes through :func:`shard_map` below so the
+version split lives in exactly one place.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Set
+
+import jax
+
+# New-style shard_map supports partial-auto (``axis_names`` manual subsets).
+# The old experimental API has an ``auto=`` argument, but its XLA lowering
+# path crashes on non-trivial programs (manual-subgroup check failures), so
+# callers needing partial-auto must provide a full-manual fallback.
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f: Callable, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: Optional[bool] = None,
+              axis_names: Optional[Set[str]] = None) -> Callable:
+    """``jax.shard_map`` with new-style kwargs on any supported JAX.
+
+    ``axis_names`` — axes the body is *manual* over (new API).  On old JAX
+    this becomes ``auto = mesh.axis_names - axis_names``.  ``check_vma``
+    maps to the old ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

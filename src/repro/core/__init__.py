@@ -2,8 +2,11 @@
 virtual loss, lock-free-analogue scatter backups) + the self-play
 effective-speedup experimental harness, TPU-native (see DESIGN.md §2)."""
 from repro.core.mcts import MCTS, SearchResult, make_mcts
-from repro.core.tree import Tree, init_tree, root_action_visits
+from repro.core.tree import Tree, init_tree, init_tree_batch, \
+    root_action_visits
+from repro.core.arena import Arena, GameResult
 from repro.core import stats, affinity, selfplay
 
 __all__ = ["MCTS", "SearchResult", "make_mcts", "Tree", "init_tree",
-           "root_action_visits", "stats", "affinity", "selfplay"]
+           "init_tree_batch", "root_action_visits", "Arena", "GameResult",
+           "stats", "affinity", "selfplay"]

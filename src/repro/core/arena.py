@@ -1,0 +1,226 @@
+"""Batched self-play arena: G concurrent games, exactly one search per move.
+
+The seed harness (``selfplay.play_game``) ran **both** players' full MCTS
+searches every move and discarded the non-mover's — half the compute wasted
+— and vmapped whole games, so one long game stalled its entire batch.  The
+arena restructures the work loop (the Xeon Phi papers' lesson: throughput
+at scale comes from the loop shape, not more lanes):
+
+* All G games advance **one move per step** through a single jitted step
+  function.  Because every step plays exactly one move in every slot, all
+  slots stay in colour lockstep: at even steps Black is to move everywhere,
+  at odd steps White.
+* Slots are split in two static half-batches.  The first half hosts games
+  where player A owns Black, the second half games where B owns Black (the
+  host refill rule below preserves this under refills).  A parity-indexed
+  roll-by-half — an involution, so the same gather un-permutes — moves the
+  A-to-move games to the front *branch-free*: per step there is exactly one
+  ``player_a.search_batch`` over half the slots and one
+  ``player_b.search_batch`` over the other half.  One search per move, with
+  each player keeping its own static config (2n lanes vs n lanes trace as
+  different programs).
+* Finished games are masked at the host: their slot is refilled with a
+  fresh game from the pending queue, so stragglers never idle the batch.
+  A refilled game starts with Black to move; to keep the half-batch
+  invariant the refill assigns Black to whichever player owns that half at
+  the next (even-parity-equivalent) step.
+
+RNG is oracle-compatible: every slot carries its own key chain and splits
+``key -> (key, ka, kb)`` once per step exactly like ``play_game``, so a
+game seeded with key K plays the identical move sequence in the arena and
+in the sequential oracle — the equivalence tests pin this.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mcts import MCTS
+from repro.go.board import GoEngine, GoState
+
+
+class SlotState(NamedTuple):
+    """Device-resident arena state, batched over the G slots."""
+    states: GoState     # game states, leading axis G
+    keys: jax.Array     # u32[G, 2] per-game RNG chains
+
+
+class StepRecord(NamedTuple):
+    """Per-step observables consumed by the host bookkeeping."""
+    done: jax.Array     # bool[G]  game over after this step
+    winner: jax.Array   # f32[G]   engine.result of the post-step state
+    action: jax.Array   # i32[G]   move just played
+    nodes: jax.Array    # i32[G]   mover's final search-tree size
+
+
+class GameResult(NamedTuple):
+    """One finished game (host-side scalars)."""
+    winner: float       # +1 black / -1 white / 0 draw
+    moves: int
+    tree_nodes: int     # mover's tree size on the final move (Fig. 12)
+    a_is_black: bool
+
+
+class Arena:
+    """G-slot arena stepping two MCTS players through concurrent games."""
+
+    def __init__(self, engine: GoEngine, player_a: MCTS, player_b: MCTS,
+                 slots: int, max_moves: Optional[int] = None):
+        if slots < 2 or slots % 2:
+            raise ValueError(f"slots must be even and >= 2, got {slots}")
+        self.engine = engine
+        self.player_a = player_a
+        self.player_b = player_b
+        self.slots = slots
+        self.max_moves = max_moves or engine.max_moves
+        self._step = jax.jit(self._step_impl)
+        self._refill = jax.jit(self._refill_impl)
+
+    # ------------------------------------------------------------- device side
+
+    def _step_impl(self, slot: SlotState, parity: jax.Array):
+        """Advance every slot one move; one search per slot.
+
+        ``parity`` is the global move parity (0 => Black to move).  The
+        roll-by-half gather puts A-to-move slots first; since G = 2h the
+        same gather inverts itself after the searches.
+        """
+        G, h = self.slots, self.slots // 2
+        shift = jnp.where(parity % 2 == 0, 0, h)
+        idx = (jnp.arange(G, dtype=jnp.int32) + shift) % G   # involution
+
+        st = jax.tree.map(lambda x: x[idx], slot.states)
+        k3 = jax.vmap(lambda k: jax.random.split(k, 3))(slot.keys[idx])
+        new_keys, ka, kb = k3[:, 0], k3[:, 1], k3[:, 2]
+
+        head = jax.tree.map(lambda x: x[:h], st)
+        tail = jax.tree.map(lambda x: x[h:], st)
+        res_a = self.player_a.search_batch(head, ka[:h])
+        res_b = self.player_b.search_batch(tail, kb[h:])
+        actions = jnp.concatenate([res_a.action, res_b.action])
+        nodes = jnp.concatenate([res_a.tree.size, res_b.tree.size])
+
+        new_st = jax.vmap(self.engine.play)(st, actions)
+
+        # un-permute with the same involution gather
+        new_st = jax.tree.map(lambda x: x[idx], new_st)
+        new_keys = new_keys[idx]
+        actions = actions[idx]
+        nodes = nodes[idx]
+
+        winner = jax.vmap(self.engine.result)(new_st)
+        rec = StepRecord(done=new_st.done, winner=winner, action=actions,
+                         nodes=nodes)
+        return SlotState(states=new_st, keys=new_keys), rec
+
+    def _refill_impl(self, slot: SlotState, mask: jax.Array,
+                     fresh_keys: jax.Array) -> SlotState:
+        """Reset masked slots to fresh games with the given keys."""
+        init = self.engine.init_state()
+
+        def reset_leaf(buf, iv):
+            m = mask.reshape((self.slots,) + (1,) * (buf.ndim - 1))
+            return jnp.where(m, iv, buf)
+
+        states = jax.tree.map(reset_leaf, slot.states, init)
+        keys = jnp.where(mask[:, None], fresh_keys, slot.keys)
+        return SlotState(states=states, keys=keys)
+
+    # --------------------------------------------------------------- host side
+
+    def _initial_slots(self, keys: jax.Array) -> SlotState:
+        init = self.engine.init_state()
+        states = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.slots,) + jnp.shape(x)), init)
+        return SlotState(states=states, keys=keys)
+
+    def play_games(self, games: int, seed: int = 0,
+                   game_keys: Optional[jax.Array] = None) -> List[GameResult]:
+        """Play ``games`` full games, refilling finished slots from a
+        pending queue until the queue drains.
+
+        A game admitted to slot ``s`` when the *next* step has parity ``p``
+        must give Black to the player owning that (slot-half, parity) cell
+        — that keeps the half-batch dispatch invariant.  Colour balance is
+        the paper's (alternating colours, at most ±1 imbalance): admission
+        is capped per colour, so a slot whose forced colour is exhausted
+        idles one step and admits at the opposite parity instead.
+
+        ``game_keys`` optionally fixes each game's root RNG key (u32[games,
+        2], admission order) — used by the oracle-equivalence tests;
+        otherwise keys come from a host-side chain of ``seed``.
+        """
+        G, h = self.slots, self.slots // 2
+        if game_keys is not None:
+            game_keys = np.asarray(game_keys, np.uint32)
+            if game_keys.shape != (games, 2):
+                raise ValueError(f"game_keys must be [games, 2], got "
+                                 f"{game_keys.shape}")
+        host_rng = np.random.default_rng(seed)
+
+        def draw_key(i: int) -> np.ndarray:
+            if game_keys is not None:
+                return game_keys[i]
+            return host_rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
+
+        game_id = np.full(G, -1)            # -1: dummy slot (result discarded)
+        a_black = np.array([s < h for s in range(G)])
+        nmoves = np.zeros(G, np.int64)
+        last_nodes = np.zeros(G, np.int64)
+        colour_cap = (games + 1) // 2        # per-colour admission budget
+        colour_count = {True: 0, False: 0}
+        next_game = 0
+        keys0 = np.stack([host_rng.integers(0, 2 ** 32, size=(2,),
+                                            dtype=np.uint32)
+                          for _ in range(G)])
+        slot = self._initial_slots(jnp.asarray(keys0))
+
+        results: List[Optional[GameResult]] = [None] * games
+        finished = 0
+        parity = 0
+        while finished < games:
+            # admit pending games into empty slots whose forced colour
+            # still has budget; a blocked slot waits for the parity flip
+            refill_mask = np.zeros(G, bool)
+            fresh = np.zeros((G, 2), np.uint32)
+            for s in range(G):
+                if game_id[s] >= 0 or next_game >= games:
+                    continue
+                colour = (s < h) == (parity % 2 == 0)
+                if colour_count[colour] >= colour_cap:
+                    continue
+                colour_count[colour] += 1
+                game_id[s] = next_game
+                a_black[s] = colour
+                nmoves[s] = 0
+                last_nodes[s] = 0
+                fresh[s] = draw_key(next_game)
+                refill_mask[s] = True
+                next_game += 1
+            if refill_mask.any():
+                slot = self._refill(slot, jnp.asarray(refill_mask),
+                                    jnp.asarray(fresh))
+
+            slot, rec = self._step(slot, jnp.int32(parity))
+            parity ^= 1
+            done = np.asarray(rec.done)
+            winner = np.asarray(rec.winner)
+            nodes = np.asarray(rec.nodes)
+
+            for s in range(G):
+                if game_id[s] < 0:
+                    continue
+                nmoves[s] += 1
+                last_nodes[s] = int(nodes[s])
+                if done[s] or nmoves[s] >= self.max_moves:
+                    results[game_id[s]] = GameResult(
+                        winner=float(winner[s]), moves=int(nmoves[s]),
+                        tree_nodes=int(last_nodes[s]),
+                        a_is_black=bool(a_black[s]))
+                    finished += 1
+                    game_id[s] = -1
+        assert all(r is not None for r in results)
+        return results  # type: ignore[return-value]

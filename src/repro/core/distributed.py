@@ -10,12 +10,12 @@ chips.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.config import MCTSConfig
 from repro.core.mcts import MCTS
 from repro.go.board import GoEngine, GoState
@@ -49,7 +49,7 @@ def distributed_best_move(engine: GoEngine, cfg: MCTSConfig, mesh: Mesh,
     key_spec = P(axis)
     rep = P()
 
-    fn = jax.shard_map(
+    fn = shard_map(
         sharded, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: rep, _state_spec(engine)), key_spec),
         out_specs=rep,

@@ -22,7 +22,7 @@ analogue and ``lanes`` the thread count, so ``sims/move = iterations x lanes``.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -219,6 +219,17 @@ class MCTS:
         action = jnp.where(masked[action] > 0, action, fallback)
         return SearchResult(tree=t, action=action, root_visits=visits,
                             root_values=tree_lib.root_action_values(t))
+
+    def search_batch(self, roots: GoState, rngs: jax.Array) -> SearchResult:
+        """Batched move search: one independent tree per game.
+
+        ``roots`` is a ``GoState`` batched over a leading game axis and
+        ``rngs`` is ``u32[G, 2]`` — per-game RNG so any game's search is
+        bit-identical to an unbatched :meth:`search` with the same key.
+        This is the arena's hot path (core/arena.py): all G trees advance
+        one full move search as a single vmapped program.
+        """
+        return jax.vmap(self.search)(roots, rngs)
 
     def search_root_parallel(self, root: GoState, rng) -> SearchResult:
         """Root parallelism: ``root_trees`` independent searches, vote merge."""

@@ -8,11 +8,16 @@ resources (1x # of threads) are compared."
 alternating colours (the paper enables alternating player colour), scores the
 match with the Heinz 95% CI, and is the backend of ``benchmarks/fig_selfplay``
 (Figs. 4, 5, 9, 11) and ``launch/selfplay.py``.
+
+``match`` runs on the batched game arena (core/arena.py): one search per
+move, finished slots refilled from a pending queue.  ``play_game`` keeps
+the seed's sequential double-search semantics as the correctness oracle
+(tests/test_arena.py) and the loop ``benchmarks/bench_arena.py`` times as
+the throughput baseline.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -21,7 +26,7 @@ import jax.numpy as jnp
 from repro.config import MCTSConfig
 from repro.core.mcts import MCTS
 from repro.core import stats
-from repro.go.board import BLACK, GoEngine, GoState
+from repro.go.board import BLACK, GoEngine
 
 
 class GameRecord(NamedTuple):
@@ -39,7 +44,12 @@ def double_resources(cfg: MCTSConfig) -> MCTSConfig:
 def play_game(engine: GoEngine, player_a: MCTS, player_b: MCTS,
               rng: jax.Array, a_is_black: jax.Array,
               max_moves: Optional[int] = None) -> GameRecord:
-    """One full game, A vs B; jit/vmap-safe."""
+    """One full game, A vs B; jit/vmap-safe.
+
+    Oracle semantics: both players search every move and the non-mover's
+    result is discarded.  The arena path plays the identical game (same
+    per-move ``key -> (key, ka, kb)`` split) with one search per move.
+    """
     cap = max_moves or engine.max_moves
 
     def cond(carry):
@@ -76,35 +86,26 @@ class MatchResult(NamedTuple):
 def match(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
           games: int, seed: int = 0, max_moves: Optional[int] = None,
           batch: int = 0, **mcts_kw) -> MatchResult:
-    """Play ``games`` games with alternating colours; batched via vmap."""
+    """Play ``games`` games on the batched arena, colours balanced to ±1
+    (the paper's alternating-colours methodology).
+
+    ``batch`` bounds the number of concurrent arena slots (default: one
+    slot per game, the seed behaviour); finished slots are refilled from
+    the pending queue so long games never stall the rest of the match.
+    """
+    from repro.core.arena import Arena
+
     player_a = MCTS(engine, cfg_a, **mcts_kw)
     player_b = MCTS(engine, cfg_b, **mcts_kw)
-    batch = batch or games
-
-    @jax.jit
-    def run_batch(keys, a_black):
-        return jax.vmap(lambda k, ab: play_game(
-            engine, player_a, player_b, k, ab, max_moves))(keys, a_black)
-
-    key = jax.random.PRNGKey(seed)
-    winners, lengths, nodes, colors = [], [], [], []
-    done = 0
-    while done < games:
-        n = min(batch, games - done)
-        key, sub = jax.random.split(key)
-        keys = jax.random.split(sub, n)
-        a_black = (jnp.arange(done, done + n) % 2) == 0   # alternate colours
-        rec = run_batch(keys, a_black)
-        winners.append(jax.device_get(rec.winner))
-        lengths.append(jax.device_get(rec.moves))
-        nodes.append(jax.device_get(rec.tree_nodes))
-        colors.append(jax.device_get(a_black))
-        done += n
+    slots = batch or games
+    slots = max(2, slots + (slots % 2))          # arena needs an even count
+    arena = Arena(engine, player_a, player_b, slots=slots,
+                  max_moves=max_moves)
+    recs = arena.play_games(games, seed=seed)
 
     import numpy as np
-    w = np.concatenate(winners)
-    c = np.concatenate(colors)
-    a_sign = np.where(c, 1, -1)
+    w = np.array([r.winner for r in recs])
+    a_sign = np.array([1.0 if r.a_is_black else -1.0 for r in recs])
     a_res = w * a_sign                     # +1 = A won
     a_wins = int((a_res > 0).sum())
     b_wins = int((a_res < 0).sum())
@@ -112,8 +113,8 @@ def match(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
     return MatchResult(
         a_wins=a_wins, b_wins=b_wins, draws=draws,
         rate=stats.win_rate(a_wins, b_wins, draws),
-        mean_moves=float(np.concatenate(lengths).mean()),
-        mean_tree_nodes=float(np.concatenate(nodes).mean()),
+        mean_moves=float(np.mean([r.moves for r in recs])),
+        mean_tree_nodes=float(np.mean([r.tree_nodes for r in recs])),
     )
 
 

@@ -64,6 +64,20 @@ def init_tree(engine: GoEngine, root: GoState, max_nodes: int,
     )
 
 
+def init_tree_batch(engine: GoEngine, roots: GoState, max_nodes: int,
+                    root_priors: jax.Array | None = None) -> Tree:
+    """Batch of independent arenas, one per leading-axis root state.
+
+    The per-game counterpart of :func:`init_tree` used by batched search
+    (``MCTS.search_batch``) and the self-play arena: every game gets its own
+    ``max_nodes`` arena, stacked on a leading game axis.
+    """
+    if root_priors is None:
+        return jax.vmap(lambda r: init_tree(engine, r, max_nodes))(roots)
+    return jax.vmap(lambda r, p: init_tree(engine, r, max_nodes, p))(
+        roots, root_priors)
+
+
 def uniform_prior(legal: jax.Array) -> jax.Array:
     m = legal.astype(jnp.float32)
     return m / jnp.maximum(m.sum(-1, keepdims=True), 1.0)

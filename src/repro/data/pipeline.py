@@ -18,10 +18,9 @@ import queue
 import threading
 from typing import Callable, Dict, Iterator, Optional
 
-import jax
 import numpy as np
 
-from repro.config import ModelConfig, ShapeConfig
+from repro.config import ModelConfig
 
 
 class SyntheticLM:

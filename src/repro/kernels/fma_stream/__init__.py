@@ -1,1 +1,3 @@
 from repro.kernels.fma_stream.ops import fma_stream
+
+__all__ = ["fma_stream"]

@@ -1,1 +1,3 @@
 from repro.kernels.uct_select.ops import uct_scores
+
+__all__ = ["uct_scores"]

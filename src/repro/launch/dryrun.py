@@ -22,7 +22,6 @@ so the sweep is resumable.  Usage:
     python -m repro.launch.dryrun --arch fuego9         # the MCTS app cell
 """
 import argparse
-import dataclasses
 import json
 import time
 import traceback

@@ -1,10 +1,12 @@
 """Self-play launcher: the paper's experiment as a CLI.
 
 Runs the effective-speedup match (2n lanes vs n lanes) for one point of
-Figs. 4/5/11, or a full sweep.
+Figs. 4/5/11 on the batched game arena (core/arena.py): one search per
+move, ``--arena-slots`` concurrent games with finished slots refilled
+from the pending queue.
 
     PYTHONPATH=src python -m repro.launch.selfplay --board 5 --lanes 2 \
-        --sims 32 --games 8
+        --sims 32 --games 8 --arena-slots 4
 """
 from __future__ import annotations
 
@@ -31,6 +33,10 @@ def main() -> None:
     ap.add_argument("--affinity", default="compact")
     ap.add_argument("--virtual-loss", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--arena-slots", type=int, default=0,
+                    help="concurrent arena games (0 = one slot per game)")
+    ap.add_argument("--max-moves", type=int, default=0,
+                    help="per-game move cap (0 = engine default)")
     args = ap.parse_args()
 
     eng = GoEngine(args.board, args.komi)
@@ -40,14 +46,18 @@ def main() -> None:
                      affinity=args.affinity, virtual_loss=args.virtual_loss)
     t0 = time.time()
     res = effective_speedup_point(eng, cfg, games=args.games,
-                                  seed=args.seed)
+                                  seed=args.seed,
+                                  batch=args.arena_slots,
+                                  max_moves=args.max_moves or None)
     dt = time.time() - t0
+    moves = res.mean_moves * args.games
     print(f"board {args.board}x{args.board}  {2 * args.lanes} vs "
           f"{args.lanes} lanes  {args.sims} sims/move")
     print(f"  2x player win rate: {res.rate}")
     print(f"  games {res.a_wins}W/{res.b_wins}L/{res.draws}D  "
           f"mean length {res.mean_moves:.1f}  "
-          f"mean tree {res.mean_tree_nodes:.0f} nodes  {dt:.1f}s")
+          f"mean tree {res.mean_tree_nodes:.0f} nodes  {dt:.1f}s  "
+          f"({moves / dt:.1f} moves/s)")
 
 
 if __name__ == "__main__":

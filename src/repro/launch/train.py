@@ -16,14 +16,13 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt import AsyncCheckpointer, latest_step, restore_checkpoint
 from repro.config import TrainConfig, get_model_config
 from repro.configs.reduced import reduce_config
 from repro.data import Prefetcher, SyntheticLM
 from repro.launch.mesh import make_mesh
-from repro.models import build_model, param_shardings
+from repro.models import build_model
 from repro.models import sharding as shlib
 from repro.runtime import Heartbeat, PreemptionHandler
 from repro.training import init_train_state, make_train_step

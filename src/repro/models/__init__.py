@@ -4,7 +4,7 @@ stand-ins (weak-type-correct, shardable, zero allocation) the multi-pod
 dry-run lowers against."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

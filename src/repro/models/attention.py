@@ -18,15 +18,14 @@ Never repeats KV heads in memory: queries reshape to [B, Hkv, G, S, D].
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models import sharding
-from repro.models.layers import softcap as apply_softcap
 
 NEG = -1e30
 
@@ -252,7 +251,7 @@ def decode_attention_seq_sharded(q: jax.Array, cache: KVCache, mesh: Mesh, *,
 
     q_spec = P(bspec, None, None, None)
     kv_spec = P(bspec, None, axis, None)
-    fn = jax.shard_map(partial_attn, mesh=mesh,
+    fn = shard_map(partial_attn, mesh=mesh,
                    in_specs=(q_spec, kv_spec, kv_spec, P()),
                    out_specs=q_spec, check_vma=False)
     return fn(q, cache.k, cache.v, cache.length)

@@ -37,7 +37,7 @@ O3 — structural fix for mesh-indivisible heads:
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -10,7 +10,7 @@ activation sharding constraints; serving exposes ``prefill`` + single-token
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

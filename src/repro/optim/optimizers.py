@@ -9,7 +9,7 @@ All update math runs in f32 regardless of param dtype; params may be bf16.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def pipeline_forward(layer_fn: Callable, mesh: Mesh, axis: str = "pod"):
     """Build fn(stage_params, x_microbatches) -> y_microbatches.
@@ -73,5 +75,5 @@ def pipeline_forward(layer_fn: Callable, mesh: Mesh, axis: str = "pod"):
 
     # P(axis) is a prefix spec: every param leaf shards its leading (stage)
     # dim over ``axis``; microbatches are replicated along it.
-    return jax.shard_map(staged, mesh=mesh, in_specs=(P(axis), P()),
+    return shard_map(staged, mesh=mesh, in_specs=(P(axis), P()),
                      out_specs=P(), check_vma=False)

@@ -9,7 +9,7 @@ decode runs in place.
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, NamedTuple, Optional, Tuple
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -8,6 +8,15 @@ import jax
 import pytest
 
 
+def pytest_configure(config):
+    # registered in pyproject.toml too; kept here so a bare pytest
+    # invocation from any rootdir still knows the tier marker
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running integration/substrate tests (excluded from the "
+        "CI fast tier; run locally with plain pytest)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -1,7 +1,6 @@
 """Analysis-layer tests: roofline terms, wire-cost model, serving engine."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis.hlo import _wire, analyze
 from repro.analysis.roofline import model_flops, roofline_terms

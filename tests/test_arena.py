@@ -1,0 +1,125 @@
+"""Batched arena tests: oracle equivalence, single-search stepping, and
+refill/masking accounting (core/arena.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MCTSConfig
+from repro.core.arena import Arena
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources, match, play_game
+
+CFG = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+CAP = 20
+
+
+@pytest.fixture(scope="module")
+def players(engine5):
+    a = MCTS(engine5, double_resources(CFG))
+    b = MCTS(engine5, CFG)
+    return a, b
+
+
+@pytest.fixture(scope="module")
+def oracle(engine5, players):
+    a, b = players
+    return jax.jit(lambda k, ab: play_game(engine5, a, b, k, ab, CAP))
+
+
+def _assert_matches_oracle(oracle, recs, keys):
+    """Every arena game must equal the sequential oracle bit-for-bit."""
+    for i, r in enumerate(recs):
+        want = oracle(keys[i], jnp.bool_(r.a_is_black))
+        assert float(want.winner) == r.winner, i
+        assert int(want.moves) == r.moves, i
+        assert int(want.tree_nodes) == r.tree_nodes, i
+
+
+class TestOracleEquivalence:
+    @pytest.mark.slow
+    def test_arena_matches_sequential_play_game(self, engine5, players,
+                                                oracle):
+        a, b = players
+        arena = Arena(engine5, a, b, slots=4, max_moves=CAP)
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(7), 4))
+        recs = arena.play_games(4, game_keys=keys)
+        assert len(recs) == 4
+        # both colour assignments exercised
+        assert {r.a_is_black for r in recs} == {True, False}
+        _assert_matches_oracle(oracle, recs, keys)
+
+
+class TestSingleSearchPerMove:
+    def test_one_search_per_game_per_step(self, engine5, players):
+        """Per arena step the traced search batches cover each live game
+        exactly once — G searched games for G moves, not the seed's 2G."""
+        a, b = players
+        searched = []
+
+        def counting(player, tag):
+            orig = player.search_batch
+
+            def wrapped(roots, rngs):
+                searched.append((tag, int(rngs.shape[0])))
+                return orig(roots, rngs)
+            player.search_batch = wrapped
+
+        a2 = MCTS(engine5, double_resources(CFG))
+        b2 = MCTS(engine5, CFG)
+        counting(a2, "A")
+        counting(b2, "B")
+        G = 4
+        arena = Arena(engine5, a2, b2, slots=G, max_moves=CAP)
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(0), G))
+        slot = arena._initial_slots(jnp.asarray(keys))
+        slot, rec = arena._step(slot, jnp.int32(0))
+        jax.block_until_ready(rec.done)
+        # the trace hit each player once, half the batch each
+        assert sorted(searched) == [("A", G // 2), ("B", G // 2)]
+        # ... and those G searches produced exactly G moves (one per slot)
+        assert int(slot.states.move_count.sum()) == G
+
+
+class TestRefillMasking:
+    @pytest.mark.slow
+    def test_refill_preserves_per_game_statistics(self, engine5, players,
+                                                  oracle):
+        """More games than slots: finished slots refill from the pending
+        queue, and every game's (winner, length, nodes) still equals the
+        sequential oracle under its recorded colour."""
+        a, b = players
+        arena = Arena(engine5, a, b, slots=2, max_moves=CAP)
+        games = 5
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(3), games))
+        recs = arena.play_games(games, game_keys=keys)
+        assert len(recs) == games
+        assert all(r.winner in (-1.0, 0.0, 1.0) for r in recs)
+        assert all(0 < r.moves <= CAP for r in recs)
+        # colour balance holds under refills (paper: alternating colours)
+        n_black = sum(r.a_is_black for r in recs)
+        assert abs(n_black - (games - n_black)) <= 1
+        _assert_matches_oracle(oracle, recs, keys)
+
+    def test_match_accounting_with_refills(self, engine5):
+        cfg = dataclasses.replace(CFG, sims_per_move=8)
+        res = match(engine5, double_resources(cfg), cfg, games=5, seed=2,
+                    max_moves=CAP, batch=2)
+        assert res.a_wins + res.b_wins + res.draws == 5
+        assert res.rate.games == 5
+        assert 0.0 <= res.rate.lo <= res.rate.rate <= res.rate.hi <= 1.0
+
+
+class TestArenaValidation:
+    def test_odd_slots_rejected(self, engine5, players):
+        a, b = players
+        with pytest.raises(ValueError):
+            Arena(engine5, a, b, slots=3)
+
+    def test_bad_game_keys_shape_rejected(self, engine5, players):
+        a, b = players
+        arena = Arena(engine5, a, b, slots=2, max_moves=CAP)
+        with pytest.raises(ValueError):
+            arena.play_games(2, game_keys=np.zeros((3, 2), np.uint32))

@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # 8-fake-device subprocess compiles
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.go import GoEngine, BLACK, WHITE
+from repro.go import BLACK, WHITE
 from repro.go.board import NO_KO
 
 
@@ -201,6 +201,7 @@ class TestScoring:
         assert bool(st.done)
 
 
+@pytest.mark.slow
 class TestInvariantsProperty:
     """Property-style: random move sequences keep board invariants."""
 

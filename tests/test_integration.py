@@ -9,6 +9,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # end-to-end subprocess runs: full tier only
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -74,7 +74,6 @@ class TestUctSelect:
 
     def test_argmax_agrees_with_search_math(self):
         """Kernel scores reproduce MCTS._edge_scores (minus the tiebreak)."""
-        import dataclasses
         from repro.config import MCTSConfig
         from repro.core.mcts import MCTS
         from repro.core import tree as tree_lib

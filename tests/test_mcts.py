@@ -11,7 +11,7 @@ from repro.core.mcts import MCTS
 from repro.core import tree as tree_lib
 from repro.core import stats, affinity
 from repro.core.selfplay import double_resources, match, play_game
-from repro.go import GoEngine, BLACK, WHITE
+from repro.go import GoEngine
 
 
 CFG5 = MCTSConfig(board_size=5, lanes=4, sims_per_move=32, max_nodes=128)
@@ -134,6 +134,7 @@ class TestParallelModes:
         expected = 1 + m.iterations * 1 * 4
         assert float(res.tree.visit[0]) == expected
 
+    @pytest.mark.slow
     def test_more_sims_beat_fewer(self, engine5):
         """Sanity strength check (paper Fig. 4 direction): 8x sims should
         not lose a small match to 1x."""
@@ -159,6 +160,7 @@ class TestSelfplayHarness:
         assert int(rec.moves) > 0
         assert int(rec.winner) in (-1, 0, 1)
 
+    @pytest.mark.slow  # covered in the fast tier by test_arena accounting
     def test_match_accounting(self, engine5):
         cfg = dataclasses.replace(CFG5, sims_per_move=8, max_nodes=64)
         res = match(engine5, cfg, cfg, games=4, seed=1)

@@ -2,7 +2,6 @@
 CPU, output shapes + finiteness; prefill<->decode consistency for the
 decode-capable families (this pins the SSD chunk-scan against the stepwise
 recurrence and the KV cache against the training attention)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

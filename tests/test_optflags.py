@@ -2,12 +2,13 @@
 each level is self-consistent between training forward, prefill and
 decode, and trains with finite grads.  (Levels change head wiring/dtypes,
 so levels are checked for internal consistency, not bit-equality.)"""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow  # per-level train/prefill/decode sweeps
 
 from repro.configs.reduced import reduced
 from repro.models import build_model
@@ -64,7 +65,6 @@ class TestOptLevels:
 
 class TestPaddedHeads:
     def test_wq_padded_and_pad_outputs_zero(self):
-        import dataclasses
         from repro.config import AttnConfig, ModelConfig
         optflags.set_level(3)
         cfg = ModelConfig(

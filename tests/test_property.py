@@ -1,7 +1,9 @@
 """Property-based tests (hypothesis) on system invariants."""
-import dataclasses
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install '.[test]')")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
@@ -9,7 +11,7 @@ import numpy as np
 from hypothesis import given, settings
 
 from repro.core import stats
-from repro.go import GoEngine, BLACK, WHITE
+from repro.go import GoEngine
 
 SETTINGS = dict(max_examples=15, deadline=None,
                 suppress_health_check=list(hypothesis.HealthCheck))

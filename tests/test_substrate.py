@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # training-loop convergence runs: full tier
+
 from repro.optim import (adamw, adafactor, sgdm, clip_by_global_norm,
                          global_norm, make_schedule)
 
