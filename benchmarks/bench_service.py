@@ -1,0 +1,214 @@
+"""SearchService dispatcher benchmark -> BENCH_service.json.
+
+Measures the unified dispatcher (core/service.py) against the PR 1 arena
+path (host-queue refill, one host sync per step) on the 5x5 reference
+config, and a mixed workload (arena games + serve queries sharing one
+slot pool).  The device-side refill moves admission and result collection
+into the jitted dispatch, so the host only flushes submissions and polls
+the result ring once per ``superstep`` moves — ``host_syncs_per_move``
+makes that reduction machine-checkable (the paper's scheduling thesis:
+the loop shape, not the lane count, sets throughput).
+
+Both paths are warmed (compile excluded) and play bit-identical games;
+"useful" sims are the mover's, as in benchmarks/bench_arena.py.
+
+    PYTHONPATH=src python benchmarks/bench_service.py [--out BENCH_service.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+if __package__ in (None, ""):                    # `python benchmarks/...`
+    import os
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.config import MCTSConfig
+from repro.core.arena import Arena
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources
+from repro.core.service import LANE_SERVE, SearchService
+from repro.go import GoEngine
+
+BOARD = 5
+KOMI = 0.5
+MOVE_CAP = 30
+MAX_NODES = 128
+SERVE_SIMS = 16
+SCHEMA = "bench_service/v1"
+
+
+def _useful_sims(total_moves: float, sims_a: int, sims_b: int) -> float:
+    """Movers alternate, so each path charges the same per-move average."""
+    return total_moves * (sims_a + sims_b) / 2.0
+
+
+def time_refill_path(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
+                     games: int, seed: int, refill: str,
+                     slots: int = 0, repeats: int = 3) -> dict:
+    """Arena throughput under one refill mode (host = the PR 1 path).
+
+    The same seeded run is timed ``repeats`` times (bit-identical games,
+    warm jit) and the *minimum* wall clock is reported — the standard
+    guard against scheduler noise on a shared host, which at this scale
+    is ~+-10% per single run.
+    """
+    player_a = MCTS(engine, cfg_a)
+    player_b = MCTS(engine, cfg_b)
+    slots = slots or games
+    slots = max(2, slots + (slots % 2))
+    arena = Arena(engine, player_a, player_b, slots=slots,
+                  max_moves=MOVE_CAP, refill=refill)
+    arena.play_games(games, seed=seed + 1000)    # warm / compile
+    wall = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        recs = arena.play_games(games, seed=seed)
+        wall = min(wall, time.perf_counter() - t0)
+    moves = float(sum(r.moves for r in recs))
+    return {"wall_s": wall, "moves": moves, "games": len(recs),
+            "sims": _useful_sims(moves, cfg_a.sims_per_move,
+                                 cfg_b.sims_per_move),
+            "host_syncs": arena.host_syncs,
+            "host_syncs_per_move": arena.host_syncs / moves}
+
+
+def time_mixed_workload(engine: GoEngine, cfg_a: MCTSConfig,
+                        cfg_b: MCTSConfig, games: int, queries: int,
+                        seed: int, slots: int = 0) -> dict:
+    """Arena slots + serve queries through one pool (the tentpole mix)."""
+    player_a = MCTS(engine, cfg_a)
+    player_b = MCTS(engine, cfg_b)
+    slots = slots or games
+    slots = max(2, slots + (slots % 2))
+    svc = SearchService(engine, player_a, player_b, slots=slots,
+                        max_moves=MOVE_CAP)
+
+    # queried positions: a few random moves into a game
+    rng = np.random.default_rng(seed)
+    boards = []
+    for _ in range(queries):
+        st = engine.init_state()
+        for _ in range(4):
+            legal = np.asarray(engine.jit_legal(st))[: engine.n2]
+            st = engine.jit_play(
+                st, jax.numpy.int32(rng.choice(np.where(legal)[0])))
+        boards.append(st)
+
+    def run(s):
+        svc.reset(seed=s, colour_cap=(games + 1) // 2,
+                  game_capacity=games, serve_capacity=queries)
+        for _ in range(games):
+            svc.submit_game()
+        for q in range(queries):
+            svc.submit_serve(boards[q], sims=SERVE_SIMS)
+        return svc.drain()
+
+    run(seed + 1000)                             # warm / compile
+    wall = float("inf")
+    for _ in range(3):                           # min-of-3 vs host noise
+        t0 = time.perf_counter()
+        recs = run(seed)
+        wall = min(wall, time.perf_counter() - t0)
+    game_moves = float(sum(r.moves for r in recs if r.lane != LANE_SERVE))
+    n_serve = sum(1 for r in recs if r.lane == LANE_SERVE)
+    sims = (_useful_sims(game_moves, cfg_a.sims_per_move,
+                         cfg_b.sims_per_move) + n_serve * SERVE_SIMS)
+    moves = game_moves + n_serve
+    return {"wall_s": wall, "games": games, "serve_queries": n_serve,
+            "serve_sims": SERVE_SIMS, "moves": moves, "sims": sims,
+            "sims_per_sec": sims / wall, "moves_per_sec": moves / wall,
+            "host_syncs": svc.host_syncs,
+            "host_syncs_per_move": svc.host_syncs / moves}
+
+
+def run_reference(games: int, seed: int) -> dict:
+    """The acceptance cell: 2n-vs-n on the 5x5 reference config."""
+    engine = GoEngine(BOARD, komi=KOMI)
+    base = MCTSConfig(board_size=BOARD, lanes=2, sims_per_move=16,
+                      max_nodes=MAX_NODES)
+    cfg_a, cfg_b = double_resources(base), base
+    host = time_refill_path(engine, cfg_a, cfg_b, games, seed, "host")
+    dev = time_refill_path(engine, cfg_a, cfg_b, games, seed, "device")
+    out = {
+        "board": BOARD, "games": games, "lanes": base.lanes,
+        "sims_per_move": base.sims_per_move, "move_cap": MOVE_CAP,
+        "arena_wall_s": host["wall_s"],
+        "arena_sims_per_sec": host["sims"] / host["wall_s"],
+        "arena_host_syncs_per_move": host["host_syncs_per_move"],
+        "service_wall_s": dev["wall_s"],
+        "service_sims_per_sec": dev["sims"] / dev["wall_s"],
+        "service_host_syncs_per_move": dev["host_syncs_per_move"],
+    }
+    out["speedup"] = out["service_sims_per_sec"] / out["arena_sims_per_sec"]
+    out["host_sync_reduction"] = (out["arena_host_syncs_per_move"]
+                                  / out["service_host_syncs_per_move"])
+    return out
+
+
+def run_mixed(games: int, queries: int, seed: int) -> dict:
+    engine = GoEngine(BOARD, komi=KOMI)
+    base = MCTSConfig(board_size=BOARD, lanes=2, sims_per_move=16,
+                      max_nodes=MAX_NODES)
+    return time_mixed_workload(engine, double_resources(base), base,
+                               games, queries, seed)
+
+
+def _payload(ref: dict, mixed: dict) -> dict:
+    return {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
+            "move_cap": MOVE_CAP, "max_nodes": MAX_NODES,
+            "reference": ref, "mixed": mixed}
+
+
+def run() -> None:
+    """benchmarks.run entry: reference cell + mixed row, default output."""
+    ref = run_reference(games=8, seed=0)
+    csv_row("service_reference_speedup", ref["service_wall_s"] / 8,
+            f"speedup={ref['speedup']:.2f};"
+            f"sync_cut={ref['host_sync_reduction']:.1f}x")
+    mixed = run_mixed(games=8, queries=8, seed=0)
+    csv_row("service_mixed_pool", mixed["wall_s"],
+            f"sims/s={mixed['sims_per_sec']:.0f}")
+    with open("BENCH_service.json", "w") as f:
+        json.dump(_payload(ref, mixed), f, indent=2, sort_keys=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--games", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print("# service dispatcher vs PR 1 arena path "
+          f"({BOARD}x{BOARD}, move cap {MOVE_CAP})")
+    ref = run_reference(args.games, args.seed)
+    print(f"reference 2n-vs-n: arena {ref['arena_sims_per_sec']:.0f} sims/s "
+          f"({ref['arena_host_syncs_per_move']:.2f} syncs/move)  "
+          f"service {ref['service_sims_per_sec']:.0f} sims/s "
+          f"({ref['service_host_syncs_per_move']:.2f} syncs/move)  "
+          f"speedup {ref['speedup']:.2f}x")
+    csv_row("service_reference_speedup", ref["service_wall_s"] / args.games,
+            f"speedup={ref['speedup']:.2f};"
+            f"sync_cut={ref['host_sync_reduction']:.1f}x")
+
+    mixed = run_mixed(args.games, args.queries, args.seed)
+    print(f"mixed pool: {mixed['games']} games + {mixed['serve_queries']} "
+          f"queries -> {mixed['sims_per_sec']:.0f} sims/s "
+          f"({mixed['host_syncs_per_move']:.2f} syncs/move)")
+
+    with open(args.out, "w") as f:
+        json.dump(_payload(ref, mixed), f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,8 +31,11 @@ def main() -> None:
     strong = MCTS(eng, strong_cfg)            # plays black
     weak = MCTS(eng, weak_cfg)                # plays white
 
-    s_move = jax.jit(lambda s, k: strong.search(s, k).action)
-    w_move = jax.jit(lambda s, k: weak.search(s, k).action)
+    def one(player):        # single root as a [1]-batch of search_batch
+        return jax.jit(lambda s, k: player.search_batch(
+            jax.tree.map(lambda x: x[None], s), k[None]).action[0])
+
+    s_move, w_move = one(strong), one(weak)
 
     st = eng.init_state()
     key = jax.random.PRNGKey(0)

@@ -54,17 +54,17 @@ def main() -> None:
                      max_nodes=512, c_uct=1.5)
     mcts = MCTS(eng, cfg, prior_fn=prior_fn, use_puct=True)
 
+    roots = jax.tree.map(lambda x: x[None], eng.init_state())
+    keys = jax.random.PRNGKey(0)[None]
     t0 = time.time()
-    res = jax.jit(lambda s, k: mcts.search(s, k))(
-        eng.init_state(), jax.random.PRNGKey(0))
-    print(f"PUCT search with policy priors: move {int(res.action)}, "
-          f"{int(res.tree.size)} nodes, {time.time() - t0:.1f}s")
+    res = jax.jit(mcts.search_batch)(roots, keys)
+    print(f"PUCT search with policy priors: move {int(res.action[0])}, "
+          f"{int(res.tree.size[0])} nodes, {time.time() - t0:.1f}s")
 
     plain = MCTS(eng, cfg)
-    res2 = jax.jit(lambda s, k: plain.search(s, k))(
-        eng.init_state(), jax.random.PRNGKey(0))
-    print(f"uniform-prior UCT baseline:    move {int(res2.action)}, "
-          f"{int(res2.tree.size)} nodes")
+    res2 = jax.jit(plain.search_batch)(roots, keys)
+    print(f"uniform-prior UCT baseline:    move {int(res2.action[0])}, "
+          f"{int(res2.tree.size[0])} nodes")
 
 
 if __name__ == "__main__":

@@ -24,19 +24,20 @@ def main() -> None:
           f"('threads'), {cfg.sims_per_move} playouts/move\n")
 
     t0 = time.time()
-    res = jax.jit(lambda s, k: mcts.search(s, k))(
-        state, jax.random.PRNGKey(0))
-    move = int(res.action)
-    print(f"search: {int(res.tree.size)} tree nodes in "
+    # search_batch is the public surface; a single root is a [1]-batch
+    roots = jax.tree.map(lambda x: x[None], state)
+    res = jax.jit(mcts.search_batch)(roots, jax.random.PRNGKey(0)[None])
+    move = int(res.action[0])
+    print(f"search: {int(res.tree.size[0])} tree nodes in "
           f"{time.time() - t0:.1f}s (compile included)")
-    visits = res.root_visits
+    visits = res.root_visits[0]
     top = sorted(range(engine.num_actions),
                  key=lambda a: -float(visits[a]))[:5]
     for a in top:
         name = "pass" if a == engine.pass_action else \
             f"({a // BOARD},{a % BOARD})"
         print(f"  move {name:8s} visits={float(visits[a]):5.0f} "
-              f"value={float(res.root_values[a]):+.3f}")
+              f"value={float(res.root_values[0, a]):+.3f}")
 
     state = engine.play(state, move)
     print("\nboard after the chosen move:")

@@ -1,12 +1,51 @@
 """The paper's primary contribution: parallel MCTS (tree/root/leaf modes,
-virtual loss, lock-free-analogue scatter backups) + the self-play
-effective-speedup experimental harness, TPU-native (see DESIGN.md §2)."""
-from repro.core.mcts import MCTS, SearchResult, make_mcts
+virtual loss, lock-free-analogue scatter backups) behind one batched
+search dispatcher, TPU-native (see DESIGN.md §2).
+
+Public API
+==========
+
+====================  =====================================================
+``MCTS``              search driver; public surface is ``search_batch``
+                      (per-game traced ``sims`` budget) and
+                      ``init_tree_batch`` — the pre-service five-method
+                      surface survives as deprecated shims
+``SearchService``     the unified dispatcher (core/service.py): a
+                      device-resident slot pool with origin-tagged lanes
+                      (``LANE_ARENA`` / ``LANE_SERVE`` /
+                      ``LANE_TOURNAMENT``), device-side refill, and a
+                      result ring buffer; ``submit_* -> flush -> dispatch
+                      -> poll``
+``SearchRequest``     pending-request pytree (state, key, lane, sims,
+                      ticket)
+``SearchResult``      completed-request host record scattered back from
+                      the ring.  NOTE: this name moved in PR 2 — the raw
+                      per-search pytree it used to denote is now
+                      ``SearchOutput`` (``repro.core.mcts.SearchResult``
+                      remains an alias of that old type)
+``Arena``             self-play client of the service (``refill="host"``
+                      keeps the PR 1 host-queue loop as baseline/oracle)
+``Tournament``        round-robin config pairs through one service pool
+``SearchOutput``      raw per-search output of ``MCTS.search_batch``
+``Tree`` helpers      ``init_tree`` / ``init_tree_batch`` /
+                      ``root_action_visits`` / ``select_action``
+====================  =====================================================
+
+External best-move queries are served by
+:class:`repro.serving.go_service.GoService` on top of ``SearchService``.
+"""
+from repro.core.mcts import MCTS, SearchOutput, make_mcts
 from repro.core.tree import Tree, init_tree, init_tree_batch, \
-    root_action_visits
+    root_action_visits, select_action
 from repro.core.arena import Arena, GameResult
+from repro.core.service import (LANE_ARENA, LANE_SERVE, LANE_TOURNAMENT,
+                                SearchRequest, SearchResult, SearchService)
+from repro.core.tournament import Tournament, TournamentResult
 from repro.core import stats, affinity, selfplay
 
-__all__ = ["MCTS", "SearchResult", "make_mcts", "Tree", "init_tree",
-           "init_tree_batch", "root_action_visits", "Arena", "GameResult",
-           "stats", "affinity", "selfplay"]
+__all__ = ["MCTS", "SearchOutput", "SearchResult", "SearchRequest",
+           "SearchService", "LANE_ARENA", "LANE_SERVE", "LANE_TOURNAMENT",
+           "make_mcts", "Tree", "init_tree", "init_tree_batch",
+           "root_action_visits", "select_action", "Arena", "GameResult",
+           "Tournament", "TournamentResult", "stats", "affinity",
+           "selfplay"]

@@ -1,34 +1,28 @@
-"""Batched self-play arena: G concurrent games, exactly one search per move.
+"""Batched self-play arena: a thin client of the SearchService dispatcher.
 
 The seed harness (``selfplay.play_game``) ran **both** players' full MCTS
 searches every move and discarded the non-mover's — half the compute wasted
-— and vmapped whole games, so one long game stalled its entire batch.  The
-arena restructures the work loop (the Xeon Phi papers' lesson: throughput
-at scale comes from the loop shape, not more lanes):
+— and vmapped whole games, so one long game stalled its entire batch.  PR 1
+restructured the work loop (the Xeon Phi papers' lesson: throughput at
+scale comes from the loop shape, not more lanes): G games advance one move
+per jitted step, a parity-indexed roll-by-half puts each player's games in
+a static half-batch (one search per move), and finished slots refill from
+a pending queue.
 
-* All G games advance **one move per step** through a single jitted step
-  function.  Because every step plays exactly one move in every slot, all
-  slots stay in colour lockstep: at even steps Black is to move everywhere,
-  at odd steps White.
-* Slots are split in two static half-batches.  The first half hosts games
-  where player A owns Black, the second half games where B owns Black (the
-  host refill rule below preserves this under refills).  A parity-indexed
-  roll-by-half — an involution, so the same gather un-permutes — moves the
-  A-to-move games to the front *branch-free*: per step there is exactly one
-  ``player_a.search_batch`` over half the slots and one
-  ``player_b.search_batch`` over the other half.  One search per move, with
-  each player keeping its own static config (2n lanes vs n lanes trace as
-  different programs).
-* Finished games are masked at the host: their slot is refilled with a
-  fresh game from the pending queue, so stragglers never idle the batch.
-  A refilled game starts with Black to move; to keep the half-batch
-  invariant the refill assigns Black to whichever player owns that half at
-  the next (even-parity-equivalent) step.
+This PR moves the pending-queue refill *onto the device*
+(core/service.py): the arena submits its games to a
+:class:`~repro.core.service.SearchService` pool, whose jitted dispatch
+admits, searches, and scatters results into a device-resident ring buffer
+— the host polls once per ``superstep`` moves instead of syncing every
+step.  ``refill="host"`` keeps the PR 1 host-queue loop as the measured
+baseline (benchmarks/bench_service.py) and as the bit-for-bit oracle for
+the device refill (tests/test_service.py).
 
-RNG is oracle-compatible: every slot carries its own key chain and splits
-``key -> (key, ka, kb)`` once per step exactly like ``play_game``, so a
-game seeded with key K plays the identical move sequence in the arena and
-in the sequential oracle — the equivalence tests pin this.
+RNG is oracle-compatible on both paths: every slot carries its own key
+chain and splits ``key -> (key, ka, kb)`` once per step exactly like
+``play_game``, so a game seeded with key K plays the identical move
+sequence in the arena and in the sequential oracle — the equivalence
+tests pin this.
 """
 from __future__ import annotations
 
@@ -39,17 +33,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mcts import MCTS
+from repro.core.service import LANE_ARENA, SearchService
 from repro.go.board import GoEngine, GoState
 
 
 class SlotState(NamedTuple):
-    """Device-resident arena state, batched over the G slots."""
+    """Device-resident arena state, batched over the G slots (host path)."""
     states: GoState     # game states, leading axis G
     keys: jax.Array     # u32[G, 2] per-game RNG chains
 
 
 class StepRecord(NamedTuple):
-    """Per-step observables consumed by the host bookkeeping."""
+    """Per-step observables consumed by the host bookkeeping (host path)."""
     done: jax.Array     # bool[G]  game over after this step
     winner: jax.Array   # f32[G]   engine.result of the post-step state
     action: jax.Array   # i32[G]   move just played
@@ -65,21 +60,44 @@ class GameResult(NamedTuple):
 
 
 class Arena:
-    """G-slot arena stepping two MCTS players through concurrent games."""
+    """G-slot arena stepping two MCTS players through concurrent games.
+
+    ``refill="device"`` (default) drives games through the SearchService
+    slot pool; ``refill="host"`` runs the PR 1 per-step host-queue loop.
+    Both play bit-identical games.
+    """
 
     def __init__(self, engine: GoEngine, player_a: MCTS, player_b: MCTS,
-                 slots: int, max_moves: Optional[int] = None):
+                 slots: int, max_moves: Optional[int] = None,
+                 refill: str = "device", superstep: int = 2):
         if slots < 2 or slots % 2:
             raise ValueError(f"slots must be even and >= 2, got {slots}")
+        if refill not in ("device", "host"):
+            raise ValueError(f"refill must be 'device' or 'host', "
+                             f"got {refill!r}")
         self.engine = engine
         self.player_a = player_a
         self.player_b = player_b
         self.slots = slots
         self.max_moves = max_moves or engine.max_moves
+        self.refill = refill
+        self.superstep = superstep
+        self._service: Optional[SearchService] = None   # built on first use
         self._step = jax.jit(self._step_impl)
         self._refill = jax.jit(self._refill_impl)
+        self.host_syncs = 0     # host<->device round-trips of the last run
 
-    # ------------------------------------------------------------- device side
+    @property
+    def service(self) -> SearchService:
+        """The backing dispatcher (lazy: refill="host" never builds it)."""
+        if self._service is None:
+            self._service = SearchService(
+                self.engine, self.player_a, self.player_b, self.slots,
+                max_moves=self.max_moves, superstep=self.superstep)
+        return self._service
+
+    # ----------------------------------------------- host-queue device side
+    # The PR 1 step/refill kernels, kept as the host-refill baseline.
 
     def _step_impl(self, slot: SlotState, parity: jax.Array):
         """Advance every slot one move; one search per slot.
@@ -129,17 +147,27 @@ class Arena:
         keys = jnp.where(mask[:, None], fresh_keys, slot.keys)
         return SlotState(states=states, keys=keys)
 
-    # --------------------------------------------------------------- host side
-
     def _initial_slots(self, keys: jax.Array) -> SlotState:
         init = self.engine.init_state()
         states = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (self.slots,) + jnp.shape(x)), init)
         return SlotState(states=states, keys=keys)
 
+    # --------------------------------------------------------------- client
+
+    @staticmethod
+    def _check_keys(games: int, game_keys) -> Optional[np.ndarray]:
+        if game_keys is None:
+            return None
+        game_keys = np.asarray(game_keys, np.uint32)
+        if game_keys.shape != (games, 2):
+            raise ValueError(f"game_keys must be [games, 2], got "
+                             f"{game_keys.shape}")
+        return game_keys
+
     def play_games(self, games: int, seed: int = 0,
                    game_keys: Optional[jax.Array] = None) -> List[GameResult]:
-        """Play ``games`` full games, refilling finished slots from a
+        """Play ``games`` full games, refilling finished slots from the
         pending queue until the queue drains.
 
         A game admitted to slot ``s`` when the *next* step has parity ``p``
@@ -153,13 +181,31 @@ class Arena:
         2], admission order) — used by the oracle-equivalence tests;
         otherwise keys come from a host-side chain of ``seed``.
         """
+        game_keys = self._check_keys(games, game_keys)
+        if self.refill == "host":
+            return self._play_games_hostqueue(games, seed, game_keys)
+        svc = self.service
+        svc.reset(seed=seed, colour_cap=(games + 1) // 2,
+                  game_capacity=games,
+                  ring_capacity=games + self.slots)
+        tickets = [svc.submit_game(
+            key=None if game_keys is None else game_keys[i],
+            lane=LANE_ARENA) for i in range(games)]
+        recs = {r.ticket: r for r in svc.drain()}
+        self.host_syncs = svc.host_syncs
+        return [GameResult(winner=recs[t].winner, moves=recs[t].moves,
+                           tree_nodes=recs[t].tree_nodes,
+                           a_is_black=recs[t].a_is_black) for t in tickets]
+
+    # ----------------------------------------------------- host-queue loop
+
+    def _play_games_hostqueue(self, games: int, seed: int,
+                              game_keys: Optional[np.ndarray]
+                              ) -> List[GameResult]:
+        """The PR 1 loop: per-step host admission + per-step result sync."""
         G, h = self.slots, self.slots // 2
-        if game_keys is not None:
-            game_keys = np.asarray(game_keys, np.uint32)
-            if game_keys.shape != (games, 2):
-                raise ValueError(f"game_keys must be [games, 2], got "
-                                 f"{game_keys.shape}")
         host_rng = np.random.default_rng(seed)
+        self.host_syncs = 0
 
         def draw_key(i: int) -> np.ndarray:
             if game_keys is not None:
@@ -203,12 +249,13 @@ class Arena:
             if refill_mask.any():
                 slot = self._refill(slot, jnp.asarray(refill_mask),
                                     jnp.asarray(fresh))
-
+                self.host_syncs += 1
             slot, rec = self._step(slot, jnp.int32(parity))
             parity ^= 1
             done = np.asarray(rec.done)
             winner = np.asarray(rec.winner)
             nodes = np.asarray(rec.nodes)
+            self.host_syncs += 1
 
             for s in range(G):
                 if game_id[s] < 0:

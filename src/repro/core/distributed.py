@@ -17,6 +17,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.config import MCTSConfig
+from repro.core import tree as tree_lib
 from repro.core.mcts import MCTS
 from repro.go.board import GoEngine, GoState
 
@@ -31,19 +32,18 @@ def distributed_best_move(engine: GoEngine, cfg: MCTSConfig, mesh: Mesh,
     searcher = MCTS(engine, cfg, **mcts_kw)
 
     def local_search(root: GoState, keys):
-        # keys: [per_dev, 2] on this shard
-        res = jax.vmap(lambda k: searcher.search(root, k))(keys)
+        # keys: [per_dev, 2] on this shard; tile the root per local tree
+        roots = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, keys.shape[:1] + jnp.shape(x)),
+            root)
+        res = searcher.search_batch(roots, keys)
         visits = res.root_visits.sum(axis=0)
         return visits
 
     def sharded(root: GoState, keys):
         visits = local_search(root, keys)
         visits = jax.lax.psum(visits, axis)          # merge root statistics
-        legal = engine.legal_moves(root)
-        masked = jnp.where(legal, visits, -1.0)
-        action = jnp.argmax(masked).astype(jnp.int32)
-        fallback = jnp.argmax(legal).astype(jnp.int32)
-        return jnp.where(masked[action] > 0, action, fallback)
+        return tree_lib.select_action(visits, engine.legal_moves(root))
 
     other_axes = tuple(a for a in mesh.axis_names if a != axis)
     key_spec = P(axis)

@@ -22,7 +22,8 @@ analogue and ``lanes`` the thread count, so ``sims/move = iterations x lanes``.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+import warnings
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -36,15 +37,40 @@ BIG = 1e9
 FPU = 10.0  # first-play urgency: unvisited edges are searched eagerly
 
 
-class SearchResult(NamedTuple):
+class SearchOutput(NamedTuple):
+    """Raw output of one move search (batched over games by search_batch)."""
     tree: Tree
     action: jax.Array          # chosen move (argmax root visits)
     root_visits: jax.Array     # f32[A] visit distribution at the root
     root_values: jax.Array     # f32[A] mean black-perspective values
 
 
+# Back-compat alias for the pre-SearchService name; the service-level
+# completed-request record now owns ``SearchResult`` (core/service.py).
+SearchResult = SearchOutput
+
+
+def _warn_deprecated(old: str, instead: str) -> None:
+    warnings.warn(
+        f"MCTS.{old} is deprecated; {instead}.  The supported public "
+        "surface is MCTS.search_batch / MCTS.init_tree_batch, with "
+        "core.service.SearchService as the dispatcher for single-root "
+        "queries, self-play, and tournaments.",
+        DeprecationWarning, stacklevel=3)
+
+
 class MCTS:
-    """Search driver bound to an engine + config (methods jit/vmap-safe)."""
+    """Search driver bound to an engine + config (methods jit/vmap-safe).
+
+    Public API (everything else is a deprecated shim or private):
+
+    ==================  ======================================================
+    ``search_batch``    one full move search per game over a leading game
+                        axis, with an optional traced per-game ``sims`` budget
+    ``init_tree_batch`` batch of per-game tree arenas under this player's
+                        engine / capacity / priors
+    ==================  ======================================================
+    """
 
     def __init__(self, engine: GoEngine, cfg: MCTSConfig,
                  prior_fn=None, value_fn=None, use_puct: bool = False,
@@ -56,15 +82,14 @@ class MCTS:
         self.use_puct = use_puct
         self.max_depth = max_depth
         if cfg.parallelism == "tree":
-            self.iterations = max(1, cfg.sims_per_move
-                                  // (cfg.lanes * max(1, cfg.leaf_playouts)))
+            div = cfg.lanes * max(1, cfg.leaf_playouts)
         elif cfg.parallelism == "leaf":
-            self.iterations = max(1, cfg.sims_per_move
-                                  // max(1, cfg.leaf_playouts))
+            div = max(1, cfg.leaf_playouts)
         else:  # root: each tree gets the full iteration budget / root_trees
-            self.iterations = max(1, cfg.sims_per_move
-                                  // (max(1, cfg.root_trees)
-                                      * cfg.lanes * max(1, cfg.leaf_playouts)))
+            div = (max(1, cfg.root_trees)
+                   * cfg.lanes * max(1, cfg.leaf_playouts))
+        self._sims_divisor = div      # sims -> iterations conversion
+        self.iterations = max(1, cfg.sims_per_move // div)
 
     # ------------------------------------------------------------------ select
 
@@ -198,63 +223,147 @@ class MCTS:
 
     # ----------------------------------------------------------------- search
 
-    def search(self, root: GoState, rng) -> SearchResult:
-        """Run a full move search from ``root``."""
+    def _iterations_for(self, sims: jax.Array) -> jax.Array:
+        """Traced iteration budget for a per-request ``sims`` knob.
+
+        ``sims <= 0`` means "this player's configured budget".  The static
+        ``self.iterations`` stays the compiled loop bound; smaller budgets
+        mask the tail iterations instead of recompiling (the ServeEngine
+        temperature treatment applied to the search loop — changing a
+        request's playout budget must not retrace the dispatcher).
+        """
+        sims = jnp.asarray(sims, jnp.int32)
+        it = jnp.clip(sims // self._sims_divisor, 1, self.iterations)
+        return jnp.where(sims > 0, it, jnp.int32(self.iterations))
+
+    def _search(self, root: GoState, rng,
+                sims: Optional[jax.Array] = None) -> SearchOutput:
+        """One full move search from ``root`` (single game).
+
+        With ``sims=None`` this is the seed's exact static loop.  With a
+        traced ``sims``, iterations ``>= iterations_for(sims)`` become
+        no-ops via a select — bit-identical to the static loop whenever
+        the requested budget equals the configured one, which the service
+        oracle-equivalence tests pin.
+        """
         t = tree_lib.init_tree(self.engine, root, self.cfg.max_nodes,
                                None if self.prior_fn is None
                                else self.prior_fn(root,
                                                   self.engine.legal_moves(root)))
         keys = jax.random.split(rng, self.iterations)
 
-        def it(i, t):
-            return self._simulate(t, keys[i])
+        if sims is None:
+            def it(i, t):
+                return self._simulate(t, keys[i])
+        else:
+            iters = self._iterations_for(sims)
+
+            def it(i, t):
+                t2 = self._simulate(t, keys[i])
+                live = i < iters
+                # Mask only the search statistics and the allocation
+                # cursor: a dead iteration must not move visit/value mass
+                # (so the root distribution, chosen action, and reported
+                # tree size equal a truncated search's exactly), but its
+                # node *writes* are harmless — they land at or beyond the
+                # reverted cursor with zero visits, which every live read
+                # ignores.  Selecting two [N] arrays and a scalar instead
+                # of the whole tree keeps the masked loop's overhead out
+                # of the dispatch hot path.
+                return t2._replace(
+                    visit=jnp.where(live, t2.visit, t.visit),
+                    value=jnp.where(live, t2.value, t.value),
+                    size=jnp.where(live, t2.size, t.size))
 
         t = jax.lax.fori_loop(0, self.iterations, it, t)
         visits = tree_lib.root_action_visits(t)
-        legal = t.legal[0]
-        masked = jnp.where(legal, visits, -1.0)
-        action = jnp.argmax(masked).astype(jnp.int32)
-        # no explored legal child (tiny budgets): any legal move
-        fallback = jnp.argmax(legal).astype(jnp.int32)
-        action = jnp.where(masked[action] > 0, action, fallback)
-        return SearchResult(tree=t, action=action, root_visits=visits,
+        action = tree_lib.select_action(visits, t.legal[0])
+        return SearchOutput(tree=t, action=action, root_visits=visits,
                             root_values=tree_lib.root_action_values(t))
 
-    def search_batch(self, roots: GoState, rngs: jax.Array) -> SearchResult:
+    def search_batch(self, roots: GoState, rngs: jax.Array,
+                     sims: Optional[jax.Array] = None) -> SearchOutput:
         """Batched move search: one independent tree per game.
 
         ``roots`` is a ``GoState`` batched over a leading game axis and
         ``rngs`` is ``u32[G, 2]`` — per-game RNG so any game's search is
-        bit-identical to an unbatched :meth:`search` with the same key.
-        This is the arena's hot path (core/arena.py): all G trees advance
-        one full move search as a single vmapped program.
-        """
-        return jax.vmap(self.search)(roots, rngs)
+        bit-identical to an unbatched search with the same key.  This is
+        the hot path of the SearchService dispatcher (core/service.py):
+        all G trees advance one full move search as a single vmapped
+        program.
 
-    def search_root_parallel(self, root: GoState, rng) -> SearchResult:
+        ``sims`` (optional ``i32[G]``) is a *traced* per-game playout
+        budget: ``<= 0`` selects this player's configured
+        ``sims_per_move``; positive values are capped by it.  Passing the
+        configured budget (or ``<= 0``) is bit-identical to ``sims=None``.
+        """
+        if sims is None:
+            return jax.vmap(self._search)(roots, rngs)
+        return jax.vmap(self._search)(roots, rngs,
+                                      jnp.asarray(sims, jnp.int32))
+
+    def init_tree_batch(self, roots: GoState) -> Tree:
+        """Batch of per-game tree arenas under this player's engine/config.
+
+        Applies the player's ``prior_fn`` (when set) to every root, so
+        service consumers never touch ``tree_lib`` directly.
+        """
+        priors = None
+        if self.prior_fn is not None:
+            legal = jax.vmap(self.engine.legal_moves)(roots)
+            priors = jax.vmap(self.prior_fn)(roots, legal)
+        return tree_lib.init_tree_batch(self.engine, roots,
+                                        self.cfg.max_nodes, priors)
+
+    # ------------------------------------------------------ internal variants
+
+    def _search_root_parallel(self, root: GoState, rng) -> SearchOutput:
         """Root parallelism: ``root_trees`` independent searches, vote merge."""
         R = max(1, self.cfg.root_trees)
         keys = jax.random.split(rng, R)
-        res = jax.vmap(lambda k: self.search(root, k))(keys)
+        res = jax.vmap(lambda k: self._search(root, k))(keys)
         visits = res.root_visits.sum(axis=0)
         values = res.root_values.mean(axis=0)
-        legal = self.engine.legal_moves(root)
-        masked = jnp.where(legal, visits, -1.0)
-        action = jnp.argmax(masked).astype(jnp.int32)
-        fallback = jnp.argmax(legal).astype(jnp.int32)
-        action = jnp.where(masked[action] > 0, action, fallback)
+        action = tree_lib.select_action(visits, self.engine.legal_moves(root))
         tree0 = jax.tree.map(lambda x: x[0], res.tree)
-        return SearchResult(tree=tree0, action=action, root_visits=visits,
+        return SearchOutput(tree=tree0, action=action, root_visits=visits,
                             root_values=values)
 
-    def best_move(self, root: GoState, rng) -> jax.Array:
+    def _best_move(self, root: GoState, rng) -> jax.Array:
         if self.cfg.parallelism == "root":
-            return self.search_root_parallel(root, rng).action
-        return self.search(root, rng).action
+            return self._search_root_parallel(root, rng).action
+        return self._search(root, rng).action
 
     @functools.partial(jax.jit, static_argnums=0)
+    def _jit_best_move(self, root: GoState, rng) -> jax.Array:
+        return self._best_move(root, rng)
+
+    # ------------------------------------------------ deprecated entry points
+    # Pre-SearchService five-method surface.  Kept as working shims so seed
+    # callers keep passing; new code goes through search_batch or the
+    # SearchService / GoService dispatchers.
+
+    def search(self, root: GoState, rng,
+               sims: Optional[jax.Array] = None) -> SearchOutput:
+        _warn_deprecated("search", "vmap is the service's job — use "
+                         "search_batch (a [1]-batch for single roots)")
+        return self._search(root, rng, sims)
+
+    def search_root_parallel(self, root: GoState, rng) -> SearchOutput:
+        _warn_deprecated("search_root_parallel",
+                         "use core.distributed.distributed_best_move or a "
+                         "root-parallel MCTSConfig via the service")
+        return self._search_root_parallel(root, rng)
+
+    def best_move(self, root: GoState, rng) -> jax.Array:
+        _warn_deprecated("best_move",
+                         "use serving.go_service.GoService.best_move")
+        return self._best_move(root, rng)
+
     def jit_best_move(self, root: GoState, rng) -> jax.Array:
-        return self.best_move(root, rng)
+        _warn_deprecated("jit_best_move",
+                         "use serving.go_service.GoService.best_move")
+        return self._jit_best_move(root, rng)
 
 
 def make_mcts(engine: GoEngine, cfg: MCTSConfig, **kw) -> MCTS:

@@ -61,8 +61,8 @@ def play_game(engine: GoEngine, player_a: MCTS, player_b: MCTS,
         key, ka, kb = jax.random.split(key, 3)
         black_to_move = st.to_play == BLACK
         a_to_move = black_to_move == a_is_black
-        res_a = player_a.search(st, ka)
-        res_b = player_b.search(st, kb)
+        res_a = player_a._search(st, ka)
+        res_b = player_b._search(st, kb)
         move = jnp.where(a_to_move, res_a.action, res_b.action)
         nodes = jnp.where(a_to_move, res_a.tree.size, res_b.tree.size)
         return engine.play(st, move), key, nodes, nmoves + 1
@@ -85,13 +85,15 @@ class MatchResult(NamedTuple):
 
 def match(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
           games: int, seed: int = 0, max_moves: Optional[int] = None,
-          batch: int = 0, **mcts_kw) -> MatchResult:
+          batch: int = 0, refill: str = "device", **mcts_kw) -> MatchResult:
     """Play ``games`` games on the batched arena, colours balanced to ±1
     (the paper's alternating-colours methodology).
 
     ``batch`` bounds the number of concurrent arena slots (default: one
     slot per game, the seed behaviour); finished slots are refilled from
     the pending queue so long games never stall the rest of the match.
+    ``refill`` picks the SearchService device-side refill (default) or
+    the PR 1 host-queue loop — the games are bit-identical either way.
     """
     from repro.core.arena import Arena
 
@@ -100,7 +102,7 @@ def match(engine: GoEngine, cfg_a: MCTSConfig, cfg_b: MCTSConfig,
     slots = batch or games
     slots = max(2, slots + (slots % 2))          # arena needs an even count
     arena = Arena(engine, player_a, player_b, slots=slots,
-                  max_moves=max_moves)
+                  max_moves=max_moves, refill=refill)
     recs = arena.play_games(games, seed=seed)
 
     import numpy as np

@@ -1,0 +1,565 @@
+"""Unified SearchService: one batched search dispatcher for every consumer.
+
+The Xeon Phi papers' scaling lesson is that MCTS throughput is set by how
+search work is *scheduled* onto the hardware, and the 2015 follow-up shows
+a work-queue dispatch model recovering the scaling that thread-per-search
+loses.  The jax_pallas analogue is a single admission-controlled batch:
+every workload — arena self-play (core/arena.py), external best-move
+queries (serving/go_service.py), tournament pairings (core/tournament.py)
+— submits :class:`SearchRequest` tickets into one device-resident slot
+pool, and one jitted ``dispatch`` step advances all ``S`` slots together:
+
+* **Admission** (the device-side refill): empty slots pull requests from
+  device-resident pending queues (a pending counter per queue, no host
+  round-trip).  Full-game requests are colour-capped exactly like the PR 1
+  host queue (alternating colours, at most +-1 imbalance), so device
+  refill is bit-for-bit the host refill.  Serve requests are admitted only
+  into cells that player A searches on the next step, making a query's
+  result independent of slot placement and batch-mates.
+* **Search**: the parity-balanced roll-by-half from PR 1 — one
+  ``player_a.search_batch`` over half the slots, one ``player_b`` over the
+  other, exactly one search per move.  The per-slot ``sims`` budget is a
+  *traced* argument (masked loop tail), so mixed budgets share one
+  compiled program.
+* **Scatter**: finished requests (game over, or a serve query's single
+  search) are appended to a device-resident result ring buffer; their
+  slots empty and refill on the next step's admission.
+
+The host only (a) flushes submitted requests in fixed-size chunks and
+(b) polls the ring buffer — both amortised over ``superstep`` dispatch
+steps, cutting the per-step host sync of the PR 1 arena loop to
+``~2/superstep`` per move (``host_syncs`` counts them;
+benchmarks/bench_service.py proves the reduction).
+
+RNG contract:
+
+* game lanes: a slot splits ``key -> (key, ka, kb)`` once per step like
+  ``selfplay.play_game``, so a game with key K is bit-identical to the
+  sequential oracle;
+* serve lane: the search uses the request key *directly* — a query
+  ``(state, key, sims)`` returns exactly
+  ``player_a.search_batch(state[None], key[None], sims[None])``.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mcts import MCTS
+from repro.go.board import GoEngine, GoState
+
+# Request lanes, tagged by origin.
+LANE_ARENA = 0        # arena self-play slot (full game)
+LANE_SERVE = 1        # external best-move query (single search)
+LANE_TOURNAMENT = 2   # tournament pairing slot (full game)
+
+GAME_LANES = (LANE_ARENA, LANE_TOURNAMENT)
+LANE_NAMES = {LANE_ARENA: "arena", LANE_SERVE: "serve",
+              LANE_TOURNAMENT: "tournament"}
+
+
+class SearchRequest(NamedTuple):
+    """One pending request (device pytree; leading axis = queue/chunk)."""
+    state: GoState        # root position (games start from the empty board)
+    key: jax.Array        # u32[2] request RNG key
+    lane: jax.Array       # i32 origin tag (LANE_*)
+    sims: jax.Array       # i32 playout budget; <=0 = player's configured one
+    ticket: jax.Array     # i32 service-assigned id
+
+
+class SearchResult(NamedTuple):
+    """One completed request, scattered back from the ring (host scalars)."""
+    ticket: int
+    lane: int
+    action: int               # move chosen by the final (serve: only) search
+    winner: float             # +1 black / -1 white / 0 draw (game lanes)
+    moves: int                # moves played (serve: 1)
+    tree_nodes: int           # final search's tree size (Fig. 12 metric)
+    a_is_black: bool          # game lanes: colour assignment
+    root_visits: np.ndarray   # f32[A] final root visit distribution
+
+
+class _Pending(NamedTuple):
+    """Host-buffered submission awaiting flush()."""
+    state: GoState
+    key: np.ndarray
+    lane: int
+    sims: int
+    ticket: int
+
+
+class _Slots(NamedTuple):
+    """Device-resident slot pool, batched over the S slots."""
+    states: GoState       # current position per slot
+    keys: jax.Array       # u32[S,2] per-slot RNG chains
+    ticket: jax.Array     # i32[S] active request id, -1 = dummy slot
+    lane: jax.Array       # i32[S]
+    moves: jax.Array      # i32[S] moves played by the active request
+    sims: jax.Array       # i32[S] per-request playout budget
+    a_black: jax.Array    # bool[S] player A owns Black (game lanes)
+
+
+class _Queue(NamedTuple):
+    """Device-resident circular pending queue (capacity Q)."""
+    states: GoState
+    keys: jax.Array       # u32[Q,2]
+    lane: jax.Array       # i32[Q]
+    sims: jax.Array       # i32[Q]
+    ticket: jax.Array     # i32[Q]
+    size: jax.Array       # i32: total ever enqueued
+    head: jax.Array       # i32: total ever admitted (next to admit)
+
+
+class _Ring(NamedTuple):
+    """Device-resident circular result buffer (capacity R)."""
+    ticket: jax.Array     # i32[R]
+    lane: jax.Array       # i32[R]
+    action: jax.Array     # i32[R]
+    winner: jax.Array     # f32[R]
+    moves: jax.Array      # i32[R]
+    nodes: jax.Array      # i32[R]
+    a_black: jax.Array    # bool[R]
+    visits: jax.Array     # f32[R,A]
+    count: jax.Array      # i32: total ever appended
+
+
+class PoolState(NamedTuple):
+    """Everything the jitted dispatch step owns."""
+    slots: _Slots
+    games: _Queue         # full-game requests (arena + tournament lanes)
+    serve: _Queue         # single-search queries
+    ring: _Ring
+    colour_count: jax.Array   # i32[2]; index 1 = games where A owns Black
+    colour_cap: jax.Array     # i32 per-colour admission budget
+    parity: jax.Array         # i32 global move parity (0 => Black to move)
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _excl_cumsum(mask: jax.Array) -> jax.Array:
+    m = mask.astype(jnp.int32)
+    return jnp.cumsum(m) - m
+
+
+def _queue_push(q: _Queue, req: SearchRequest, n: jax.Array) -> _Queue:
+    """Append the first ``n`` rows of a fixed-size request chunk."""
+    chunk = req.lane.shape[0]
+    cap = q.lane.shape[0]
+    arange = jnp.arange(chunk, dtype=jnp.int32)
+    idx = jnp.where(arange < n, (q.size + arange) % cap, cap)  # cap: dropped
+
+    def put(buf, val):
+        return buf.at[idx].set(val, mode="drop")
+
+    return q._replace(
+        states=jax.tree.map(put, q.states, req.state),
+        keys=put(q.keys, req.key),
+        lane=put(q.lane, req.lane),
+        sims=put(q.sims, req.sims),
+        ticket=put(q.ticket, req.ticket),
+        size=q.size + n,
+    )
+
+
+class SearchService:
+    """S-slot batched dispatcher bound to an engine and two MCTS players.
+
+    Player A searches the first half-batch at even parity (and, by the
+    admission rule, every serve query); games alternate which player owns
+    Black under the colour cap.  All static search shapes (lanes, budget,
+    board) live in the players — one service, one compiled dispatch.
+    """
+
+    def __init__(self, engine: GoEngine, player_a: MCTS, player_b: MCTS,
+                 slots: int, max_moves: Optional[int] = None,
+                 superstep: int = 4):
+        if slots < 2 or slots % 2:
+            raise ValueError(f"slots must be even and >= 2, got {slots}")
+        if superstep < 1:
+            raise ValueError(f"superstep must be >= 1, got {superstep}")
+        self.engine = engine
+        self.player_a = player_a
+        self.player_b = player_b
+        self.slots = slots
+        self.max_moves = max_moves or engine.max_moves
+        self.superstep = superstep
+        self._chunk = slots               # flush granularity
+        self._init_state = engine.init_state()
+        self._dispatch = jax.jit(self._dispatch_impl, static_argnums=(1,))
+        self._push_games = jax.jit(self._push_games_impl)
+        self._push_serve = jax.jit(self._push_serve_impl)
+        self.reset()
+
+    # ------------------------------------------------------------- lifecycle
+
+    def reset(self, seed: int = 0, slot_keys: Optional[np.ndarray] = None,
+              colour_cap: Optional[int] = None,
+              game_capacity: Optional[int] = None,
+              serve_capacity: Optional[int] = None,
+              ring_capacity: Optional[int] = None) -> None:
+        """Re-initialise the pool, queues, ring, and host bookkeeping.
+
+        ``slot_keys`` seeds the per-slot dummy RNG chains (default: drawn
+        from ``default_rng(seed)``, the PR 1 host-queue discipline — the
+        same generator then feeds keyless submissions, preserving the
+        host path's exact key stream).  Capacities are rounded up to
+        powers of two so repeat runs reuse the compiled dispatch.
+        """
+        S = self.slots
+        self._rng = np.random.default_rng(seed)
+        if slot_keys is None:
+            slot_keys = np.stack([
+                self._rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
+                for _ in range(S)])
+        slot_keys = np.asarray(slot_keys, np.uint32)
+        if slot_keys.shape != (S, 2):
+            raise ValueError(f"slot_keys must be [{S}, 2], "
+                             f"got {slot_keys.shape}")
+        self.game_capacity = _pow2(max(2, game_capacity or 4 * S))
+        self.serve_capacity = _pow2(max(2, serve_capacity or 4 * S))
+        self.ring_capacity = _pow2(
+            ring_capacity
+            or (self.game_capacity + self.serve_capacity + S))
+        cap = 2 ** 30 if colour_cap is None else int(colour_cap)
+
+        A = self.engine.num_actions
+        bc = lambda n: (lambda x: jnp.broadcast_to(x, (n,) + jnp.shape(x)))
+        slots = _Slots(
+            states=jax.tree.map(bc(S), self._init_state),
+            keys=jnp.asarray(slot_keys),
+            ticket=jnp.full((S,), -1, jnp.int32),
+            lane=jnp.full((S,), -1, jnp.int32),
+            moves=jnp.zeros((S,), jnp.int32),
+            sims=jnp.zeros((S,), jnp.int32),
+            a_black=jnp.arange(S) < S // 2,
+        )
+
+        def queue(n):
+            return _Queue(
+                states=jax.tree.map(bc(n), self._init_state),
+                keys=jnp.zeros((n, 2), jnp.uint32),
+                lane=jnp.zeros((n,), jnp.int32),
+                sims=jnp.zeros((n,), jnp.int32),
+                ticket=jnp.full((n,), -1, jnp.int32),
+                size=jnp.int32(0),
+                head=jnp.int32(0),
+            )
+
+        R = self.ring_capacity
+        ring = _Ring(
+            ticket=jnp.full((R,), -1, jnp.int32),
+            lane=jnp.zeros((R,), jnp.int32),
+            action=jnp.zeros((R,), jnp.int32),
+            winner=jnp.zeros((R,), jnp.float32),
+            moves=jnp.zeros((R,), jnp.int32),
+            nodes=jnp.zeros((R,), jnp.int32),
+            a_black=jnp.zeros((R,), jnp.bool_),
+            visits=jnp.zeros((R, A), jnp.float32),
+            count=jnp.int32(0),
+        )
+        self._pool = PoolState(
+            slots=slots, games=queue(self.game_capacity),
+            serve=queue(self.serve_capacity), ring=ring,
+            colour_count=jnp.zeros((2,), jnp.int32),
+            colour_cap=jnp.int32(cap), parity=jnp.int32(0))
+
+        self._pending_games: List[_Pending] = []
+        self._pending_serve: List[_Pending] = []
+        self._next_ticket = 0
+        self._ring_read = 0
+        self._submitted = {LANE_ARENA: 0, LANE_SERVE: 0, LANE_TOURNAMENT: 0}
+        self._completed = dict(self._submitted)
+        self.host_syncs = 0           # host<->device round-trips (flush+poll)
+
+    # ------------------------------------------------------------ submission
+
+    def _draw_key(self, key) -> np.ndarray:
+        if key is None:
+            return self._rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
+        return np.asarray(key, np.uint32).reshape(2)
+
+    def submit_game(self, key=None, lane: int = LANE_ARENA,
+                    sims: int = 0) -> int:
+        """Queue one full self-play game (A vs B); returns its ticket.
+
+        Colour is assigned at admission by the slot-pool cell, capped to
+        the +-1 balance by ``colour_cap`` — exactly the PR 1 host queue.
+        """
+        if lane not in GAME_LANES:
+            raise ValueError(f"game lane must be one of {GAME_LANES}")
+        return self._submit(self._pending_games, self._init_state,
+                            key, lane, sims)
+
+    def submit_serve(self, state: GoState, key=None, sims: int = 0) -> int:
+        """Queue one external best-move query for ``state``; returns its
+        ticket.  The single search always runs under player A's config
+        with the request key, so the result is a pure function of
+        ``(state, key, sims)``."""
+        return self._submit(self._pending_serve, state, key,
+                            LANE_SERVE, sims)
+
+    def _submit(self, pending: List[_Pending], state: GoState, key,
+                lane: int, sims: int) -> int:
+        cap = (self.serve_capacity if lane == LANE_SERVE
+               else self.game_capacity)
+        in_flight = (self._submitted[lane] - self._completed[lane]
+                     if lane == LANE_SERVE else
+                     sum(self._submitted[ln] - self._completed[ln]
+                         for ln in GAME_LANES))
+        if in_flight >= cap:
+            raise RuntimeError(
+                f"{LANE_NAMES[lane]} queue full ({cap} in flight); poll() "
+                "results or reset() with a larger capacity")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        pending.append(_Pending(state=state, key=self._draw_key(key),
+                                lane=lane, sims=int(sims), ticket=ticket))
+        self._submitted[lane] += 1
+        return ticket
+
+    def flush(self) -> None:
+        """Push host-buffered submissions into the device queues."""
+        pushed = False
+        for pending, push in ((self._pending_games, self._push_games),
+                              (self._pending_serve, self._push_serve)):
+            while pending:
+                rows = pending[:self._chunk]
+                del pending[:self._chunk]
+                self._pool = push(self._pool, self._pack(rows),
+                                  jnp.int32(len(rows)))
+                pushed = True
+        if pushed:
+            self.host_syncs += 1
+
+    def _pack(self, rows: List[_Pending]) -> SearchRequest:
+        pad = self._chunk - len(rows)
+        states = [r.state for r in rows] + [self._init_state] * pad
+        return SearchRequest(
+            state=jax.tree.map(lambda *xs: jnp.stack(xs), *states),
+            key=jnp.asarray(np.stack(
+                [r.key for r in rows]
+                + [np.zeros(2, np.uint32)] * pad)),
+            lane=jnp.asarray([r.lane for r in rows] + [0] * pad, jnp.int32),
+            sims=jnp.asarray([r.sims for r in rows] + [0] * pad, jnp.int32),
+            ticket=jnp.asarray([r.ticket for r in rows] + [-1] * pad,
+                               jnp.int32),
+        )
+
+    # ----------------------------------------------------------- device side
+
+    def _push_games_impl(self, pool: PoolState, req: SearchRequest,
+                         n: jax.Array) -> PoolState:
+        return pool._replace(games=_queue_push(pool.games, req, n))
+
+    def _push_serve_impl(self, pool: PoolState, req: SearchRequest,
+                         n: jax.Array) -> PoolState:
+        return pool._replace(serve=_queue_push(pool.serve, req, n))
+
+    def _dispatch_impl(self, pool: PoolState, steps: int) -> PoolState:
+        def one(_, p):
+            return self._advance(self._admit(p))
+
+        return jax.lax.fori_loop(0, steps, one, pool)
+
+    def _admit(self, pool: PoolState) -> PoolState:
+        """Device-side refill: fill empty slots from the pending queues.
+
+        Bit-for-bit the PR 1 host admission loop: slots are scanned in
+        index order; a game's forced colour is its (slot-half, parity)
+        cell, capped per colour; serve queries go first, only into cells
+        player A searches next step.
+        """
+        S, h = self.slots, self.slots // 2
+        sl, gq, sq = pool.slots, pool.games, pool.serve
+        Qg, Qs = self.game_capacity, self.serve_capacity
+        empty = sl.ticket < 0
+        cellA = (jnp.arange(S) < h) == (pool.parity % 2 == 0)
+
+        # serve lane: FIFO into A-searched cells
+        elig_s = empty & cellA
+        rank_s = _excl_cumsum(elig_s)
+        adm_s = elig_s & (rank_s < (sq.size - sq.head))
+        pos_s = (sq.head + rank_s) % Qs
+
+        # game lanes: colour-capped FIFO over the remaining empties
+        empty_g = empty & ~adm_s
+        budget = pool.colour_cap - pool.colour_count          # i32[2]
+        rank_c = jnp.where(cellA, _excl_cumsum(empty_g & cellA),
+                           _excl_cumsum(empty_g & ~cellA))
+        elig_g = empty_g & (rank_c < budget[cellA.astype(jnp.int32)])
+        rank_g = _excl_cumsum(elig_g)
+        adm_g = elig_g & (rank_g < (gq.size - gq.head))
+        pos_g = (gq.head + rank_g) % Qg
+
+        def sel(mask, new, old):
+            m = mask.reshape((S,) + (1,) * (old.ndim - 1))
+            return jnp.where(m, new, old)
+
+        def merge(cur, sbuf, gbuf):
+            return sel(adm_s, sbuf[pos_s], sel(adm_g, gbuf[pos_g], cur))
+
+        refilled = adm_s | adm_g
+        slots = _Slots(
+            states=jax.tree.map(merge, sl.states, sq.states, gq.states),
+            keys=merge(sl.keys, sq.keys, gq.keys),
+            ticket=merge(sl.ticket, sq.ticket, gq.ticket),
+            lane=merge(sl.lane, sq.lane, gq.lane),
+            moves=jnp.where(refilled, 0, sl.moves),
+            sims=merge(sl.sims, sq.sims, gq.sims),
+            a_black=jnp.where(adm_s, True,
+                              jnp.where(adm_g, cellA, sl.a_black)),
+        )
+        colour_count = pool.colour_count + jnp.stack([
+            (adm_g & ~cellA).sum(), (adm_g & cellA).sum()])
+        return pool._replace(
+            slots=slots,
+            games=gq._replace(head=gq.head + adm_g.sum()),
+            serve=sq._replace(head=sq.head + adm_s.sum()),
+            colour_count=colour_count.astype(jnp.int32))
+
+    def _advance(self, pool: PoolState) -> PoolState:
+        """One move in every slot: the parity-balanced half-batch search."""
+        S, h = self.slots, self.slots // 2
+        sl = pool.slots
+        shift = jnp.where(pool.parity % 2 == 0, 0, h)
+        idx = (jnp.arange(S, dtype=jnp.int32) + shift) % S    # involution
+
+        st = jax.tree.map(lambda x: x[idx], sl.states)
+        keys_p = sl.keys[idx]
+        k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys_p)
+        new_keys, ka, kb = k3[:, 0], k3[:, 1], k3[:, 2]
+        sims_p = sl.sims[idx]
+        is_serve = (sl.lane == LANE_SERVE) & (sl.ticket >= 0)
+        # serve contract: the query key drives its (single) search directly
+        ka = jnp.where(is_serve[idx][:, None], keys_p, ka)
+
+        head = jax.tree.map(lambda x: x[:h], st)
+        tail = jax.tree.map(lambda x: x[h:], st)
+        res_a = self.player_a.search_batch(head, ka[:h], sims_p[:h])
+        res_b = self.player_b.search_batch(tail, kb[h:], sims_p[h:])
+        actions = jnp.concatenate([res_a.action, res_b.action])
+        nodes = jnp.concatenate([res_a.tree.size, res_b.tree.size])
+        visits = jnp.concatenate([res_a.root_visits, res_b.root_visits])
+
+        new_st = jax.vmap(self.engine.play)(st, actions)
+
+        # un-permute with the same involution gather
+        new_st = jax.tree.map(lambda x: x[idx], new_st)
+        new_keys = new_keys[idx]
+        actions = actions[idx]
+        nodes = nodes[idx]
+        visits = visits[idx]
+
+        live = sl.ticket >= 0
+        moves_new = sl.moves + jnp.where(live, 1, 0)
+        game_done = live & ~is_serve & (new_st.done
+                                        | (moves_new >= self.max_moves))
+        finished = is_serve | game_done
+        winner = jax.vmap(self.engine.result)(new_st)
+
+        ring = self._append_ring(pool.ring, finished, sl, actions, winner,
+                                 moves_new, nodes, visits)
+        slots = _Slots(
+            states=new_st, keys=new_keys,
+            ticket=jnp.where(finished, -1, sl.ticket),
+            lane=sl.lane, moves=moves_new, sims=sl.sims,
+            a_black=sl.a_black)
+        return pool._replace(slots=slots, ring=ring,
+                             parity=pool.parity + 1)
+
+    def _append_ring(self, ring: _Ring, finished, sl: _Slots, actions,
+                     winner, moves, nodes, visits) -> _Ring:
+        R = self.ring_capacity
+        off = ring.count + _excl_cumsum(finished)
+        widx = jnp.where(finished, off % R, R)                 # R: dropped
+
+        def put(buf, val):
+            return buf.at[widx].set(val, mode="drop")
+
+        return ring._replace(
+            ticket=put(ring.ticket, sl.ticket),
+            lane=put(ring.lane, sl.lane),
+            action=put(ring.action, actions),
+            winner=put(ring.winner, winner),
+            moves=put(ring.moves, moves),
+            nodes=put(ring.nodes, nodes),
+            a_black=put(ring.a_black, sl.a_black),
+            visits=put(ring.visits, visits),
+            count=ring.count + finished.sum(),
+        )
+
+    # --------------------------------------------------------------- polling
+
+    def dispatch(self, steps: Optional[int] = None) -> None:
+        """Run ``steps`` (default ``superstep``) moves without host sync."""
+        self._pool = self._dispatch(self._pool, int(steps or self.superstep))
+
+    def poll(self) -> List[SearchResult]:
+        """Drain newly finished requests from the result ring.
+
+        Transfers scale with *new* results, not ring capacity: one scalar
+        sync reads the append counter, and only when it moved does a
+        second sync gather the unread rows (so an idle poll costs one
+        scalar round-trip and no ``[R, A]`` visits traffic).
+        """
+        ring = self._pool.ring
+        count = int(jax.device_get(ring.count))
+        self.host_syncs += 1
+        new = count - self._ring_read
+        if new == 0:
+            return []
+        if new > self.ring_capacity:
+            raise RuntimeError(
+                f"result ring overflowed ({new} unread > capacity "
+                f"{self.ring_capacity}); poll() more often or reset() "
+                "with a larger ring_capacity")
+        idx = jnp.asarray([i % self.ring_capacity
+                           for i in range(self._ring_read, count)])
+        ticket, lane, action, winner, moves, nodes, a_black, visits = \
+            jax.device_get(jax.tree.map(
+                lambda buf: buf[idx],
+                (ring.ticket, ring.lane, ring.action, ring.winner,
+                 ring.moves, ring.nodes, ring.a_black, ring.visits)))
+        self.host_syncs += 1
+        out = []
+        for j in range(new):
+            rec = SearchResult(
+                ticket=int(ticket[j]), lane=int(lane[j]),
+                action=int(action[j]), winner=float(winner[j]),
+                moves=int(moves[j]), tree_nodes=int(nodes[j]),
+                a_is_black=bool(a_black[j]),
+                root_visits=np.array(visits[j]))
+            self._completed[rec.lane] += 1
+            out.append(rec)
+        self._ring_read = count
+        return out
+
+    @property
+    def outstanding(self) -> int:
+        """Submitted (including still-pending) but not yet completed."""
+        return sum(self._submitted.values()) - sum(self._completed.values())
+
+    def drain(self, max_steps: Optional[int] = None) -> List[SearchResult]:
+        """Flush, then dispatch+poll until every submission completes."""
+        self.flush()
+        budget = max_steps or (self.outstanding * (self.max_moves + 2)
+                               + 2 * self.slots + 16)
+        out: List[SearchResult] = []
+        steps = 0
+        while self.outstanding > 0:
+            if steps > budget:
+                raise RuntimeError(
+                    f"SearchService.drain stalled: {self.outstanding} "
+                    f"requests still outstanding after {steps} steps")
+            self.dispatch()
+            steps += self.superstep
+            out.extend(self.poll())
+        return out

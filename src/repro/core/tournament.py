@@ -1,0 +1,127 @@
+"""Round-robin tournament scheduler on the SearchService dispatcher.
+
+The paper's self-play methodology is a single 2x-vs-1x pairing; the
+tournament scheduler generalises it to the full cross table the ROADMAP
+calls for: every unordered pair of configurations plays a colour-balanced
+mini-match, and all games flow through one SearchService slot pool
+(``LANE_TOURNAMENT`` tickets) — the same admission-controlled dispatch
+that serves self-play and external queries.
+
+Pairs are scheduled through the pool round-robin.  Search shapes (lanes,
+budget) are *static* to the compiled dispatch, so every pair compiles its
+own dispatch step (each pairing binds fresh players, and a jitted bound
+method owns its own cache — making same-shape pairs share one compiled
+program needs the per-slot traced (c_uct, virtual_loss) follow-up in the
+ROADMAP).  Within a pair, games run concurrently across the pool's slots
+with device-side refill and colour balance +-1 (the paper's
+alternating-colours methodology).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import MCTSConfig
+from repro.core import stats
+from repro.core.mcts import MCTS
+from repro.core.service import LANE_TOURNAMENT, SearchService
+from repro.go.board import GoEngine
+
+
+class PairResult(NamedTuple):
+    """One pairing's mini-match, from player i's perspective."""
+    i: int
+    j: int
+    i_wins: int
+    j_wins: int
+    draws: int
+    rate: stats.WinRate       # i's win rate with 95% CI
+
+
+class TournamentResult(NamedTuple):
+    names: Tuple[str, ...]
+    pairs: Dict[Tuple[int, int], PairResult]
+    points: np.ndarray        # f64[P]: 1 per win, 0.5 per draw
+    games: int                # total games played
+
+    def table(self) -> str:
+        """Human-readable standings, best first."""
+        played = np.zeros(len(self.names), np.int64)
+        for (i, j), pr in self.pairs.items():
+            n = pr.i_wins + pr.j_wins + pr.draws
+            played[i] += n
+            played[j] += n
+        order = np.argsort(-self.points)
+        width = max(len(n) for n in self.names)
+        lines = [f"{'player':<{width}}  points  games"]
+        for p in order:
+            lines.append(f"{self.names[p]:<{width}}  "
+                         f"{self.points[p]:<6.1f}  {played[p]}")
+        return "\n".join(lines)
+
+
+class Tournament:
+    """All-pairs round-robin between MCTS configurations, one shared pool."""
+
+    def __init__(self, engine: GoEngine, configs: Sequence[MCTSConfig],
+                 names: Optional[Sequence[str]] = None,
+                 games_per_pair: int = 2, slots: int = 0,
+                 max_moves: Optional[int] = None, seed: int = 0,
+                 superstep: int = 4, **mcts_kw):
+        if len(configs) < 2:
+            raise ValueError("tournament needs at least 2 configs")
+        if names is not None and len(names) != len(configs):
+            raise ValueError("names must match configs")
+        self.engine = engine
+        self.configs = list(configs)
+        self.names = tuple(names) if names is not None else tuple(
+            f"cfg{i}:{c.lanes}x{c.sims_per_move}"
+            for i, c in enumerate(configs))
+        self.games_per_pair = games_per_pair
+        slots = slots or min(games_per_pair, 8)
+        self.slots = max(2, slots + (slots % 2))
+        self.max_moves = max_moves
+        self.seed = seed
+        self.superstep = superstep
+        self.mcts_kw = mcts_kw
+        self.host_syncs = 0
+
+    def round_robin(self) -> TournamentResult:
+        """Play every pair's mini-match through the service pool."""
+        P = len(self.configs)
+        points = np.zeros(P)
+        pairs: Dict[Tuple[int, int], PairResult] = {}
+        total = 0
+        self.host_syncs = 0
+        for n, (i, j) in enumerate(itertools.combinations(range(P), 2)):
+            pair = self._play_pair(i, j, seed=self.seed + 1000 * n)
+            pairs[(i, j)] = pair
+            points[i] += pair.i_wins + 0.5 * pair.draws
+            points[j] += pair.j_wins + 0.5 * pair.draws
+            total += pair.i_wins + pair.j_wins + pair.draws
+        return TournamentResult(names=self.names, pairs=pairs,
+                                points=points, games=total)
+
+    def _play_pair(self, i: int, j: int, seed: int) -> PairResult:
+        g = self.games_per_pair
+        player_i = MCTS(self.engine, self.configs[i], **self.mcts_kw)
+        player_j = MCTS(self.engine, self.configs[j], **self.mcts_kw)
+        svc = SearchService(self.engine, player_i, player_j, self.slots,
+                            max_moves=self.max_moves,
+                            superstep=self.superstep)
+        svc.reset(seed=seed, colour_cap=(g + 1) // 2, game_capacity=g,
+                  ring_capacity=g + self.slots)
+        for _ in range(g):
+            svc.submit_game(lane=LANE_TOURNAMENT)
+        recs = svc.drain()
+        self.host_syncs += svc.host_syncs
+        # +1 = player i won (i is "player A": owns Black where a_is_black)
+        i_res = [r.winner * (1.0 if r.a_is_black else -1.0) for r in recs]
+        i_wins = sum(1 for v in i_res if v > 0)
+        j_wins = sum(1 for v in i_res if v < 0)
+        draws = sum(1 for v in i_res if v == 0)
+        return PairResult(i=i, j=j, i_wins=i_wins, j_wins=j_wins,
+                          draws=draws,
+                          rate=stats.win_rate(i_wins, j_wins, draws))

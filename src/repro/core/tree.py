@@ -124,6 +124,19 @@ def allocate(engine: GoEngine, tree: Tree, parent, action,
     return tree, idx
 
 
+def select_action(visits: jax.Array, legal: jax.Array) -> jax.Array:
+    """Most-visited legal action, falling back to any legal move.
+
+    The fallback covers tiny budgets where no legal child was explored
+    (visits all zero under the mask).  Shared by ``MCTS`` and the
+    distributed root-merge so every consumer picks moves identically.
+    """
+    masked = jnp.where(legal, visits, -1.0)
+    action = jnp.argmax(masked).astype(jnp.int32)
+    fallback = jnp.argmax(legal).astype(jnp.int32)
+    return jnp.where(masked[action] > 0, action, fallback)
+
+
 def root_action_visits(tree: Tree) -> jax.Array:
     """Visit count per root action (0 where no child)."""
     kids = tree.children[0]

@@ -37,6 +37,10 @@ def main() -> None:
                     help="concurrent arena games (0 = one slot per game)")
     ap.add_argument("--max-moves", type=int, default=0,
                     help="per-game move cap (0 = engine default)")
+    ap.add_argument("--refill", default="device",
+                    choices=("device", "host"),
+                    help="slot refill: SearchService device-side queue "
+                         "(default) or the PR 1 host queue")
     args = ap.parse_args()
 
     eng = GoEngine(args.board, args.komi)
@@ -48,7 +52,8 @@ def main() -> None:
     res = effective_speedup_point(eng, cfg, games=args.games,
                                   seed=args.seed,
                                   batch=args.arena_slots,
-                                  max_moves=args.max_moves or None)
+                                  max_moves=args.max_moves or None,
+                                  refill=args.refill)
     dt = time.time() - t0
     moves = res.mean_moves * args.games
     print(f"board {args.board}x{args.board}  {2 * args.lanes} vs "

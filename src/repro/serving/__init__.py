@@ -1,3 +1,5 @@
 from repro.serving.engine import ServeEngine, make_prefill_fn, make_decode_fn
+from repro.serving.go_service import GoService, MoveResult
 
-__all__ = ["ServeEngine", "make_prefill_fn", "make_decode_fn"]
+__all__ = ["ServeEngine", "make_prefill_fn", "make_decode_fn",
+           "GoService", "MoveResult"]

@@ -27,14 +27,24 @@ def make_prefill_fn(model: TransformerLM, max_len: int):
 
 
 def make_decode_fn(model: TransformerLM, temperature: float = 0.0):
+    """Jitted decode step with ``temperature`` as a *traced* argument.
+
+    The seed baked the temperature into the jit closure, so every
+    temperature change recompiled the decode executable.  Now greedy and
+    sampled picks are both computed and selected branch-free, so one
+    compilation serves all temperatures — pass a ``jnp`` scalar per call
+    (``ServeEngine.generate`` does); the make-time float is only the
+    default for legacy 4-argument callers.
+    """
     @functools.partial(jax.jit, donate_argnums=(1,))
-    def decode(params, cache: LMCache, tokens, rng):
+    def decode(params, cache: LMCache, tokens, rng, temperature=temperature):
         logits, cache = model.decode_step(params, cache, tokens)
         logits = logits[:, -1]
-        if temperature > 0:
-            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits, axis=-1)
+        temperature = jnp.asarray(temperature, logits.dtype)
+        safe = jnp.maximum(temperature, jnp.asarray(1e-6, logits.dtype))
+        sampled = jax.random.categorical(rng, logits / safe, axis=-1)
+        greedy = jnp.argmax(logits, axis=-1)
+        nxt = jnp.where(temperature > 0, sampled, greedy)
         return nxt.astype(jnp.int32)[:, None], cache
 
     return decode
@@ -52,8 +62,9 @@ class ServeEngine:
         self.max_prompt = max_prompt
         self.max_new = max_new
         self.eos = eos_id
+        self.temperature = temperature
         self.prefill = make_prefill_fn(model, max_prompt + max_new)
-        self.decode = make_decode_fn(model, temperature)
+        self.decode = make_decode_fn(model)
 
     def _pad_prompts(self, prompts: List[List[int]]):
         assert len(prompts) <= self.batch
@@ -64,8 +75,16 @@ class ServeEngine:
         return jnp.asarray(toks)
 
     def generate(self, prompts: List[List[int]], seed: int = 0,
-                 frontend=None) -> List[List[int]]:
-        """Greedy/temperature generation for a batch of token prompts."""
+                 frontend=None,
+                 temperature: float | None = None) -> List[List[int]]:
+        """Greedy/temperature generation for a batch of token prompts.
+
+        ``temperature`` overrides the engine default per call; it is a
+        traced argument of the decode step, so varying it between calls
+        never recompiles.
+        """
+        temp = jnp.float32(self.temperature if temperature is None
+                           else temperature)
         tokens = self._pad_prompts(prompts)
         logits, cache = self.prefill(self.params, tokens, frontend)
         nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
@@ -74,7 +93,7 @@ class ServeEngine:
         done = np.zeros((self.batch,), bool)
         for _ in range(self.max_new - 1):
             rng, sub = jax.random.split(rng)
-            nxt, cache = self.decode(self.params, cache, nxt, sub)
+            nxt, cache = self.decode(self.params, cache, nxt, sub, temp)
             host = np.asarray(nxt)
             done |= (host[:, 0] == self.eos)
             outs.append(host)

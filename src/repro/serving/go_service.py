@@ -1,0 +1,187 @@
+"""GoService: batched external best-move queries (queue -> ticket -> poll).
+
+The Go-side counterpart of :class:`~repro.serving.engine.ServeEngine`'s
+fixed-bucket pattern: requests are admitted into a fixed-capacity
+SearchService slot pool so one compiled dispatch serves every query.  The
+static bucket axes are ``(board_size, komi, max_sims)`` — a new komi opens
+a new bucket (engine komi is baked into playout scoring), while the
+per-request ``sims`` knob is *traced* (masked search tail), so budgets
+from 1 to ``max_sims`` share one executable.
+
+A query is a pure function of ``(board, to_play, sims, key)``: the
+dispatcher admits serve tickets only into cells searched by the bucket's
+single player, and the search consumes the request key directly, so
+results do not depend on slot placement or on what else shares the batch
+(tests/test_service.py pins this).
+
+Typical use::
+
+    svc = GoService(board_size=9, komi=6.0, max_sims=256)
+    move = svc.best_move(board)                 # one blocking query
+    tickets = [svc.submit(b) for b in boards]   # batched: queue ...
+    moves = [svc.result(t) for t in tickets]    # ... then poll tickets
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.core.service import SearchService
+from repro.go.board import BLACK, NO_KO, GoEngine, GoState
+
+
+class MoveResult(NamedTuple):
+    """One answered best-move query."""
+    ticket: int
+    action: int               # 0..n2-1 point, n2 = pass
+    coord: Optional[Tuple[int, int]]   # (row, col), None for pass
+    is_pass: bool
+    root_visits: np.ndarray   # f32[A] root visit distribution
+
+
+class GoService:
+    """Fixed-bucket batched Go move service over SearchService pools."""
+
+    def __init__(self, board_size: int = 9, komi: float = 6.0,
+                 max_sims: int = 64, lanes: int = 8, slots: int = 8,
+                 max_nodes: int = 0, superstep: int = 2, seed: int = 0,
+                 queue_capacity: int = 0, **mcts_kw):
+        self.board_size = int(board_size)
+        self.default_komi = float(komi)
+        self.max_sims = int(max_sims)
+        self.lanes = int(lanes)
+        self.slots = max(2, slots + (slots % 2))
+        self.max_nodes = int(max_nodes) or max(256, 4 * max_sims)
+        self.superstep = superstep
+        self.seed = seed
+        self.queue_capacity = queue_capacity or 4 * self.slots
+        self.mcts_kw = mcts_kw
+        self._buckets: Dict[float, SearchService] = {}
+        self._tickets: Dict[int, Tuple[float, int]] = {}  # ticket -> bucket
+        self._done: Dict[int, MoveResult] = {}
+        self._next_ticket = 0
+        self._rng = np.random.default_rng(seed)
+        self._bucket(self.default_komi)       # compile the default bucket
+
+    # ---------------------------------------------------------------- bucket
+
+    def _bucket(self, komi: float) -> SearchService:
+        svc = self._buckets.get(komi)
+        if svc is None:
+            engine = GoEngine(self.board_size, komi=komi)
+            cfg = MCTSConfig(board_size=self.board_size, komi=komi,
+                             lanes=self.lanes, sims_per_move=self.max_sims,
+                             max_nodes=self.max_nodes)
+            player = MCTS(engine, cfg, **self.mcts_kw)
+            svc = SearchService(engine, player, player, self.slots,
+                                superstep=self.superstep)
+            svc.reset(seed=self.seed, serve_capacity=self.queue_capacity,
+                      game_capacity=2)
+            self._buckets[komi] = svc
+        return svc
+
+    @property
+    def host_syncs(self) -> int:
+        return sum(b.host_syncs for b in self._buckets.values())
+
+    def _to_state(self, board, to_play: int, engine: GoEngine) -> GoState:
+        b = np.asarray(board, np.int8).reshape(-1)
+        if b.shape[0] != engine.n2:
+            raise ValueError(f"board must have {engine.n2} points for "
+                             f"{self.board_size}x{self.board_size}, "
+                             f"got {b.shape[0]}")
+        return GoState(board=jnp.asarray(b),
+                       to_play=jnp.int8(to_play),
+                       ko=jnp.int32(NO_KO),
+                       pass_count=jnp.int32(0),
+                       move_count=jnp.int32(0),
+                       done=jnp.bool_(False))
+
+    # ----------------------------------------------------------------- queue
+
+    def submit(self, board, to_play: int = BLACK,
+               komi: Optional[float] = None, sims: int = 0,
+               key=None) -> int:
+        """Queue one best-move query; returns a ticket for :meth:`result`.
+
+        ``sims`` caps the playout budget (0 / > max_sims both mean
+        ``max_sims``); ``key`` fixes the search RNG for reproducible
+        answers (default: drawn from the service chain).
+        """
+        komi = self.default_komi if komi is None else float(komi)
+        svc = self._bucket(komi)
+        if key is None:
+            key = self._rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
+        state = self._to_state(board, to_play, svc.engine)
+        inner = svc.submit_serve(state, key=key, sims=int(sims))
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._tickets[ticket] = (komi, inner)
+        return ticket
+
+    def flush(self) -> None:
+        for svc in self._buckets.values():
+            svc.flush()
+
+    def poll(self) -> List[int]:
+        """Advance every bucket one superstep; returns newly done tickets."""
+        done = []
+        inner_to_ticket = {(k, inn): t
+                           for t, (k, inn) in self._tickets.items()
+                           if t not in self._done}
+        for komi, svc in self._buckets.items():
+            if svc.outstanding == 0:
+                continue
+            svc.flush()
+            svc.dispatch()
+            for rec in svc.poll():
+                ticket = inner_to_ticket.get((komi, rec.ticket))
+                if ticket is None:
+                    continue        # a game lane sharing the bucket
+                n2 = svc.engine.n2
+                is_pass = rec.action >= n2
+                coord = (None if is_pass else
+                         (rec.action // self.board_size,
+                          rec.action % self.board_size))
+                self._done[ticket] = MoveResult(
+                    ticket=ticket, action=rec.action, coord=coord,
+                    is_pass=is_pass, root_visits=rec.root_visits)
+                done.append(ticket)
+        return done
+
+    def result(self, ticket: int, wait: bool = True,
+               max_polls: int = 10_000) -> Optional[MoveResult]:
+        """Fetch a ticket's move; blocks (dispatching) unless ``wait=False``."""
+        if ticket not in self._tickets:
+            raise KeyError(f"unknown ticket {ticket}")
+        polls = 0
+        while ticket not in self._done:
+            if not wait:
+                return None
+            if polls >= max_polls:
+                raise RuntimeError(f"ticket {ticket} not done after "
+                                   f"{polls} polls")
+            self.poll()
+            polls += 1
+        del self._tickets[ticket]
+        return self._done.pop(ticket)
+
+    # ------------------------------------------------------------ one-liners
+
+    def best_move(self, board, to_play: int = BLACK,
+                  komi: Optional[float] = None, sims: int = 0,
+                  key=None) -> MoveResult:
+        """Blocking single query: board in, move out."""
+        return self.result(self.submit(board, to_play, komi, sims, key))
+
+    def best_move_batch(self, boards, to_play: int = BLACK,
+                        komi: Optional[float] = None,
+                        sims: int = 0) -> List[MoveResult]:
+        """Queue a batch of queries, then poll them all (one pool pass)."""
+        tickets = [self.submit(b, to_play, komi, sims) for b in boards]
+        self.flush()
+        return [self.result(t) for t in tickets]

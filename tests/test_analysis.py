@@ -85,6 +85,22 @@ class TestServeEngine:
         b = eng.generate([[3, 4, 5]], seed=99)   # greedy ignores seed
         assert a == b
 
+    def test_temperature_is_traced_not_baked(self):
+        """Changing temperature must reuse the compiled decode step (the
+        seed baked it into the jit closure and recompiled per value)."""
+        from repro.configs.reduced import reduced
+        from repro.models import build_model
+        from repro.serving import ServeEngine
+        cfg = reduced("yi-6b")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(2))
+        eng = ServeEngine(model, params, batch=1, max_prompt=8, max_new=3,
+                          eos_id=10 ** 6)
+        for temp in (0.0, 0.7, 1.3):
+            out = eng.generate([[3, 4, 5]], seed=0, temperature=temp)
+            assert all(0 <= t < cfg.vocab_size for t in out[0])
+        assert eng.decode._cache_size() == 1
+
 
 class TestAnalyzeEndToEnd:
     def test_small_jit_flops(self):
