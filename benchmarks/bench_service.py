@@ -2,37 +2,60 @@
 
 Measures the unified dispatcher (core/service.py) against the PR 1 arena
 path (host-queue refill, one host sync per step) on the 5x5 reference
-config, and a mixed workload (arena games + serve queries sharing one
-slot pool).  The device-side refill moves admission and result collection
-into the jitted dispatch, so the host only flushes submissions and polls
-the result ring once per ``superstep`` moves — ``host_syncs_per_move``
-makes that reduction machine-checkable (the paper's scheduling thesis:
-the loop shape, not the lane count, sets throughput).
+config, a mixed workload (arena games + serve queries sharing one slot
+pool), and — schema ``bench_service/v2`` — a ``shards x placement`` sweep
+of the mesh-sharded pool: the same slot count split over 1..N devices
+(``--devices`` fakes them on CPU), every row reporting per-shard
+occupancy and sims/sec scaling against the one-shard dispatcher.  The
+device-side refill moves admission and result collection into the jitted
+dispatch, so the host only flushes submissions and polls the result ring
+once per ``superstep`` moves — ``host_syncs_per_move`` makes that
+reduction machine-checkable (the paper's scheduling thesis: the loop
+shape, not the lane count, sets throughput; the sweep is its
+slot-placement analogue).
 
-Both paths are warmed (compile excluded) and play bit-identical games;
-"useful" sims are the mover's, as in benchmarks/bench_arena.py.
+Both refill paths are warmed (compile excluded) and play bit-identical
+games; "useful" sims are the mover's, as in benchmarks/bench_arena.py.
 
-    PYTHONPATH=src python benchmarks/bench_service.py [--out BENCH_service.json]
+    PYTHONPATH=src python benchmarks/bench_service.py \
+        [--out BENCH_service.json] [--devices 8]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 if __package__ in (None, ""):                    # `python benchmarks/...`
-    import os
-    import sys
     sys.path.insert(0, os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))))
+
+# --devices N / --devices=N fakes N CPU devices for the sharded sweep; the
+# flag must land before jax initialises its backend (launch/mesh.py rule)
+_dev = None
+for _i, _arg in enumerate(sys.argv):
+    if _arg == "--devices" and _i + 1 < len(sys.argv):
+        _dev = sys.argv[_i + 1]
+    elif _arg.startswith("--devices="):
+        _dev = _arg.split("=", 1)[1]
+if _dev is not None and int(_dev) > 1:
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in _flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={_dev}"
+            .strip())
 
 import jax
 import numpy as np
 
 from benchmarks.common import csv_row
+from repro.compat import make_service_mesh
 from repro.config import MCTSConfig
 from repro.core.arena import Arena
 from repro.core.mcts import MCTS
+from repro.core.placement import POLICIES
 from repro.core.selfplay import double_resources
 from repro.core.service import LANE_SERVE, SearchService
 from repro.go import GoEngine
@@ -42,7 +65,7 @@ KOMI = 0.5
 MOVE_CAP = 30
 MAX_NODES = 128
 SERVE_SIMS = 16
-SCHEMA = "bench_service/v1"
+SCHEMA = "bench_service/v2"
 
 
 def _useful_sims(total_moves: float, sims_a: int, sims_b: int) -> float:
@@ -122,11 +145,79 @@ def time_mixed_workload(engine: GoEngine, cfg_a: MCTSConfig,
     sims = (_useful_sims(game_moves, cfg_a.sims_per_move,
                          cfg_b.sims_per_move) + n_serve * SERVE_SIMS)
     moves = game_moves + n_serve
-    return {"wall_s": wall, "games": games, "serve_queries": n_serve,
+    return {"shards": 1, "wall_s": wall, "games": games,
+            "serve_queries": n_serve,
             "serve_sims": SERVE_SIMS, "moves": moves, "sims": sims,
             "sims_per_sec": sims / wall, "moves_per_sec": moves / wall,
             "host_syncs": svc.host_syncs,
             "host_syncs_per_move": svc.host_syncs / moves}
+
+
+def time_sharded_cell(svc: SearchService, games: int, seed: int,
+                      repeats: int = 2) -> dict:
+    """One (shards, placement) sweep cell through a prepared service."""
+
+    def run(s):
+        svc.reset(seed=s, colour_cap=(games + 1) // 2,
+                  game_capacity=games, ring_capacity=games + svc.slots)
+        for _ in range(games):
+            svc.submit_game()
+        return svc.drain()
+
+    run(seed + 1000)                             # warm / compile
+    wall = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        recs = run(seed)
+        wall = min(wall, time.perf_counter() - t0)
+    moves = float(sum(r.moves for r in recs))
+    sims = _useful_sims(moves, svc.player_a.cfg.sims_per_move,
+                        svc.player_b.cfg.sims_per_move)
+    return {
+        "shards": svc.n_shard,
+        "placement": svc.placement if svc.mesh is not None else None,
+        "games": len(recs), "slots": svc.slots, "wall_s": wall,
+        "moves": moves, "sims": sims,
+        "sims_per_sec": sims / wall, "moves_per_sec": moves / wall,
+        "host_syncs_per_move": svc.host_syncs / moves,
+        "shard_occupancy": [round(float(o), 4)
+                            for o in svc.shard_occupancy()],
+    }
+
+
+def run_sharded_sweep(games: int, seed: int, devices: int) -> dict:
+    """shards x placement over a fixed total slot count (weak shards,
+    constant work): splitting the same pool over more devices isolates
+    the dispatch-partitioning cost — the paper's thread-placement axis.
+
+    Placement rows share one compiled service (placement is host-side
+    routing, so changing it must not retrace — reusing the service also
+    proves that).  ``speedup_vs_1shard`` is each row's sims/sec over the
+    one-shard (mesh-free) dispatcher on the identical workload.
+    """
+    engine = GoEngine(BOARD, komi=KOMI)
+    base = MCTSConfig(board_size=BOARD, lanes=2, sims_per_move=16,
+                      max_nodes=MAX_NODES)
+    player_a, player_b = (MCTS(engine, double_resources(base)),
+                          MCTS(engine, base))
+    slots = 2 * devices
+    # each shard needs an even slot share: slots % (2s) == 0 <=> devices % s
+    shard_counts = [s for s in (1, 2, 4, 8, 16)
+                    if s <= devices and devices % s == 0]
+    rows = []
+    for shards in shard_counts:
+        mesh = None if shards == 1 else make_service_mesh(shards)
+        svc = SearchService(engine, player_a, player_b, slots,
+                            max_moves=MOVE_CAP, mesh=mesh)
+        pols = POLICIES if shards == shard_counts[-1] and shards > 1 \
+            else ("round_robin",)
+        for pol in pols:
+            svc.placement = pol            # re-read by reset(); no retrace
+            rows.append(time_sharded_cell(svc, games, seed))
+    base_rate = rows[0]["sims_per_sec"]
+    for row in rows:
+        row["speedup_vs_1shard"] = row["sims_per_sec"] / base_rate
+    return {"devices": devices, "slots": slots, "sweep": rows}
 
 
 def run_reference(games: int, seed: int) -> dict:
@@ -140,6 +231,7 @@ def run_reference(games: int, seed: int) -> dict:
     out = {
         "board": BOARD, "games": games, "lanes": base.lanes,
         "sims_per_move": base.sims_per_move, "move_cap": MOVE_CAP,
+        "shards": 1,
         "arena_wall_s": host["wall_s"],
         "arena_sims_per_sec": host["sims"] / host["wall_s"],
         "arena_host_syncs_per_move": host["host_syncs_per_move"],
@@ -161,10 +253,10 @@ def run_mixed(games: int, queries: int, seed: int) -> dict:
                                games, queries, seed)
 
 
-def _payload(ref: dict, mixed: dict) -> dict:
+def _payload(ref: dict, mixed: dict, sharded: dict) -> dict:
     return {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
             "move_cap": MOVE_CAP, "max_nodes": MAX_NODES,
-            "reference": ref, "mixed": mixed}
+            "reference": ref, "mixed": mixed, "sharded": sharded}
 
 
 def run() -> None:
@@ -176,8 +268,9 @@ def run() -> None:
     mixed = run_mixed(games=8, queries=8, seed=0)
     csv_row("service_mixed_pool", mixed["wall_s"],
             f"sims/s={mixed['sims_per_sec']:.0f}")
+    sharded = run_sharded_sweep(games=8, seed=0, devices=jax.device_count())
     with open("BENCH_service.json", "w") as f:
-        json.dump(_payload(ref, mixed), f, indent=2, sort_keys=True)
+        json.dump(_payload(ref, mixed, sharded), f, indent=2, sort_keys=True)
 
 
 def main() -> None:
@@ -186,7 +279,12 @@ def main() -> None:
     ap.add_argument("--games", type=int, default=8)
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=1,
+                    help="fake this many CPU devices for the sharded sweep "
+                         "(must be the first jax initialisation)")
     args = ap.parse_args()
+    devices = min(args.devices, jax.device_count()) if args.devices > 1 \
+        else jax.device_count()
 
     print("# service dispatcher vs PR 1 arena path "
           f"({BOARD}x{BOARD}, move cap {MOVE_CAP})")
@@ -205,8 +303,19 @@ def main() -> None:
           f"queries -> {mixed['sims_per_sec']:.0f} sims/s "
           f"({mixed['host_syncs_per_move']:.2f} syncs/move)")
 
+    sharded = run_sharded_sweep(args.games, args.seed, devices)
+    for row in sharded["sweep"]:
+        occ = " ".join(f"{o:.2f}" for o in row["shard_occupancy"])
+        print(f"sharded {row['shards']}x{row['slots'] // row['shards']} "
+              f"slots ({row['placement'] or 'single'}): "
+              f"{row['sims_per_sec']:.0f} sims/s "
+              f"({row['speedup_vs_1shard']:.2f}x vs 1 shard)  occ [{occ}]")
+    csv_row("service_sharded_sweep", sharded["sweep"][-1]["wall_s"],
+            f"shards={sharded['sweep'][-1]['shards']};"
+            f"scale={sharded['sweep'][-1]['speedup_vs_1shard']:.2f}")
+
     with open(args.out, "w") as f:
-        json.dump(_payload(ref, mixed), f, indent=2, sort_keys=True)
+        json.dump(_payload(ref, mixed, sharded), f, indent=2, sort_keys=True)
     print(f"wrote {args.out}")
 
 

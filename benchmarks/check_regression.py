@@ -1,0 +1,94 @@
+"""CI perf gate: compare a fresh BENCH_service.json against a baseline.
+
+The bench artifacts became machine-checkable in PR 1/2; this gate is their
+first consumer.  CI runs ``bench_service.py`` on the smoke cell, then:
+
+    python benchmarks/check_regression.py BENCH_service.json \\
+        --baseline benchmarks/baselines/ci_cpu.json
+
+A metric *fails* when it drops more than ``tolerance`` (default from the
+baseline file, +-30%) below the checked-in value — the paper's lesson is
+that scheduling regressions show up as throughput collapse, so the gate
+watches sims/sec.  Runs *above* the band only warn (faster CI hardware is
+not a bug) with a hint to refresh the baseline via ``--update``.
+
+Only single-device metrics are gated: the sharded sweep's faked devices
+share one physical CPU, so its wall clock measures host contention, not
+code regressions — those rows ride along as artifacts instead.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# gated metrics: name -> extractor over the BENCH_service.json payload
+METRICS = {
+    "reference.arena_sims_per_sec": lambda d: d["reference"]["arena_sims_per_sec"],
+    "reference.service_sims_per_sec": lambda d: d["reference"]["service_sims_per_sec"],
+    "mixed.sims_per_sec": lambda d: d["mixed"]["sims_per_sec"],
+}
+
+
+def extract(payload: dict) -> dict:
+    return {name: float(fn(payload)) for name, fn in METRICS.items()}
+
+
+def check(current: dict, baseline: dict, tolerance: float) -> int:
+    """Print a verdict per metric; return the number of regressions."""
+    failures = 0
+    for name, base in baseline["metrics"].items():
+        if name not in current:
+            print(f"FAIL {name}: metric missing from current run")
+            failures += 1
+            continue
+        cur = current[name]
+        ratio = cur / base
+        lo, hi = 1.0 - tolerance, 1.0 + tolerance
+        if ratio < lo:
+            print(f"FAIL {name}: {cur:.0f} vs baseline {base:.0f} ({ratio:.2f}x < {lo:.2f}x)")
+            failures += 1
+        elif ratio > hi:
+            print(f"WARN {name}: {cur:.0f} vs baseline {base:.0f} ({ratio:.2f}x > {hi:.2f}x)")
+            print("     faster than the baseline band; refresh it with --update")
+        else:
+            print(f"ok   {name}: {cur:.0f} vs baseline {base:.0f} ({ratio:.2f}x)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench", help="BENCH_service.json from this run")
+    ap.add_argument("--baseline", default="benchmarks/baselines/ci_cpu.json")
+    ap.add_argument("--tolerance", type=float, default=None, help="override the baseline's band")
+    ap.add_argument("--update", action="store_true", help="rewrite the baseline from this run")
+    args = ap.parse_args()
+
+    with open(args.bench) as f:
+        payload = json.load(f)
+    current = extract(payload)
+
+    if args.update:
+        baseline = {
+            "schema": "bench_baseline/v1",
+            "source_schema": payload.get("schema"),
+            "tolerance": args.tolerance if args.tolerance is not None else 0.3,
+            "metrics": current,
+        }
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    tolerance = args.tolerance if args.tolerance is not None else float(baseline["tolerance"])
+    failures = check(current, baseline, tolerance)
+    if failures:
+        print(f"{failures} metric(s) regressed beyond -{tolerance:.0%}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

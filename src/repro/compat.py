@@ -9,9 +9,10 @@ version split lives in exactly one place.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Set
+from typing import Any, Callable, Optional, Sequence, Set
 
 import jax
+import numpy as np
 
 # New-style shard_map supports partial-auto (``axis_names`` manual subsets).
 # The old experimental API has an ``auto=`` argument, but its XLA lowering
@@ -46,3 +47,18 @@ def shard_map(f: Callable, mesh: Any, in_specs: Any, out_specs: Any,
         kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **kw)
+
+
+def make_service_mesh(n_shard: int, axis: str = "shard",
+                      devices: Optional[Sequence[Any]] = None):
+    """A one-axis mesh over the first ``n_shard`` devices.
+
+    The SearchService shards its slot pool over exactly one mesh axis;
+    this helper builds that mesh portably (``jax.make_mesh`` only grew a
+    ``devices=`` argument after 0.4.x, and always wants every device).
+    """
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if not 1 <= n_shard <= len(devices):
+        raise ValueError(f"need 1 <= n_shard <= {len(devices)} available "
+                         f"device(s), got {n_shard}")
+    return jax.sharding.Mesh(np.asarray(devices[:n_shard]), (axis,))

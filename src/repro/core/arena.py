@@ -65,16 +65,26 @@ class Arena:
     ``refill="device"`` (default) drives games through the SearchService
     slot pool; ``refill="host"`` runs the PR 1 per-step host-queue loop.
     Both play bit-identical games.
+
+    ``mesh``/``placement``/``rebalance`` shard the backing pool over a
+    one-axis device mesh (see core/service.py): games are placed onto
+    per-device sub-pools by the host policy, each device steps its own
+    slots, and self-play throughput scales past one device.
     """
 
     def __init__(self, engine: GoEngine, player_a: MCTS, player_b: MCTS,
                  slots: int, max_moves: Optional[int] = None,
-                 refill: str = "device", superstep: int = 2):
+                 refill: str = "device", superstep: int = 2,
+                 mesh=None, placement: str = "round_robin",
+                 rebalance: bool = True):
         if slots < 2 or slots % 2:
             raise ValueError(f"slots must be even and >= 2, got {slots}")
         if refill not in ("device", "host"):
             raise ValueError(f"refill must be 'device' or 'host', "
                              f"got {refill!r}")
+        if mesh is not None and refill == "host":
+            raise ValueError("mesh= requires refill='device' (the host-queue"
+                             " baseline is single-device by construction)")
         self.engine = engine
         self.player_a = player_a
         self.player_b = player_b
@@ -82,6 +92,9 @@ class Arena:
         self.max_moves = max_moves or engine.max_moves
         self.refill = refill
         self.superstep = superstep
+        self.mesh = mesh
+        self.placement = placement
+        self.rebalance = rebalance
         self._service: Optional[SearchService] = None   # built on first use
         self._step = jax.jit(self._step_impl)
         self._refill = jax.jit(self._refill_impl)
@@ -93,7 +106,9 @@ class Arena:
         if self._service is None:
             self._service = SearchService(
                 self.engine, self.player_a, self.player_b, self.slots,
-                max_moves=self.max_moves, superstep=self.superstep)
+                max_moves=self.max_moves, superstep=self.superstep,
+                mesh=self.mesh, placement=self.placement,
+                rebalance=self.rebalance)
         return self._service
 
     # ----------------------------------------------- host-queue device side

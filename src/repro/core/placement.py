@@ -1,0 +1,96 @@
+"""Request->shard placement policies — the scheduling half of KMP_AFFINITY.
+
+``core/affinity.py`` maps *lanes* to devices for a single search; this
+module maps whole *requests* (self-play games, serve queries) to slot-pool
+shards when the SearchService pool is sharded over a mesh
+(``SearchService(mesh=...)``).  The paper's scatter-vs-compact affinity
+experiments (Fig. 9) reappear one level up: where a request lands relative
+to the shards decides how many devices are busy and how long each shard's
+pending queue grows — exactly the knee the 2015 follow-up study attributes
+to work *distribution*, not thread count.
+
+Policies (affinity analogues in parentheses):
+
+* ``round_robin`` (*scatter*): submission ``i`` goes to shard ``i % n``,
+  skipping full shards — every device busy as early as possible.
+* ``fill_first`` (*compact*): the lowest-indexed shard with queue headroom
+  admits everything — maximum per-shard batch utilisation, idle tail
+  shards; this is the deliberately-bad placement the benchmarks use to
+  show the knee (the device-side rebalance bails it out).
+* ``colour_balanced`` (*balanced*): the least-loaded shard admits, ties to
+  the lowest index — per-shard in-flight game counts stay within one of
+  each other, so each shard's colour-capped admission alternates colours
+  exactly like the single-pool dispatcher.
+
+Placement is pure host-side bookkeeping: it never changes a serve query's
+answer (the serve RNG contract makes results placement-independent) and is
+deterministic in submission order, so a seeded run places — and therefore
+plays — identically every time (tests/test_sharded_service.py pins this).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+POLICIES = ("round_robin", "fill_first", "colour_balanced")
+
+# request classes tracked independently (full games vs single searches)
+CLS_GAME = 0
+CLS_SERVE = 1
+
+
+def place(policy: str, cursor: int, in_flight: np.ndarray, capacity: int) -> Optional[int]:
+    """Pure placement step: the shard that admits the next request.
+
+    ``cursor`` is the policy's round-robin position (ignored by the other
+    policies), ``in_flight`` the per-shard outstanding count for the
+    request's class, ``capacity`` the per-shard in-flight cap.  Returns
+    ``None`` when every shard is full.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown placement {policy!r}; want {POLICIES}")
+    n = len(in_flight)
+    open_ = in_flight < capacity
+    if not open_.any():
+        return None
+    if policy == "round_robin":
+        for k in range(n):
+            s = (cursor + k) % n
+            if open_[s]:
+                return s
+    if policy == "fill_first":
+        return int(np.argmax(open_))            # lowest open shard
+    # colour_balanced: least loaded, ties to the lowest index
+    masked = np.where(open_, in_flight, np.iinfo(np.int64).max)
+    return int(np.argmin(masked))
+
+
+class PlacementPolicy:
+    """Stateful wrapper: per-class cursors + in-flight counts for one pool.
+
+    The SearchService calls :meth:`choose` at submission and
+    :meth:`release` when the ticket's result is polled; both run in
+    submission/poll order, so the assignment sequence is a deterministic
+    function of the workload (no RNG involved).
+    """
+
+    def __init__(self, policy: str, n_shard: int):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown placement {policy!r}; want {POLICIES}")
+        self.policy = policy
+        self.n_shard = n_shard
+        self.in_flight = np.zeros((2, n_shard), np.int64)  # [class, shard]
+        self._cursor = [0, 0]
+
+    def choose(self, cls: int, capacity: int) -> Optional[int]:
+        s = place(self.policy, self._cursor[cls], self.in_flight[cls], capacity)
+        if s is None:
+            return None
+        self.in_flight[cls, s] += 1
+        if self.policy == "round_robin":
+            self._cursor[cls] = (s + 1) % self.n_shard
+        return s
+
+    def release(self, cls: int, shard: int) -> None:
+        self.in_flight[cls, shard] -= 1

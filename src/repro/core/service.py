@@ -39,16 +39,34 @@ RNG contract:
 * serve lane: the search uses the request key *directly* — a query
   ``(state, key, sims)`` returns exactly
   ``player_a.search_batch(state[None], key[None], sims[None])``.
+
+Sharding (``mesh=``): the pool splits into ``n_shard`` fully independent
+sub-pools — each shard owns ``slots / n_shard`` slots plus its *own*
+pending queues, result ring, colour counter, and parity — and the jitted
+dispatch runs under ``shard_map`` (repro/compat.py) so every shard steps
+on its own device with no per-step collective.  A host-side
+:class:`~repro.core.placement.PlacementPolicy` decides which shard admits
+each submission (the paper's KMP_AFFINITY axis applied to requests), and
+an optional once-per-superstep rebalance ``ppermute``\\ s surplus pending
+games around the shard ring so one hot shard doesn't become the paper's
+32-thread knee.  With one shard the body degenerates to the exact
+single-device program, so ``mesh`` over one device is bit-identical to
+``mesh=None`` (pinned in tests/test_sharded_service.py).
 """
 from __future__ import annotations
 
+import functools
 from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.compat import shard_map
 from repro.core.mcts import MCTS
+from repro.core.placement import CLS_GAME, CLS_SERVE, PlacementPolicy
 from repro.go.board import GoEngine, GoState
 
 # Request lanes, tagged by origin.
@@ -89,6 +107,7 @@ class _Pending(NamedTuple):
     lane: int
     sims: int
     ticket: int
+    shard: int
 
 
 class _Slots(NamedTuple):
@@ -127,7 +146,7 @@ class _Ring(NamedTuple):
 
 
 class PoolState(NamedTuple):
-    """Everything the jitted dispatch step owns."""
+    """Everything the jitted dispatch step owns (one shard's worth)."""
     slots: _Slots
     games: _Queue         # full-game requests (arena + tournament lanes)
     serve: _Queue         # single-search queries
@@ -135,6 +154,8 @@ class PoolState(NamedTuple):
     colour_count: jax.Array   # i32[2]; index 1 = games where A owns Black
     colour_cap: jax.Array     # i32 per-colour admission budget
     parity: jax.Array         # i32 global move parity (0 => Black to move)
+    occ_sum: jax.Array        # i32 sum over steps of occupied slots
+    occ_steps: jax.Array      # i32 dispatch steps run (occupancy denominator)
 
 
 def _pow2(n: int) -> int:
@@ -142,6 +163,17 @@ def _pow2(n: int) -> int:
     while p < n:
         p *= 2
     return p
+
+
+def pad_slots(slots: int, mesh=None) -> int:
+    """Round ``slots`` up so every mesh shard gets an even share >= 2.
+
+    The helper consumers (Tournament, GoService) use to pick a pool size
+    that satisfies the SearchService divisibility check for ``mesh``.
+    """
+    n = 1 if mesh is None else int(np.prod(mesh.devices.shape))
+    per = 2 * n
+    return max(per, slots + (-slots) % per)
 
 
 def _excl_cumsum(mask: jax.Array) -> jax.Array:
@@ -176,13 +208,37 @@ class SearchService:
     admission rule, every serve query); games alternate which player owns
     Black under the colour cap.  All static search shapes (lanes, budget,
     board) live in the players — one service, one compiled dispatch.
+
+    ``mesh`` (a one-axis device mesh, see ``compat.make_service_mesh``)
+    shards the pool: each of the axis's ``n_shard`` devices owns
+    ``slots / n_shard`` slots with private queues and ring; ``placement``
+    names the host policy routing submissions to shards (core/placement.py)
+    and ``rebalance`` enables the once-per-superstep cross-shard ppermute
+    of surplus pending games.  Capacities passed to :meth:`reset` are
+    *per shard*.
     """
 
     def __init__(self, engine: GoEngine, player_a: MCTS, player_b: MCTS,
                  slots: int, max_moves: Optional[int] = None,
-                 superstep: int = 4):
-        if slots < 2 or slots % 2:
-            raise ValueError(f"slots must be even and >= 2, got {slots}")
+                 superstep: int = 4, mesh=None,
+                 mesh_axis: Optional[str] = None,
+                 placement: str = "round_robin", rebalance: bool = True):
+        if mesh is not None:
+            axes = tuple(mesh.axis_names)
+            if len(axes) != 1:
+                raise ValueError(
+                    f"service mesh must have exactly one axis, got {axes}; "
+                    "build one with repro.compat.make_service_mesh")
+            axis = mesh_axis or axes[0]
+            if axis not in axes:
+                raise ValueError(f"mesh_axis {axis!r} not in {axes}")
+            n_shard = mesh.shape[axis]
+        else:
+            axis, n_shard = None, 1
+        if slots < 2 * n_shard or slots % (2 * n_shard):
+            raise ValueError(
+                f"slots must be an even multiple of the {n_shard} shard(s) "
+                f"(each shard needs an even count >= 2), got {slots}")
         if superstep < 1:
             raise ValueError(f"superstep must be >= 1, got {superstep}")
         self.engine = engine
@@ -191,11 +247,25 @@ class SearchService:
         self.slots = slots
         self.max_moves = max_moves or engine.max_moves
         self.superstep = superstep
+        self.mesh = mesh
+        self.placement = placement
+        self.rebalance = rebalance
+        self.n_shard = n_shard
+        self._axis = axis
+        self._shard_slots = slots // n_shard
+        PlacementPolicy(placement, n_shard)      # validate the policy name
         self._chunk = slots               # flush granularity
         self._init_state = engine.init_state()
         self._dispatch = jax.jit(self._dispatch_impl, static_argnums=(1,))
         self._push_games = jax.jit(self._push_games_impl)
         self._push_serve = jax.jit(self._push_serve_impl)
+        if mesh is not None:
+            self._dispatch_mesh = jax.jit(self._dispatch_mesh_impl,
+                                          static_argnums=(1,))
+            self._push_games_mesh = jax.jit(functools.partial(
+                self._push_mesh_impl, which="games"))
+            self._push_serve_mesh = jax.jit(functools.partial(
+                self._push_mesh_impl, which="serve"))
         self.reset()
 
     # ------------------------------------------------------------- lifecycle
@@ -211,7 +281,9 @@ class SearchService:
         from ``default_rng(seed)``, the PR 1 host-queue discipline — the
         same generator then feeds keyless submissions, preserving the
         host path's exact key stream).  Capacities are rounded up to
-        powers of two so repeat runs reuse the compiled dispatch.
+        powers of two so repeat runs reuse the compiled dispatch; under a
+        mesh every capacity (and the colour cap) applies *per shard*, and
+        shard ``s`` takes the ``s``-th contiguous block of slot keys.
         """
         S = self.slots
         self._rng = np.random.default_rng(seed)
@@ -228,8 +300,37 @@ class SearchService:
         self.ring_capacity = _pow2(
             ring_capacity
             or (self.game_capacity + self.serve_capacity + S))
+        # the rebalance writes into queue rows the host never fills, so a
+        # rebalancing pool doubles the device-side game queue and reserves
+        # the first game_capacity rows' worth of space for host pushes
+        self._game_qcap = (2 * self.game_capacity
+                           if self.n_shard > 1 and self.rebalance
+                           else self.game_capacity)
         cap = 2 ** 30 if colour_cap is None else int(colour_cap)
 
+        Sps = self._shard_slots
+        pools = [self._fresh_pool(slot_keys[s * Sps:(s + 1) * Sps], cap)
+                 for s in range(self.n_shard)]
+        if self.mesh is None:
+            self._pool = pools[0]
+        else:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *pools)
+            self._pool = jax.device_put(
+                stacked, NamedSharding(self.mesh, PartitionSpec(self._axis)))
+
+        self._pending_games: List[_Pending] = []
+        self._pending_serve: List[_Pending] = []
+        self._next_ticket = 0
+        self._ring_read = np.zeros(self.n_shard, np.int64)
+        self._placement = PlacementPolicy(self.placement, self.n_shard)
+        self._assigned = {}           # ticket -> (request class, shard)
+        self._submitted = {LANE_ARENA: 0, LANE_SERVE: 0, LANE_TOURNAMENT: 0}
+        self._completed = dict(self._submitted)
+        self.host_syncs = 0           # host<->device round-trips (flush+poll)
+
+    def _fresh_pool(self, slot_keys: np.ndarray, colour_cap: int) -> PoolState:
+        """One shard's empty PoolState (the whole pool when unsharded)."""
+        S = self._shard_slots
         A = self.engine.num_actions
         bc = lambda n: (lambda x: jnp.broadcast_to(x, (n,) + jnp.shape(x)))
         slots = _Slots(
@@ -265,19 +366,12 @@ class SearchService:
             visits=jnp.zeros((R, A), jnp.float32),
             count=jnp.int32(0),
         )
-        self._pool = PoolState(
-            slots=slots, games=queue(self.game_capacity),
+        return PoolState(
+            slots=slots, games=queue(self._game_qcap),
             serve=queue(self.serve_capacity), ring=ring,
             colour_count=jnp.zeros((2,), jnp.int32),
-            colour_cap=jnp.int32(cap), parity=jnp.int32(0))
-
-        self._pending_games: List[_Pending] = []
-        self._pending_serve: List[_Pending] = []
-        self._next_ticket = 0
-        self._ring_read = 0
-        self._submitted = {LANE_ARENA: 0, LANE_SERVE: 0, LANE_TOURNAMENT: 0}
-        self._completed = dict(self._submitted)
-        self.host_syncs = 0           # host<->device round-trips (flush+poll)
+            colour_cap=jnp.int32(colour_cap), parity=jnp.int32(0),
+            occ_sum=jnp.int32(0), occ_steps=jnp.int32(0))
 
     # ------------------------------------------------------------ submission
 
@@ -308,41 +402,47 @@ class SearchService:
 
     def _submit(self, pending: List[_Pending], state: GoState, key,
                 lane: int, sims: int) -> int:
-        cap = (self.serve_capacity if lane == LANE_SERVE
+        cls = CLS_SERVE if lane == LANE_SERVE else CLS_GAME
+        cap = (self.serve_capacity if cls == CLS_SERVE
                else self.game_capacity)
-        in_flight = (self._submitted[lane] - self._completed[lane]
-                     if lane == LANE_SERVE else
-                     sum(self._submitted[ln] - self._completed[ln]
-                         for ln in GAME_LANES))
-        if in_flight >= cap:
+        shard = self._placement.choose(cls, cap)
+        if shard is None:
             raise RuntimeError(
-                f"{LANE_NAMES[lane]} queue full ({cap} in flight); poll() "
-                "results or reset() with a larger capacity")
+                f"{LANE_NAMES[lane]} queue full ({cap} in flight per "
+                "shard); poll() results or reset() with a larger capacity")
         ticket = self._next_ticket
         self._next_ticket += 1
         pending.append(_Pending(state=state, key=self._draw_key(key),
-                                lane=lane, sims=int(sims), ticket=ticket))
+                                lane=lane, sims=int(sims), ticket=ticket,
+                                shard=shard))
+        self._assigned[ticket] = (cls, shard)
         self._submitted[lane] += 1
         return ticket
 
     def flush(self) -> None:
         """Push host-buffered submissions into the device queues."""
         pushed = False
-        for pending, push in ((self._pending_games, self._push_games),
-                              (self._pending_serve, self._push_serve)):
+        for pending, push, mpush in (
+                (self._pending_games, self._push_games,
+                 getattr(self, "_push_games_mesh", None)),
+                (self._pending_serve, self._push_serve,
+                 getattr(self, "_push_serve_mesh", None))):
             while pending:
                 rows = pending[:self._chunk]
                 del pending[:self._chunk]
-                self._pool = push(self._pool, self._pack(rows),
-                                  jnp.int32(len(rows)))
+                req, shards = self._pack(rows)
+                if self.mesh is None:
+                    self._pool = push(self._pool, req, jnp.int32(len(rows)))
+                else:
+                    self._pool = mpush(self._pool, req, shards)
                 pushed = True
         if pushed:
             self.host_syncs += 1
 
-    def _pack(self, rows: List[_Pending]) -> SearchRequest:
+    def _pack(self, rows: List[_Pending]):
         pad = self._chunk - len(rows)
         states = [r.state for r in rows] + [self._init_state] * pad
-        return SearchRequest(
+        req = SearchRequest(
             state=jax.tree.map(lambda *xs: jnp.stack(xs), *states),
             key=jnp.asarray(np.stack(
                 [r.key for r in rows]
@@ -352,6 +452,9 @@ class SearchService:
             ticket=jnp.asarray([r.ticket for r in rows] + [-1] * pad,
                                jnp.int32),
         )
+        shards = jnp.asarray([r.shard for r in rows] + [-1] * pad,
+                             jnp.int32)
+        return req, shards
 
     # ----------------------------------------------------------- device side
 
@@ -369,6 +472,92 @@ class SearchService:
 
         return jax.lax.fori_loop(0, steps, one, pool)
 
+    def _dispatch_mesh_impl(self, pool: PoolState, steps: int) -> PoolState:
+        """The sharded dispatch: every device steps its own sub-pool.
+
+        Each shard's PoolState rides the mesh axis (leading axis of every
+        leaf); the body peels it off and runs the *same* per-shard program
+        as the single-device dispatch, so one shard is bit-identical to
+        ``mesh=None``.  The rebalance (the only cross-shard traffic) runs
+        once per dispatch call, before the superstep's moves.
+        """
+        spec = PartitionSpec(self._axis)
+
+        def body(p):
+            local = jax.tree.map(lambda x: x[0], p)
+            if self.n_shard > 1 and self.rebalance:
+                local = self._rebalance_impl(local)
+            out = self._dispatch_impl(local, steps)
+            return jax.tree.map(lambda x: x[None], out)
+
+        return shard_map(body, mesh=self.mesh, in_specs=spec,
+                         out_specs=spec, check_vma=False)(pool)
+
+    def _push_mesh_impl(self, pool: PoolState, req: SearchRequest,
+                        shards: jax.Array, *, which: str) -> PoolState:
+        """Broadcast one flush chunk; each shard keeps its own rows.
+
+        The chunk is replicated to every device; a shard stably compacts
+        the rows placed on it to the front and appends only those, so
+        per-shard FIFO order is submission order (and with one shard the
+        result is bit-identical to the unsharded push).
+        """
+        spec = PartitionSpec(self._axis)
+
+        def body(p, req, shards):
+            local = jax.tree.map(lambda x: x[0], p)
+            me = lax.axis_index(self._axis)
+            mine = (shards == me) & (req.ticket >= 0)
+            order = jnp.argsort(jnp.where(mine, 0, 1), stable=True)
+            req_s = jax.tree.map(lambda x: x[order], req)
+            q = _queue_push(getattr(local, which), req_s,
+                            mine.sum().astype(jnp.int32))
+            local = local._replace(**{which: q})
+            return jax.tree.map(lambda x: x[None], local)
+
+        return shard_map(
+            body, mesh=self.mesh,
+            in_specs=(spec, PartitionSpec(), PartitionSpec()),
+            out_specs=spec, check_vma=False)(pool, req, shards)
+
+    def _rebalance_impl(self, pool: PoolState) -> PoolState:
+        """Shift surplus pending games one shard along the mesh ring.
+
+        Runs inside the shard_map body.  Shard ``i`` donates up to
+        ``slots/n_shard`` of its most recent pending games to shard
+        ``i+1`` when its backlog exceeds the neighbour's — two scalar
+        ``ppermute``\\ s (backlog + headroom) decide the count, one chunk
+        ``ppermute`` moves the requests.  Donations are capped by the
+        receiver's rebalance headroom (queue rows beyond the host's
+        ``game_capacity`` share), so a host flush can never overflow a
+        queue the rebalance topped up.
+        """
+        n = self.n_shard
+        gq = pool.games
+        Qg = gq.lane.shape[0]
+        K = self._shard_slots
+        from_next = [((i + 1) % n, i) for i in range(n)]
+        to_next = [(i, (i + 1) % n) for i in range(n)]
+
+        backlog = gq.size - gq.head
+        headroom = (Qg - self.game_capacity) - backlog
+        nxt_backlog = lax.ppermute(backlog, self._axis, from_next)
+        nxt_headroom = lax.ppermute(headroom, self._axis, from_next)
+        d = jnp.clip((backlog - nxt_backlog) // 2, 0, K)
+        d = jnp.minimum(d, jnp.maximum(nxt_headroom, 0))
+
+        # pop the d most recently queued requests (rows size-d .. size-1)
+        idx = (gq.size - d + jnp.arange(K, dtype=jnp.int32)) % Qg
+        chunk = SearchRequest(
+            state=jax.tree.map(lambda x: x[idx], gq.states),
+            key=gq.keys[idx], lane=gq.lane[idx], sims=gq.sims[idx],
+            ticket=gq.ticket[idx])
+        got = jax.tree.map(lambda x: lax.ppermute(x, self._axis, to_next),
+                           chunk)
+        got_n = lax.ppermute(d, self._axis, to_next)
+        games = _queue_push(gq._replace(size=gq.size - d), got, got_n)
+        return pool._replace(games=games)
+
     def _admit(self, pool: PoolState) -> PoolState:
         """Device-side refill: fill empty slots from the pending queues.
 
@@ -377,9 +566,10 @@ class SearchService:
         cell, capped per colour; serve queries go first, only into cells
         player A searches next step.
         """
-        S, h = self.slots, self.slots // 2
         sl, gq, sq = pool.slots, pool.games, pool.serve
-        Qg, Qs = self.game_capacity, self.serve_capacity
+        S = sl.ticket.shape[0]
+        h = S // 2
+        Qg, Qs = gq.lane.shape[0], sq.lane.shape[0]
         empty = sl.ticket < 0
         cellA = (jnp.arange(S) < h) == (pool.parity % 2 == 0)
 
@@ -427,8 +617,9 @@ class SearchService:
 
     def _advance(self, pool: PoolState) -> PoolState:
         """One move in every slot: the parity-balanced half-batch search."""
-        S, h = self.slots, self.slots // 2
         sl = pool.slots
+        S = sl.ticket.shape[0]
+        h = S // 2
         shift = jnp.where(pool.parity % 2 == 0, 0, h)
         idx = (jnp.arange(S, dtype=jnp.int32) + shift) % S    # involution
 
@@ -473,11 +664,13 @@ class SearchService:
             lane=sl.lane, moves=moves_new, sims=sl.sims,
             a_black=sl.a_black)
         return pool._replace(slots=slots, ring=ring,
-                             parity=pool.parity + 1)
+                             parity=pool.parity + 1,
+                             occ_sum=pool.occ_sum + live.sum(),
+                             occ_steps=pool.occ_steps + 1)
 
     def _append_ring(self, ring: _Ring, finished, sl: _Slots, actions,
                      winner, moves, nodes, visits) -> _Ring:
-        R = self.ring_capacity
+        R = ring.ticket.shape[0]
         off = ring.count + _excl_cumsum(finished)
         widx = jnp.where(finished, off % R, R)                 # R: dropped
 
@@ -500,47 +693,76 @@ class SearchService:
 
     def dispatch(self, steps: Optional[int] = None) -> None:
         """Run ``steps`` (default ``superstep``) moves without host sync."""
-        self._pool = self._dispatch(self._pool, int(steps or self.superstep))
+        fn = self._dispatch if self.mesh is None else self._dispatch_mesh
+        self._pool = fn(self._pool, int(steps or self.superstep))
 
     def poll(self) -> List[SearchResult]:
-        """Drain newly finished requests from the result ring.
+        """Drain newly finished requests from the result rings.
 
-        Transfers scale with *new* results, not ring capacity: one scalar
-        sync reads the append counter, and only when it moved does a
-        second sync gather the unread rows (so an idle poll costs one
-        scalar round-trip and no ``[R, A]`` visits traffic).
+        Transfers scale with *new* results, not ring capacity: one sync
+        reads the append counter(s), and only when one moved does a
+        second sync gather the unread rows of *every* shard in one
+        ``device_get`` (so an idle poll costs one scalar round-trip, no
+        ``[R, A]`` visits traffic, and ``host_syncs`` stays an honest
+        count of blocking transfers).  Shard rings drain in shard order,
+        FIFO within each.
         """
         ring = self._pool.ring
-        count = int(jax.device_get(ring.count))
+        counts = np.atleast_1d(np.asarray(jax.device_get(ring.count)))
         self.host_syncs += 1
-        new = count - self._ring_read
-        if new == 0:
+        gathers = {}
+        for s in range(self.n_shard):
+            count, read = int(counts[s]), int(self._ring_read[s])
+            new = count - read
+            if new == 0:
+                continue
+            if new > self.ring_capacity:
+                raise RuntimeError(
+                    f"result ring overflowed ({new} unread > capacity "
+                    f"{self.ring_capacity}); poll() more often or reset() "
+                    "with a larger ring_capacity")
+            bufs = (ring.ticket, ring.lane, ring.action, ring.winner,
+                    ring.moves, ring.nodes, ring.a_black, ring.visits)
+            if self.mesh is not None:
+                bufs = jax.tree.map(lambda buf: buf[s], bufs)
+            idx = jnp.asarray([i % self.ring_capacity
+                               for i in range(read, count)])
+            gathers[s] = jax.tree.map(lambda buf: buf[idx], bufs)
+        if not gathers:
             return []
-        if new > self.ring_capacity:
-            raise RuntimeError(
-                f"result ring overflowed ({new} unread > capacity "
-                f"{self.ring_capacity}); poll() more often or reset() "
-                "with a larger ring_capacity")
-        idx = jnp.asarray([i % self.ring_capacity
-                           for i in range(self._ring_read, count)])
-        ticket, lane, action, winner, moves, nodes, a_black, visits = \
-            jax.device_get(jax.tree.map(
-                lambda buf: buf[idx],
-                (ring.ticket, ring.lane, ring.action, ring.winner,
-                 ring.moves, ring.nodes, ring.a_black, ring.visits)))
+        fetched = jax.device_get(gathers)       # one blocking transfer
         self.host_syncs += 1
-        out = []
-        for j in range(new):
-            rec = SearchResult(
-                ticket=int(ticket[j]), lane=int(lane[j]),
-                action=int(action[j]), winner=float(winner[j]),
-                moves=int(moves[j]), tree_nodes=int(nodes[j]),
-                a_is_black=bool(a_black[j]),
-                root_visits=np.array(visits[j]))
-            self._completed[rec.lane] += 1
-            out.append(rec)
-        self._ring_read = count
+        out: List[SearchResult] = []
+        for s in sorted(fetched):
+            ticket, lane, action, winner, moves, nodes, a_black, visits = \
+                fetched[s]
+            for j in range(int(counts[s]) - int(self._ring_read[s])):
+                rec = SearchResult(
+                    ticket=int(ticket[j]), lane=int(lane[j]),
+                    action=int(action[j]), winner=float(winner[j]),
+                    moves=int(moves[j]), tree_nodes=int(nodes[j]),
+                    a_is_black=bool(a_black[j]),
+                    root_visits=np.array(visits[j]))
+                self._completed[rec.lane] += 1
+                cls, assigned = self._assigned.pop(rec.ticket)
+                self._placement.release(cls, assigned)
+                out.append(rec)
+            self._ring_read[s] = counts[s]
         return out
+
+    def shard_occupancy(self) -> np.ndarray:
+        """Mean fraction of occupied slots per shard since reset().
+
+        A diagnostic read (one device transfer, not counted in
+        ``host_syncs``): ``occ_sum / (occ_steps * slots_per_shard)`` —
+        the benchmark's per-shard utilisation column, and the sharded
+        analogue of the paper's core-utilisation regions.
+        """
+        occ, steps = jax.device_get((self._pool.occ_sum,
+                                     self._pool.occ_steps))
+        occ = np.atleast_1d(np.asarray(occ)).astype(np.float64)
+        steps = np.atleast_1d(np.asarray(steps)).astype(np.float64)
+        return occ / np.maximum(steps * self._shard_slots, 1.0)
 
     @property
     def outstanding(self) -> int:

@@ -14,7 +14,9 @@ method owns its own cache — making same-shape pairs share one compiled
 program needs the per-slot traced (c_uct, virtual_loss) follow-up in the
 ROADMAP).  Within a pair, games run concurrently across the pool's slots
 with device-side refill and colour balance +-1 (the paper's
-alternating-colours methodology).
+alternating-colours methodology).  ``mesh=`` shards each pair's pool over
+a one-axis device mesh (slot counts are padded to an even per-shard
+share), with ``placement``/``rebalance`` as in core/service.py.
 """
 from __future__ import annotations
 
@@ -26,7 +28,7 @@ import numpy as np
 from repro.config import MCTSConfig
 from repro.core import stats
 from repro.core.mcts import MCTS
-from repro.core.service import LANE_TOURNAMENT, SearchService
+from repro.core.service import LANE_TOURNAMENT, SearchService, pad_slots
 from repro.go.board import GoEngine
 
 
@@ -69,7 +71,9 @@ class Tournament:
                  names: Optional[Sequence[str]] = None,
                  games_per_pair: int = 2, slots: int = 0,
                  max_moves: Optional[int] = None, seed: int = 0,
-                 superstep: int = 4, **mcts_kw):
+                 superstep: int = 4, mesh=None,
+                 placement: str = "round_robin", rebalance: bool = True,
+                 **mcts_kw):
         if len(configs) < 2:
             raise ValueError("tournament needs at least 2 configs")
         if names is not None and len(names) != len(configs):
@@ -81,7 +85,12 @@ class Tournament:
             for i, c in enumerate(configs))
         self.games_per_pair = games_per_pair
         slots = slots or min(games_per_pair, 8)
-        self.slots = max(2, slots + (slots % 2))
+        self.mesh = mesh
+        self.placement = placement
+        self.rebalance = rebalance
+        # pools shard over the mesh: pad the slot count so every shard
+        # gets an even share (each pair's pool reuses this shape)
+        self.slots = pad_slots(slots, mesh)
         self.max_moves = max_moves
         self.seed = seed
         self.superstep = superstep
@@ -110,7 +119,9 @@ class Tournament:
         player_j = MCTS(self.engine, self.configs[j], **self.mcts_kw)
         svc = SearchService(self.engine, player_i, player_j, self.slots,
                             max_moves=self.max_moves,
-                            superstep=self.superstep)
+                            superstep=self.superstep, mesh=self.mesh,
+                            placement=self.placement,
+                            rebalance=self.rebalance)
         svc.reset(seed=seed, colour_cap=(g + 1) // 2, game_capacity=g,
                   ring_capacity=g + self.slots)
         for _ in range(g):

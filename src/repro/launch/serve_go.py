@@ -44,13 +44,22 @@ def main() -> None:
     ap.add_argument("--prefix-moves", type=int, default=8,
                     help="random moves played before each queried position")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the serving pool over this many devices")
+    ap.add_argument("--placement", default="round_robin",
+                    help="query->shard policy (repro.core.placement)")
     args = ap.parse_args()
+
+    mesh = None
+    if args.shards > 1:
+        from repro.compat import make_service_mesh
+        mesh = make_service_mesh(args.shards)
 
     engine = GoEngine(args.board, args.komi)
     rng = np.random.default_rng(args.seed)
     svc = GoService(board_size=args.board, komi=args.komi,
                     max_sims=args.sims, lanes=args.lanes, slots=args.slots,
-                    seed=args.seed)
+                    seed=args.seed, mesh=mesh, placement=args.placement)
 
     boards = [random_position(engine, rng, args.prefix_moves)
               for _ in range(args.queries)]
@@ -71,6 +80,9 @@ def main() -> None:
     print(f"{args.queries} queries in {dt:.2f}s "
           f"({args.queries / dt:.1f} moves/s, ~{sims / dt:.0f} sims/s, "
           f"{svc.host_syncs} host syncs)")
+    if mesh is not None:
+        print("shard occupancy: "
+              + " ".join(f"{o:.2f}" for o in svc.shard_occupancy()))
 
 
 if __name__ == "__main__":

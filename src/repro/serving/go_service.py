@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.config import MCTSConfig
 from repro.core.mcts import MCTS
-from repro.core.service import SearchService
+from repro.core.service import SearchService, pad_slots
 from repro.go.board import BLACK, NO_KO, GoEngine, GoState
 
 
@@ -44,17 +44,27 @@ class MoveResult(NamedTuple):
 
 
 class GoService:
-    """Fixed-bucket batched Go move service over SearchService pools."""
+    """Fixed-bucket batched Go move service over SearchService pools.
+
+    ``mesh=`` shards every bucket's slot pool over a one-axis device mesh
+    (``placement`` routes queries to shards, core/placement.py); serve
+    answers are placement-independent by the dispatcher's RNG contract,
+    so sharding only changes throughput, never a move.
+    """
 
     def __init__(self, board_size: int = 9, komi: float = 6.0,
                  max_sims: int = 64, lanes: int = 8, slots: int = 8,
                  max_nodes: int = 0, superstep: int = 2, seed: int = 0,
-                 queue_capacity: int = 0, **mcts_kw):
+                 queue_capacity: int = 0, mesh=None,
+                 placement: str = "round_robin", **mcts_kw):
         self.board_size = int(board_size)
         self.default_komi = float(komi)
         self.max_sims = int(max_sims)
         self.lanes = int(lanes)
-        self.slots = max(2, slots + (slots % 2))
+        self.mesh = mesh
+        self.placement = placement
+        # pad the pool so every mesh shard gets an even share of slots
+        self.slots = pad_slots(slots, mesh)
         self.max_nodes = int(max_nodes) or max(256, 4 * max_sims)
         self.superstep = superstep
         self.seed = seed
@@ -78,7 +88,8 @@ class GoService:
                              max_nodes=self.max_nodes)
             player = MCTS(engine, cfg, **self.mcts_kw)
             svc = SearchService(engine, player, player, self.slots,
-                                superstep=self.superstep)
+                                superstep=self.superstep, mesh=self.mesh,
+                                placement=self.placement)
             svc.reset(seed=self.seed, serve_capacity=self.queue_capacity,
                       game_capacity=2)
             self._buckets[komi] = svc
@@ -87,6 +98,11 @@ class GoService:
     @property
     def host_syncs(self) -> int:
         return sum(b.host_syncs for b in self._buckets.values())
+
+    def shard_occupancy(self, komi: Optional[float] = None) -> np.ndarray:
+        """Per-shard occupancy of one bucket's pool (default bucket)."""
+        komi = self.default_komi if komi is None else float(komi)
+        return self._bucket(komi).shard_occupancy()
 
     def _to_state(self, board, to_play: int, engine: GoEngine) -> GoState:
         b = np.asarray(board, np.int8).reshape(-1)

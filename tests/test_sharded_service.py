@@ -1,0 +1,251 @@
+"""Sharded SearchService tests (core/service.py mesh= + core/placement.py).
+
+Three tiers:
+
+* placement-policy unit tests — pure host-side numpy, run anywhere;
+* one-shard oracle tests — a 1-device mesh in the normal process pins the
+  shard_map-wrapped dispatch bit-for-bit against the PR 2 single-device
+  dispatcher (the tentpole acceptance invariant);
+* multi-device tests — run in-process when the suite already sees >= 8
+  devices (CI's test-multidevice job sets
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8``), plus a
+  slow-marked subprocess test so single-device tier-1 runs still exercise
+  the 8-shard paths (tests/test_distributed.py discipline).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.compat import make_service_mesh
+from repro.config import MCTSConfig
+from repro.core import placement
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources
+from repro.core.service import LANE_SERVE, SearchService
+
+CFG = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+CAP = 12
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+class TestPlacementPolicies:
+    def test_round_robin_cycles_and_skips_full(self):
+        pol = placement.PlacementPolicy("round_robin", 3)
+        assert [pol.choose(placement.CLS_GAME, 2) for _ in range(6)] \
+            == [0, 1, 2, 0, 1, 2]
+        assert pol.choose(placement.CLS_GAME, 2) is None    # all full
+        pol.release(placement.CLS_GAME, 1)
+        # the cursor skips still-full shards to the reopened one
+        assert pol.choose(placement.CLS_GAME, 2) == 1
+
+    def test_fill_first_saturates_lowest_shard(self):
+        pol = placement.PlacementPolicy("fill_first", 3)
+        assert [pol.choose(placement.CLS_GAME, 2) for _ in range(4)] \
+            == [0, 0, 1, 1]
+
+    def test_colour_balanced_tracks_least_loaded(self):
+        pol = placement.PlacementPolicy("colour_balanced", 3)
+        assert [pol.choose(placement.CLS_GAME, 4) for _ in range(4)] \
+            == [0, 1, 2, 0]
+        pol.release(placement.CLS_GAME, 2)
+        assert pol.choose(placement.CLS_GAME, 4) == 2       # refilled hole
+
+    def test_classes_tracked_independently(self):
+        pol = placement.PlacementPolicy("round_robin", 2)
+        assert pol.choose(placement.CLS_GAME, 4) == 0
+        assert pol.choose(placement.CLS_SERVE, 4) == 0
+        assert pol.choose(placement.CLS_GAME, 4) == 1
+
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError):
+            placement.place("spiral", 0, np.zeros(2, np.int64), 4)
+        with pytest.raises(ValueError):
+            placement.PlacementPolicy("spiral", 2)
+
+
+@pytest.fixture(scope="module")
+def players(engine5):
+    return MCTS(engine5, double_resources(CFG)), MCTS(engine5, CFG)
+
+
+@pytest.fixture(scope="module")
+def mid_state(engine5):
+    import jax.numpy as jnp
+    st = engine5.init_state()
+    for mv in (3, 7, 12, 16):
+        st = engine5.jit_play(st, jnp.int32(mv))
+    return st
+
+
+def _run_games_and_serve(svc, games, serves, mid_state, seed=0,
+                         assignments=None):
+    svc.reset(seed=seed, colour_cap=(games + 1) // 2 or 1,
+              game_capacity=max(2, games))
+    gk = np.asarray(jax.random.split(jax.random.PRNGKey(7), max(1, games)))
+    sk = np.asarray(jax.random.split(jax.random.PRNGKey(9), max(1, serves)))
+    tickets = [svc.submit_game(key=gk[i]) for i in range(games)]
+    tickets += [svc.submit_serve(mid_state, key=sk[i])
+                for i in range(serves)]
+    if assignments is not None:       # ticket -> host-assigned shard
+        assignments.update({t: svc._assigned[t][1] for t in tickets})
+    return tickets, {r.ticket: r for r in svc.drain()}
+
+
+class TestOneShardOracle:
+    """mesh over one device == the PR 2 single-device dispatcher."""
+
+    def test_bit_identical_to_plain_dispatcher(self, engine5, players,
+                                               mid_state):
+        a, b = players
+        plain = SearchService(engine5, a, b, slots=2, max_moves=CAP)
+        sharded = SearchService(engine5, a, b, slots=2, max_moves=CAP,
+                                mesh=make_service_mesh(1))
+        assert sharded.n_shard == 1
+        tp, rp = _run_games_and_serve(plain, 3, 1, mid_state)
+        ts, rs = _run_games_and_serve(sharded, 3, 1, mid_state)
+        assert tp == ts
+        for t in tp:
+            assert rp[t][:7] == rs[t][:7]       # every scalar field
+            np.testing.assert_array_equal(rp[t].root_visits,
+                                          rs[t].root_visits)
+        np.testing.assert_array_equal(plain.shard_occupancy(),
+                                      sharded.shard_occupancy())
+
+    def test_mesh_validation(self, engine5, players):
+        a, b = players
+        dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+        two_axis = jax.sharding.Mesh(dev, ("a", "b"))
+        with pytest.raises(ValueError):
+            SearchService(engine5, a, b, slots=2, mesh=two_axis)
+        with pytest.raises(ValueError):
+            SearchService(engine5, a, b, slots=2, placement="spiral")
+        with pytest.raises(ValueError):
+            make_service_mesh(10 ** 6)
+
+
+@multidevice
+class TestMultiDevice:
+    """In-process 8-device coverage (CI: the test-multidevice job)."""
+
+    @pytest.fixture(scope="class")
+    def svc4(self, engine5, players):
+        """One compiled 4-shard pool (2 slots/shard), reset() per test."""
+        a, b = players
+        return SearchService(engine5, a, b, slots=8, max_moves=CAP,
+                             mesh=make_service_mesh(4))
+
+    def test_slots_must_divide_over_shards(self, engine5, players):
+        a, b = players
+        with pytest.raises(ValueError):
+            SearchService(engine5, a, b, slots=6,
+                          mesh=make_service_mesh(4))
+
+    def test_mixed_lanes_complete_across_shards(self, svc4, mid_state):
+        tickets, recs = _run_games_and_serve(svc4, 6, 3, mid_state)
+        assert sorted(recs) == sorted(tickets)
+        for t in tickets[:6]:
+            assert recs[t].winner in (-1.0, 0.0, 1.0)
+            assert 0 < recs[t].moves <= CAP
+        for t in tickets[6:]:
+            assert recs[t].lane == LANE_SERVE
+            assert recs[t].moves == 1
+
+    def test_placement_deterministic_under_same_key(self, svc4, mid_state):
+        """Same seed + same submission order => bit-identical games and
+        identical shard assignments (placement uses no RNG)."""
+        a1, a2 = {}, {}
+        t1, r1 = _run_games_and_serve(svc4, 5, 2, mid_state, seed=4,
+                                      assignments=a1)
+        t2, r2 = _run_games_and_serve(svc4, 5, 2, mid_state, seed=4,
+                                      assignments=a2)
+        assert t1 == t2
+        assert [a1[t] for t in t1] == [a2[t] for t in t2]
+        assert sorted(set(a1.values())) == [0, 1, 2, 3]  # round_robin spread
+        for t in t1:
+            assert r1[t][:7] == r2[t][:7]
+            np.testing.assert_array_equal(r1[t].root_visits,
+                                          r2[t].root_visits)
+
+    def test_serve_answers_placement_independent(self, svc4, mid_state):
+        """A query's (action, visits) must not depend on the placement
+        policy that routed it — the serve RNG contract, sharded."""
+        by_policy = {}
+        for pol in placement.POLICIES:
+            svc4.placement = pol
+            _, recs = _run_games_and_serve(svc4, 0, 3, mid_state)
+            by_policy[pol] = [(r.action, tuple(r.root_visits))
+                              for r in sorted(recs.values(),
+                                              key=lambda r: r.ticket)]
+        svc4.placement = "round_robin"
+        assert (by_policy["round_robin"] == by_policy["fill_first"]
+                == by_policy["colour_balanced"])
+
+    def test_empty_shards_do_not_stall_drain(self, svc4, mid_state):
+        """fill_first with a tiny workload leaves tail shards entirely
+        empty; the pool must still drain and report them idle."""
+        svc4.placement = "fill_first"
+        try:
+            tickets, recs = _run_games_and_serve(svc4, 2, 0, mid_state)
+        finally:
+            svc4.placement = "round_robin"
+        assert sorted(recs) == sorted(tickets)
+        occ = svc4.shard_occupancy()
+        assert occ.shape == (4,)
+        assert occ[0] > 0
+        assert occ[2] == 0 and occ[3] == 0      # beyond the rebalance hop
+
+    def test_rebalance_spreads_fill_first_backlog(self, engine5, players,
+                                                  mid_state):
+        """The ppermute rebalance must hand a hot shard's pending games to
+        its neighbour: under fill_first every game is *assigned* to shard
+        0, so any shard-1 occupancy is rebalance traffic."""
+        a, b = players
+        svc = SearchService(engine5, a, b, slots=8, max_moves=CAP,
+                            mesh=make_service_mesh(4),
+                            placement="fill_first")
+        tickets, recs = _run_games_and_serve(svc, 8, 0, mid_state)
+        assert sorted(recs) == sorted(tickets)
+        occ = svc.shard_occupancy()
+        assert occ[1] > 0
+
+
+@pytest.mark.slow
+class TestMultiDeviceSubprocess:
+    """8-fake-device coverage for single-device tier-1 runs."""
+
+    def test_sharded_arena_completes_and_rebalances(self):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                            + env.get("XLA_FLAGS", "")).strip()
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np
+assert jax.device_count() == 8
+from repro.compat import make_service_mesh
+from repro.config import MCTSConfig
+from repro.core.arena import Arena
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources
+from repro.go import GoEngine
+
+eng = GoEngine(5, komi=0.5)
+cfg = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+a, b = MCTS(eng, double_resources(cfg)), MCTS(eng, cfg)
+arena = Arena(eng, a, b, slots=8, max_moves=10, mesh=make_service_mesh(4),
+              placement="fill_first")
+recs = arena.play_games(8, seed=3)
+assert len(recs) == 8
+occ = arena.service.shard_occupancy()
+assert occ.shape == (4,) and occ[0] > 0 and occ[1] > 0, occ
+print("OK", np.round(occ, 2))
+"""], env=env, capture_output=True, text=True, timeout=480)
+        assert out.returncode == 0, \
+            f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
