@@ -3,16 +3,19 @@
 Measures the unified dispatcher (core/service.py) against the PR 1 arena
 path (host-queue refill, one host sync per step) on the 5x5 reference
 config, a mixed workload (arena games + serve queries sharing one slot
-pool), and — schema ``bench_service/v2`` — a ``shards x placement`` sweep
-of the mesh-sharded pool: the same slot count split over 1..N devices
-(``--devices`` fakes them on CPU), every row reporting per-shard
-occupancy and sims/sec scaling against the one-shard dispatcher.  The
-device-side refill moves admission and result collection into the jitted
-dispatch, so the host only flushes submissions and polls the result ring
-once per ``superstep`` moves — ``host_syncs_per_move`` makes that
-reduction machine-checkable (the paper's scheduling thesis: the loop
-shape, not the lane count, sets throughput; the sweep is its
-slot-placement analogue).
+pool), a ``shards x placement`` sweep of the mesh-sharded pool (the same
+slot count split over 1..N devices; ``--devices`` fakes them on CPU),
+and — schema ``bench_service/v3`` — a **mixed-config sweep**: N distinct
+``(c_uct, virtual_loss)`` tournament configurations multiplexed through
+one pool as per-slot traced params, pinned to exactly one compiled
+dispatch (the compile count is asserted) and compared against the PR 2
+baseline of one statically-configured pool per pairing.  The device-side
+refill moves admission and result collection into the jitted dispatch,
+so the host only flushes submissions and polls the result ring once per
+``superstep`` moves — ``host_syncs_per_move`` makes that reduction
+machine-checkable (the paper's scheduling thesis: the loop shape, not
+the lane count, sets throughput; the sweeps are its slot-placement and
+config-residency analogues).
 
 Both refill paths are warmed (compile excluded) and play bit-identical
 games; "useful" sims are the mover's, as in benchmarks/bench_arena.py.
@@ -65,7 +68,7 @@ KOMI = 0.5
 MOVE_CAP = 30
 MAX_NODES = 128
 SERVE_SIMS = 16
-SCHEMA = "bench_service/v2"
+SCHEMA = "bench_service/v3"
 
 
 def _useful_sims(total_moves: float, sims_a: int, sims_b: int) -> float:
@@ -220,6 +223,118 @@ def run_sharded_sweep(games: int, seed: int, devices: int) -> dict:
     return {"devices": devices, "slots": slots, "sweep": rows}
 
 
+def run_multiconfig(games_per_pair: int, seed: int) -> dict:
+    """N configs, 1 trace: the per-slot traced (c_uct, virtual_loss) cell.
+
+    Plays every pairing of three configs twice over: once multiplexed
+    through **one** pool (per-slot traced params; the compile count of
+    the dispatch is asserted to be exactly 1), once through the PR 2
+    baseline of a statically-configured pool per pairing (one compile
+    each, sized exactly like the legacy ``Tournament`` fallback:
+    ``min(games_per_pair, 8)`` slots).  Both paths are warmed, min-of-2
+    timed, and play the same number of games at the same budget.
+    ``setup_s`` is each path's first (cold) run — the per-pair baseline
+    pays one dispatch compile *per pairing* where the multiplexed pool
+    pays exactly one, which is the retrace cost the traced params
+    remove; the warm ``speedup`` isolates steady-state throughput (on
+    one CPU expect ~parity — cross-pairing concurrency only pays on
+    parallel hardware).
+    """
+    import dataclasses
+    import itertools
+
+    engine = GoEngine(BOARD, komi=KOMI)
+    base = MCTSConfig(board_size=BOARD, lanes=2, sims_per_move=16,
+                      max_nodes=MAX_NODES)
+    cfgs = [base,
+            dataclasses.replace(base, c_uct=1.6),
+            dataclasses.replace(base, virtual_loss=2.0)]
+    pair_list = list(itertools.combinations(range(len(cfgs)), 2))
+    g = games_per_pair
+    slots = max(2, min(g * len(pair_list), 8))   # the one-pool path
+    pair_slots = max(2, min(g, 8))               # legacy per-pair sizing
+    total = g * len(pair_list)
+
+    # --- multiplexed: every pairing through one pool, one trace
+    player = MCTS(engine, base)
+    svc = SearchService(engine, player, player, slots, max_moves=MOVE_CAP)
+
+    def run_mixed(s):
+        svc.reset(seed=s, colour_cap=(total + 1) // 2, game_capacity=total,
+                  ring_capacity=total + slots)
+        for wave in range(g):
+            for (i, j) in pair_list:
+                a, b = (i, j) if wave % 2 == 0 else (j, i)
+                svc.submit_game(
+                    c_uct=(cfgs[a].c_uct, cfgs[b].c_uct),
+                    virtual_loss=(cfgs[a].virtual_loss,
+                                  cfgs[b].virtual_loss))
+        return svc.drain()
+
+    t0 = time.perf_counter()
+    run_mixed(seed + 1000)                       # warm / compile
+    mixed_setup = time.perf_counter() - t0
+    mixed_wall = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        recs = run_mixed(seed)
+        mixed_wall = min(mixed_wall, time.perf_counter() - t0)
+    compiles = svc._dispatch._cache_size()
+    if compiles != 1:
+        raise RuntimeError(
+            f"mixed-config dispatch compiled {compiles}x; the per-slot "
+            "traced (c_uct, virtual_loss) contract requires exactly 1")
+    mixed_moves = float(sum(r.moves for r in recs))
+    mixed_sims = _useful_sims(mixed_moves, base.sims_per_move,
+                              base.sims_per_move)
+
+    # --- PR 2 baseline: one statically-configured pool per pairing
+    per_wall = 0.0
+    per_setup = 0.0
+    per_moves = 0.0
+    for (i, j) in pair_list:
+        pi, pj = MCTS(engine, cfgs[i]), MCTS(engine, cfgs[j])
+        psvc = SearchService(engine, pi, pj, pair_slots,
+                             max_moves=MOVE_CAP)
+
+        def run_pair(s):
+            psvc.reset(seed=s, colour_cap=(g + 1) // 2, game_capacity=g,
+                       ring_capacity=g + pair_slots)
+            for _ in range(g):
+                psvc.submit_game()
+            return psvc.drain()
+
+        t0 = time.perf_counter()
+        run_pair(seed + 1000)                    # warm / compile (per pair)
+        per_setup += time.perf_counter() - t0
+        wall = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            precs = run_pair(seed)
+            wall = min(wall, time.perf_counter() - t0)
+        per_wall += wall
+        per_moves += float(sum(r.moves for r in precs))
+    per_sims = _useful_sims(per_moves, base.sims_per_move,
+                            base.sims_per_move)
+
+    return {
+        "configs": len(cfgs), "pairings": len(pair_list),
+        "games_per_pair": g, "games": total, "slots": slots,
+        "pair_slots": pair_slots,
+        "sims_per_move": base.sims_per_move,
+        "dispatch_compiles": compiles,
+        "mixed_setup_s": mixed_setup,
+        "mixed_wall_s": mixed_wall,
+        "mixed_sims_per_sec": mixed_sims / mixed_wall,
+        "per_pair_setup_s": per_setup,
+        "per_pair_wall_s": per_wall,
+        "per_pair_sims_per_sec": per_sims / per_wall,
+        "setup_reduction": per_setup / mixed_setup,
+        "speedup_vs_per_pair_pools": (mixed_sims / mixed_wall)
+                                     / (per_sims / per_wall),
+    }
+
+
 def run_reference(games: int, seed: int) -> dict:
     """The acceptance cell: 2n-vs-n on the 5x5 reference config."""
     engine = GoEngine(BOARD, komi=KOMI)
@@ -253,10 +368,12 @@ def run_mixed(games: int, queries: int, seed: int) -> dict:
                                games, queries, seed)
 
 
-def _payload(ref: dict, mixed: dict, sharded: dict) -> dict:
+def _payload(ref: dict, mixed: dict, sharded: dict,
+             multi: dict) -> dict:
     return {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
             "move_cap": MOVE_CAP, "max_nodes": MAX_NODES,
-            "reference": ref, "mixed": mixed, "sharded": sharded}
+            "reference": ref, "mixed": mixed, "sharded": sharded,
+            "multi_config": multi}
 
 
 def run() -> None:
@@ -269,8 +386,14 @@ def run() -> None:
     csv_row("service_mixed_pool", mixed["wall_s"],
             f"sims/s={mixed['sims_per_sec']:.0f}")
     sharded = run_sharded_sweep(games=8, seed=0, devices=jax.device_count())
+    multi = run_multiconfig(games_per_pair=4, seed=0)
+    csv_row("service_multi_config", multi["mixed_wall_s"],
+            f"configs={multi['configs']};compiles=1;"
+            f"setup_cut={multi['setup_reduction']:.1f};"
+            f"speedup={multi['speedup_vs_per_pair_pools']:.2f}")
     with open("BENCH_service.json", "w") as f:
-        json.dump(_payload(ref, mixed, sharded), f, indent=2, sort_keys=True)
+        json.dump(_payload(ref, mixed, sharded, multi), f, indent=2,
+                  sort_keys=True)
 
 
 def main() -> None:
@@ -314,8 +437,22 @@ def main() -> None:
             f"shards={sharded['sweep'][-1]['shards']};"
             f"scale={sharded['sweep'][-1]['speedup_vs_1shard']:.2f}")
 
+    multi = run_multiconfig(games_per_pair=4, seed=args.seed)
+    print(f"multi-config: {multi['configs']} configs x "
+          f"{multi['games_per_pair']} games/pair through one pool -> "
+          f"{multi['mixed_sims_per_sec']:.0f} sims/s, "
+          f"{multi['dispatch_compiles']} compile "
+          f"({multi['speedup_vs_per_pair_pools']:.2f}x warm, "
+          f"{multi['setup_reduction']:.1f}x less setup vs per-pair pools "
+          f"at {multi['per_pair_sims_per_sec']:.0f} sims/s)")
+    csv_row("service_multi_config", multi["mixed_wall_s"],
+            f"configs={multi['configs']};compiles=1;"
+            f"setup_cut={multi['setup_reduction']:.1f};"
+            f"speedup={multi['speedup_vs_per_pair_pools']:.2f}")
+
     with open(args.out, "w") as f:
-        json.dump(_payload(ref, mixed, sharded), f, indent=2, sort_keys=True)
+        json.dump(_payload(ref, mixed, sharded, multi), f, indent=2,
+                  sort_keys=True)
     print(f"wrote {args.out}")
 
 

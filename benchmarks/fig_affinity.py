@@ -10,9 +10,18 @@ Structural metrics reproduce the paper's mechanism: device utilisation
 2-vs-3-threads/core regions => max/mean load > 1 — the step-time tax of a
 synchronous SPMD machine), plus a strength point per policy at equal lane
 count (lane placement changes which lanes share a virtual-loss view).
+
+fig9c lifts the same axis to the *request* level (the ROADMAP's
+real-device-sweep prep): when more than one jax device exists (real, or
+faked via ``benchmarks.run --devices N``), a sharded SearchService pool
+plays a fixed mixed-config tournament workload under every
+``core.placement`` policy, reporting measured per-shard occupancy,
+utilisation, and imbalance — the paper's Fig. 9 mechanism on live
+shards rather than a structural model.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 
@@ -43,7 +52,6 @@ def run(lane_sweep=(8, 16, 24, 40, 64), strength_games=4) -> None:
     base = MCTSConfig(board_size=5, lanes=2, sims_per_move=16,
                       max_nodes=128, affinity="compact")
     for policy in affinity.POLICIES:
-        import dataclasses
         cfg = dataclasses.replace(base, affinity=policy)
         t0 = time.time()
         res = match(eng, cfg, base, games=strength_games, seed=7,
@@ -51,6 +59,52 @@ def run(lane_sweep=(8, 16, 24, 40, 64), strength_games=4) -> None:
         csv_row(f"affinity_match_{policy}",
                 (time.time() - t0) / strength_games,
                 f"winrate_vs_compact={res.rate.rate:.3f}")
+
+    run_request_level()
+
+
+def run_request_level(games_per_pair: int = 2) -> None:
+    """fig9c: measured request->shard placement on a sharded service.
+
+    A mixed-config all-play-all workload (three trace-compatible configs,
+    per-slot traced params — one compiled dispatch per policy sweep cell)
+    drains through a pool sharded over every visible device, once per
+    placement policy.  Occupancy is the dispatcher's own per-shard
+    counter; ``imbalance`` (max/mean occupancy) is the paper's
+    2-vs-3-threads/core step-time tax at the request level.
+    """
+    import jax
+
+    from repro.compat import make_service_mesh
+    from repro.core import placement
+    from repro.core.tournament import Tournament
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        print("# fig9c: request-level placement needs >1 device — skipped "
+              "(run via `benchmarks.run --devices 8` to fake shards)")
+        return
+    print(f"# fig9c: request-level placement over {n_dev} shards "
+          "(measured occupancy)")
+    eng = GoEngine(5, komi=0.5)
+    base = MCTSConfig(board_size=5, lanes=2, sims_per_move=16,
+                      max_nodes=128)
+    cfgs = [base, dataclasses.replace(base, c_uct=1.6),
+            dataclasses.replace(base, virtual_loss=2.0)]
+    mesh = make_service_mesh(n_dev)
+    for policy in placement.POLICIES:
+        t = Tournament(eng, cfgs, games_per_pair=games_per_pair,
+                       slots=2 * n_dev, max_moves=20, seed=9, mesh=mesh,
+                       placement=policy)
+        t0 = time.time()
+        res = t.round_robin()
+        wall = time.time() - t0
+        occ = t.service.shard_occupancy()
+        util = float((occ > 0).mean())
+        imb = float(occ.max() / max(occ.mean(), 1e-9))
+        csv_row(f"affinity_request_{policy}", wall / res.games,
+                f"util={util:.2f};imbalance={imb:.2f};"
+                f"occ_mean={occ.mean():.2f}")
 
 
 if __name__ == "__main__":

@@ -3,15 +3,46 @@
 Prints ``name,us_per_call,derived`` CSV.  Scaled for a single-CPU
 container (see each module's docstring for the paper mapping and
 EXPERIMENTS.md for the recorded results).
+
+    PYTHONPATH=src python -m benchmarks.run [only] [--devices N]
+
+``--devices N`` fakes N CPU devices (or, on a real multi-device backend,
+is capped by what exists) so the sharded-service sweep in
+``bench_service`` and the request-level placement section of
+``fig_affinity`` exercise real shards — the ROADMAP's real-device-sweep
+prep: on TPU/GPU the same flag-free invocation picks up every physical
+device automatically.
 """
 from __future__ import annotations
 
+import os
 import sys
 import time
 
 
+def _parse_args(argv):
+    only, devices = None, None
+    i = 1
+    while i < len(argv):
+        a = argv[i]
+        if a == "--devices" and i + 1 < len(argv):
+            devices, i = int(argv[i + 1]), i + 2
+        elif a.startswith("--devices="):
+            devices, i = int(a.split("=", 1)[1]), i + 1
+        else:
+            only, i = a, i + 1
+    return only, devices
+
+
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only, devices = _parse_args(sys.argv)
+    if devices is not None and devices > 1:
+        # must land before any figure module initialises the jax backend
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={devices}"
+                .strip())
     figures = [
         ("fig_microbench", "Figs 6-8: FMA throughput + bandwidth"),
         ("fig_throughput", "Fig 10: playouts/sec vs lanes"),

@@ -7,17 +7,20 @@ Public API
 
 ====================  =====================================================
 ``MCTS``              search driver; public surface is ``search_batch``
-                      (per-game traced ``sims`` budget) and
+                      (per-game traced ``sims`` budget + traced
+                      ``SearchParams`` (c_uct, vl_weight)) and
                       ``init_tree_batch`` — the pre-service five-method
                       surface survives as deprecated shims
+``SearchParams``      traced per-search UCT knobs; one compiled search
+                      serves any mix of configurations
 ``SearchService``     the unified dispatcher (core/service.py): a
                       device-resident slot pool with origin-tagged lanes
                       (``LANE_ARENA`` / ``LANE_SERVE`` /
                       ``LANE_TOURNAMENT``), device-side refill, and a
                       result ring buffer; ``submit_* -> flush -> dispatch
                       -> poll``
-``SearchRequest``     pending-request pytree (state, key, lane, sims,
-                      ticket)
+``SearchRequest``     pending-request pytree (state, key, lane, per-side
+                      sims / c_uct / vl pairs, ticket)
 ``SearchResult``      completed-request host record scattered back from
                       the ring.  NOTE: this name moved in PR 2 — the raw
                       per-search pytree it used to denote is now
@@ -25,7 +28,10 @@ Public API
                       remains an alias of that old type)
 ``Arena``             self-play client of the service (``refill="host"``
                       keeps the PR 1 host-queue loop as baseline/oracle)
-``Tournament``        round-robin config pairs through one service pool
+``Tournament``        all-play-all cross table multiplexed through one
+                      service pool (per-slot traced configs, win matrix
+                      + Elo); per-pair pools for static-shape-diverse
+                      configs
 ``SearchOutput``      raw per-search output of ``MCTS.search_batch``
 ``Tree`` helpers      ``init_tree`` / ``init_tree_batch`` /
                       ``root_action_visits`` / ``select_action``
@@ -34,7 +40,7 @@ Public API
 External best-move queries are served by
 :class:`repro.serving.go_service.GoService` on top of ``SearchService``.
 """
-from repro.core.mcts import MCTS, SearchOutput, make_mcts
+from repro.core.mcts import MCTS, SearchOutput, SearchParams, make_mcts
 from repro.core.tree import Tree, init_tree, init_tree_batch, \
     root_action_visits, select_action
 from repro.core.arena import Arena, GameResult
@@ -43,7 +49,8 @@ from repro.core.service import (LANE_ARENA, LANE_SERVE, LANE_TOURNAMENT,
 from repro.core.tournament import Tournament, TournamentResult
 from repro.core import stats, affinity, selfplay
 
-__all__ = ["MCTS", "SearchOutput", "SearchResult", "SearchRequest",
+__all__ = ["MCTS", "SearchOutput", "SearchParams", "SearchResult",
+           "SearchRequest",
            "SearchService", "LANE_ARENA", "LANE_SERVE", "LANE_TOURNAMENT",
            "make_mcts", "Tree", "init_tree", "init_tree_batch",
            "root_action_visits", "select_action", "Arena", "GameResult",

@@ -45,6 +45,20 @@ class SearchOutput(NamedTuple):
     root_values: jax.Array     # f32[A] mean black-perspective values
 
 
+class SearchParams(NamedTuple):
+    """Traced per-search UCT knobs (the tournament-multiplexing contract).
+
+    Passed to :meth:`MCTS.search_batch` as ``f32[G]`` arrays (one value per
+    game; inside a search the scalar broadcasts over every lane and tree
+    level), or left ``None`` to use this player's static ``MCTSConfig``
+    values.  Both fields are *traced*: changing them never recompiles, and
+    passing arrays equal to the config constants is bit-identical to
+    ``params=None`` (pinned in tests/test_multiplex.py).
+    """
+    c_uct: jax.Array           # f32[G] exploration constant
+    vl_weight: jax.Array       # f32[G] virtual-loss weight in the Q term
+
+
 # Back-compat alias for the pre-SearchService name; the service-level
 # completed-request record now owns ``SearchResult`` (core/service.py).
 SearchResult = SearchOutput
@@ -66,10 +80,18 @@ class MCTS:
 
     ==================  ======================================================
     ``search_batch``    one full move search per game over a leading game
-                        axis, with an optional traced per-game ``sims`` budget
+                        axis, with a traced per-game ``sims`` budget and
+                        traced per-game ``SearchParams`` (c_uct, vl_weight)
     ``init_tree_batch`` batch of per-game tree arenas under this player's
                         engine / capacity / priors
     ==================  ======================================================
+
+    Recompile contract: the config fixes the compiled search *shape*
+    (lanes, iteration bound, tree capacity, board); ``sims`` and
+    ``SearchParams`` are data.  One MCTS player therefore serves
+    arbitrarily many (c_uct, virtual_loss, sims) configurations with a
+    single trace — the SearchService multiplexing contract
+    (docs/ARCHITECTURE.md).
     """
 
     def __init__(self, engine: GoEngine, cfg: MCTSConfig,
@@ -93,14 +115,18 @@ class MCTS:
 
     # ------------------------------------------------------------------ select
 
-    def _edge_scores(self, t: Tree, node, player, rng) -> jax.Array:
+    def _edge_scores(self, t: Tree, node, player, rng,
+                     params: Optional[SearchParams] = None) -> jax.Array:
         """UCT/PUCT score for every action at ``node`` under virtual loss.
 
         Routed through ``kernels.uct_select.ops`` — the Pallas kernel on
         TPU, its oracle elsewhere — so search and kernel share one call
-        site (see kernels/uct_select/kernel.py).
+        site (see kernels/uct_select/kernel.py).  ``params`` carries the
+        traced per-search (c_uct, vl_weight) scalars; ``None`` uses the
+        static config values (bit-identical when the values agree).
         """
         from repro.kernels.uct_select.ops import uct_scores
+        c, vlw = self._resolve_params(params)
         kids = t.children[node]
         has_child = kids != UNVISITED
         cidx = jnp.maximum(kids, 0)
@@ -109,12 +135,19 @@ class MCTS:
             t.visit[cidx][None], t.value[cidx][None], t.vloss[cidx][None],
             t.prior[node][None], t.legal[node][None], has_child[None],
             parent_n[None], player[None],
-            c_uct=self.cfg.c_uct, vl_weight=self.cfg.virtual_loss,
+            c_uct=c, vl_weight=vlw,
             use_puct=self.use_puct)[0]
         # random tie-break (the asynchronous-thread nondeterminism analogue)
         return score + jax.random.uniform(rng, score.shape) * 1e-3
 
-    def _select_lane(self, t: Tree, rng):
+    def _resolve_params(self, params: Optional[SearchParams]):
+        """The traced (c_uct, vl_weight) pair, defaulting to the config."""
+        if params is None:
+            return self.cfg.c_uct, self.cfg.virtual_loss
+        return params.c_uct, params.vl_weight
+
+    def _select_lane(self, t: Tree, rng,
+                     params: Optional[SearchParams] = None):
         """Walk root->leaf under UCT+virtual-loss; expand one node.
 
         Returns (tree, path i32[max_depth] node ids (-1 pad), playout node).
@@ -129,7 +162,7 @@ class MCTS:
             node, depth, path, key, _ = c
             key, sub = jax.random.split(key)
             player = tree_lib.node_state(t, node).to_play.astype(jnp.float32)
-            scores = self._edge_scores(t, node, player, sub)
+            scores = self._edge_scores(t, node, player, sub, params)
             act = jnp.argmax(scores).astype(jnp.int32)
             child = t.children[node, act]
             # descend only through materialised, expandable children
@@ -184,13 +217,19 @@ class MCTS:
 
     # --------------------------------------------------------------- simulate
 
-    def _simulate(self, t: Tree, rng) -> Tree:
-        """One iteration: ``lanes`` selects -> batched playouts -> backup."""
+    def _simulate(self, t: Tree, rng,
+                  params: Optional[SearchParams] = None) -> Tree:
+        """One iteration: ``lanes`` selects -> batched playouts -> backup.
+
+        The traced ``params`` scalars broadcast over every lane: each of
+        the ``lanes`` sequential selects scores edges under the same
+        per-search (c_uct, vl_weight) pair.
+        """
         L, P = self.cfg.lanes, max(1, self.cfg.leaf_playouts)
         keys = jax.random.split(rng, L + 1)
 
         def lane(t, key):
-            t, path, leaf = self._select_lane(t, key)
+            t, path, leaf = self._select_lane(t, key, params)
             return t, (path, leaf)
 
         t, (paths, leaves) = jax.lax.scan(lane, t, keys[:L])
@@ -237,14 +276,17 @@ class MCTS:
         return jnp.where(sims > 0, it, jnp.int32(self.iterations))
 
     def _search(self, root: GoState, rng,
-                sims: Optional[jax.Array] = None) -> SearchOutput:
+                sims: Optional[jax.Array] = None,
+                params: Optional[SearchParams] = None) -> SearchOutput:
         """One full move search from ``root`` (single game).
 
         With ``sims=None`` this is the seed's exact static loop.  With a
         traced ``sims``, iterations ``>= iterations_for(sims)`` become
         no-ops via a select — bit-identical to the static loop whenever
         the requested budget equals the configured one, which the service
-        oracle-equivalence tests pin.
+        oracle-equivalence tests pin.  ``params`` (traced per-search
+        scalars after the search_batch vmap) likewise reproduces the
+        ``None`` path bit-for-bit when it carries the config constants.
         """
         t = tree_lib.init_tree(self.engine, root, self.cfg.max_nodes,
                                None if self.prior_fn is None
@@ -254,12 +296,12 @@ class MCTS:
 
         if sims is None:
             def it(i, t):
-                return self._simulate(t, keys[i])
+                return self._simulate(t, keys[i], params)
         else:
             iters = self._iterations_for(sims)
 
             def it(i, t):
-                t2 = self._simulate(t, keys[i])
+                t2 = self._simulate(t, keys[i], params)
                 live = i < iters
                 # Mask only the search statistics and the allocation
                 # cursor: a dead iteration must not move visit/value mass
@@ -282,7 +324,8 @@ class MCTS:
                             root_values=tree_lib.root_action_values(t))
 
     def search_batch(self, roots: GoState, rngs: jax.Array,
-                     sims: Optional[jax.Array] = None) -> SearchOutput:
+                     sims: Optional[jax.Array] = None,
+                     params: Optional[SearchParams] = None) -> SearchOutput:
         """Batched move search: one independent tree per game.
 
         ``roots`` is a ``GoState`` batched over a leading game axis and
@@ -292,15 +335,31 @@ class MCTS:
         all G trees advance one full move search as a single vmapped
         program.
 
-        ``sims`` (optional ``i32[G]``) is a *traced* per-game playout
-        budget: ``<= 0`` selects this player's configured
-        ``sims_per_move``; positive values are capped by it.  Passing the
-        configured budget (or ``<= 0``) is bit-identical to ``sims=None``.
+        Traced-vs-static contract (what does and does not recompile):
+
+        * **static** — everything baked into this player's ``MCTSConfig``
+          shape: ``lanes``, ``max_nodes``, ``sims_per_move`` (the compiled
+          loop bound), board size, ``parallelism`` — plus the batch size
+          ``G``.  Changing any of these retraces.
+        * **traced** — ``sims`` (optional ``i32[G]`` per-game playout
+          budget: ``<= 0`` selects the configured ``sims_per_move``;
+          positive values are capped by it) and ``params`` (optional
+          :class:`SearchParams` of ``f32[G]`` per-game ``c_uct`` /
+          ``vl_weight``).  Changing their *values* never recompiles, and
+          passing the configured constants is bit-identical to ``None``.
         """
+        sims = None if sims is None else jnp.asarray(sims, jnp.int32)
+        if params is None:
+            if sims is None:
+                return jax.vmap(self._search)(roots, rngs)
+            return jax.vmap(self._search)(roots, rngs, sims)
+        params = SearchParams(jnp.asarray(params.c_uct, jnp.float32),
+                              jnp.asarray(params.vl_weight, jnp.float32))
         if sims is None:
-            return jax.vmap(self._search)(roots, rngs)
-        return jax.vmap(self._search)(roots, rngs,
-                                      jnp.asarray(sims, jnp.int32))
+            return jax.vmap(
+                lambda r, k, p: self._search(r, k, None, p))(
+                    roots, rngs, params)
+        return jax.vmap(self._search)(roots, rngs, sims, params)
 
     def init_tree_batch(self, roots: GoState) -> Tree:
         """Batch of per-game tree arenas under this player's engine/config.
@@ -345,28 +404,33 @@ class MCTS:
 
     def search(self, root: GoState, rng,
                sims: Optional[jax.Array] = None) -> SearchOutput:
+        """Deprecated single-root search; use a [1]-batch ``search_batch``."""
         _warn_deprecated("search", "vmap is the service's job — use "
                          "search_batch (a [1]-batch for single roots)")
         return self._search(root, rng, sims)
 
     def search_root_parallel(self, root: GoState, rng) -> SearchOutput:
+        """Deprecated root-parallel search; use the service dispatchers."""
         _warn_deprecated("search_root_parallel",
                          "use core.distributed.distributed_best_move or a "
                          "root-parallel MCTSConfig via the service")
         return self._search_root_parallel(root, rng)
 
     def best_move(self, root: GoState, rng) -> jax.Array:
+        """Deprecated; use :meth:`GoService.best_move`."""
         _warn_deprecated("best_move",
                          "use serving.go_service.GoService.best_move")
         return self._best_move(root, rng)
 
     def jit_best_move(self, root: GoState, rng) -> jax.Array:
+        """Deprecated; use :meth:`GoService.best_move`."""
         _warn_deprecated("jit_best_move",
                          "use serving.go_service.GoService.best_move")
         return self._jit_best_move(root, rng)
 
 
 def make_mcts(engine: GoEngine, cfg: MCTSConfig, **kw) -> MCTS:
+    """Build an :class:`MCTS` player, normalising leaf-parallel configs."""
     if cfg.parallelism == "leaf":
         # leaf parallelism: a single selection lane, many playouts per leaf
         cfg = cfg if cfg.lanes == 1 else cfg.__class__(

@@ -21,6 +21,14 @@ Policies (affinity analogues in parentheses):
   the lowest index — per-shard in-flight game counts stay within one of
   each other, so each shard's colour-capped admission alternates colours
   exactly like the single-pool dispatcher.
+* ``config_affine`` (the 2015 follow-up's resident-search affinity): a
+  request sticks to the shard that last hosted its search configuration
+  (the ``config_key`` the SearchService derives from the traced
+  per-request ``(sims, c_uct, virtual_loss)`` knobs) while that shard has
+  headroom, falling back to least-loaded for new or displaced configs.
+  With per-slot traced params no shard *needs* same-config batches to
+  avoid retracing — this policy exists to study the locality axis the
+  Scaling-MCTS paper attributes the 240-thread recovery to.
 
 Placement is pure host-side bookkeeping: it never changes a serve query's
 answer (the serve RNG contract makes results placement-independent) and is
@@ -33,20 +41,28 @@ from typing import Optional
 
 import numpy as np
 
-POLICIES = ("round_robin", "fill_first", "colour_balanced")
+POLICIES = ("round_robin", "fill_first", "colour_balanced", "config_affine")
 
 # request classes tracked independently (full games vs single searches)
 CLS_GAME = 0
 CLS_SERVE = 1
 
 
-def place(policy: str, cursor: int, in_flight: np.ndarray, capacity: int) -> Optional[int]:
+def place(
+    policy: str,
+    cursor: int,
+    in_flight: np.ndarray,
+    capacity: int,
+    affine: Optional[int] = None,
+) -> Optional[int]:
     """Pure placement step: the shard that admits the next request.
 
     ``cursor`` is the policy's round-robin position (ignored by the other
     policies), ``in_flight`` the per-shard outstanding count for the
-    request's class, ``capacity`` the per-shard in-flight cap.  Returns
-    ``None`` when every shard is full.
+    request's class, ``capacity`` the per-shard in-flight cap, ``affine``
+    the shard that last hosted this request's search configuration (only
+    ``config_affine`` reads it).  Returns ``None`` when every shard is
+    full.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown placement {policy!r}; want {POLICIES}")
@@ -61,7 +77,9 @@ def place(policy: str, cursor: int, in_flight: np.ndarray, capacity: int) -> Opt
                 return s
     if policy == "fill_first":
         return int(np.argmax(open_))            # lowest open shard
-    # colour_balanced: least loaded, ties to the lowest index
+    if policy == "config_affine" and affine is not None and open_[affine]:
+        return int(affine)                      # sticky while there is room
+    # colour_balanced (and affine fallback): least loaded, lowest index
     masked = np.where(open_, in_flight, np.iinfo(np.int64).max)
     return int(np.argmin(masked))
 
@@ -82,15 +100,33 @@ class PlacementPolicy:
         self.n_shard = n_shard
         self.in_flight = np.zeros((2, n_shard), np.int64)  # [class, shard]
         self._cursor = [0, 0]
+        self._affine = {}  # config_key -> shard that last hosted it
 
-    def choose(self, cls: int, capacity: int) -> Optional[int]:
-        s = place(self.policy, self._cursor[cls], self.in_flight[cls], capacity)
+    def choose(self, cls: int, capacity: int, config_key=None) -> Optional[int]:
+        """Admit one request of class ``cls``; returns its shard or None.
+
+        ``config_key`` is any hashable signature of the request's traced
+        search configuration (the SearchService passes the per-side
+        ``(sims, c_uct, virtual_loss)`` tuple); only ``config_affine``
+        consults it.
+        """
+        track = self.policy == "config_affine" and config_key is not None
+        affine = self._affine.get(config_key) if track else None
+        s = place(self.policy, self._cursor[cls], self.in_flight[cls], capacity, affine)
         if s is None:
             return None
         self.in_flight[cls, s] += 1
         if self.policy == "round_robin":
             self._cursor[cls] = (s + 1) % self.n_shard
+        if track:
+            # bound the affinity map: long-lived serving processes may see
+            # unboundedly many distinct configs; evict oldest-inserted
+            self._affine.pop(config_key, None)
+            self._affine[config_key] = s
+            if len(self._affine) > 1024:
+                self._affine.pop(next(iter(self._affine)))
         return s
 
     def release(self, cls: int, shard: int) -> None:
+        """Return a shard's slot when the request's result is polled."""
         self.in_flight[cls, shard] -= 1

@@ -18,9 +18,12 @@ pool, and one jitted ``dispatch`` step advances all ``S`` slots together:
   result independent of slot placement and batch-mates.
 * **Search**: the parity-balanced roll-by-half from PR 1 — one
   ``player_a.search_batch`` over half the slots, one ``player_b`` over the
-  other, exactly one search per move.  The per-slot ``sims`` budget is a
-  *traced* argument (masked loop tail), so mixed budgets share one
-  compiled program.
+  other, exactly one search per move.  The per-slot ``sims`` budget and
+  the per-slot, per-side ``(c_uct, vl_weight)`` UCT knobs are *traced*
+  arguments (masked loop tail; per-lane scalar broadcast), so mixed
+  budgets **and mixed search configurations** share one compiled program
+  — the 2015 follow-up's lesson that task-level parallelism scales only
+  when differently-configured searches stay resident without re-setup.
 * **Scatter**: finished requests (game over, or a serve query's single
   search) are appended to a device-resident result ring buffer; their
   slots empty and refill on the next step's admission.
@@ -65,7 +68,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.compat import shard_map
-from repro.core.mcts import MCTS
+from repro.core.mcts import MCTS, SearchParams
 from repro.core.placement import CLS_GAME, CLS_SERVE, PlacementPolicy
 from repro.go.board import GoEngine, GoState
 
@@ -80,11 +83,20 @@ LANE_NAMES = {LANE_ARENA: "arena", LANE_SERVE: "serve",
 
 
 class SearchRequest(NamedTuple):
-    """One pending request (device pytree; leading axis = queue/chunk)."""
+    """One pending request (device pytree; leading axis = queue/chunk).
+
+    ``sims`` / ``c_uct`` / ``vl`` are **per-side pairs**: column 0
+    configures searches run by player A (the serve-lane player), column 1
+    those run by player B.  All three are traced through the dispatch —
+    a pool multiplexes arbitrarily many (c_uct, virtual_loss, sims)
+    configurations with one compiled program.
+    """
     state: GoState        # root position (games start from the empty board)
     key: jax.Array        # u32[2] request RNG key
     lane: jax.Array       # i32 origin tag (LANE_*)
-    sims: jax.Array       # i32 playout budget; <=0 = player's configured one
+    sims: jax.Array       # i32[2] playout budget/side; <=0 = configured one
+    c_uct: jax.Array      # f32[2] UCT exploration constant per side
+    vl: jax.Array         # f32[2] virtual-loss weight per side
     ticket: jax.Array     # i32 service-assigned id
 
 
@@ -105,7 +117,9 @@ class _Pending(NamedTuple):
     state: GoState
     key: np.ndarray
     lane: int
-    sims: int
+    sims: tuple           # (A-side, B-side) playout budgets
+    c_uct: tuple          # (A-side, B-side) exploration constants
+    vl: tuple             # (A-side, B-side) virtual-loss weights
     ticket: int
     shard: int
 
@@ -117,7 +131,9 @@ class _Slots(NamedTuple):
     ticket: jax.Array     # i32[S] active request id, -1 = dummy slot
     lane: jax.Array       # i32[S]
     moves: jax.Array      # i32[S] moves played by the active request
-    sims: jax.Array       # i32[S] per-request playout budget
+    sims: jax.Array       # i32[S,2] per-request playout budget per side
+    c_uct: jax.Array      # f32[S,2] per-request c_uct per side (traced)
+    vl: jax.Array         # f32[S,2] per-request vl weight per side (traced)
     a_black: jax.Array    # bool[S] player A owns Black (game lanes)
 
 
@@ -126,7 +142,9 @@ class _Queue(NamedTuple):
     states: GoState
     keys: jax.Array       # u32[Q,2]
     lane: jax.Array       # i32[Q]
-    sims: jax.Array       # i32[Q]
+    sims: jax.Array       # i32[Q,2]
+    c_uct: jax.Array      # f32[Q,2]
+    vl: jax.Array         # f32[Q,2]
     ticket: jax.Array     # i32[Q]
     size: jax.Array       # i32: total ever enqueued
     head: jax.Array       # i32: total ever admitted (next to admit)
@@ -196,6 +214,8 @@ def _queue_push(q: _Queue, req: SearchRequest, n: jax.Array) -> _Queue:
         keys=put(q.keys, req.key),
         lane=put(q.lane, req.lane),
         sims=put(q.sims, req.sims),
+        c_uct=put(q.c_uct, req.c_uct),
+        vl=put(q.vl, req.vl),
         ticket=put(q.ticket, req.ticket),
         size=q.size + n,
     )
@@ -206,8 +226,18 @@ class SearchService:
 
     Player A searches the first half-batch at even parity (and, by the
     admission rule, every serve query); games alternate which player owns
-    Black under the colour cap.  All static search shapes (lanes, budget,
-    board) live in the players — one service, one compiled dispatch.
+    Black under the colour cap.  All static search shapes (lanes, budget
+    bound, tree capacity, board) live in the players — one service, one
+    compiled dispatch.
+
+    Traced-vs-static contract: ``slots``, ``superstep``, the mesh shape,
+    and the players' ``MCTSConfig`` shapes are **static** (changing them
+    retraces); every per-request knob — ``sims``, ``c_uct``,
+    ``virtual_loss``, each an (A-side, B-side) pair — is **traced**, so
+    one pool multiplexes arbitrarily many tournament configurations with
+    exactly one compiled dispatch (pinned by the compile-count tests in
+    tests/test_multiplex.py).  Submitting the players' configured values
+    (the default) is bit-identical to the PR 3 static path.
 
     ``mesh`` (a one-axis device mesh, see ``compat.make_service_mesh``)
     shards the pool: each of the axis's ``n_shard`` devices owns
@@ -333,13 +363,18 @@ class SearchService:
         S = self._shard_slots
         A = self.engine.num_actions
         bc = lambda n: (lambda x: jnp.broadcast_to(x, (n,) + jnp.shape(x)))
+        # dummy slots still search every step; give them the players'
+        # configured knobs so their (discarded) results stay finite
+        cfg_cu, cfg_vl = self._default_params()
         slots = _Slots(
             states=jax.tree.map(bc(S), self._init_state),
             keys=jnp.asarray(slot_keys),
             ticket=jnp.full((S,), -1, jnp.int32),
             lane=jnp.full((S,), -1, jnp.int32),
             moves=jnp.zeros((S,), jnp.int32),
-            sims=jnp.zeros((S,), jnp.int32),
+            sims=jnp.zeros((S, 2), jnp.int32),
+            c_uct=jnp.broadcast_to(jnp.asarray(cfg_cu, jnp.float32), (S, 2)),
+            vl=jnp.broadcast_to(jnp.asarray(cfg_vl, jnp.float32), (S, 2)),
             a_black=jnp.arange(S) < S // 2,
         )
 
@@ -348,7 +383,9 @@ class SearchService:
                 states=jax.tree.map(bc(n), self._init_state),
                 keys=jnp.zeros((n, 2), jnp.uint32),
                 lane=jnp.zeros((n,), jnp.int32),
-                sims=jnp.zeros((n,), jnp.int32),
+                sims=jnp.zeros((n, 2), jnp.int32),
+                c_uct=jnp.zeros((n, 2), jnp.float32),
+                vl=jnp.zeros((n, 2), jnp.float32),
                 ticket=jnp.full((n,), -1, jnp.int32),
                 size=jnp.int32(0),
                 head=jnp.int32(0),
@@ -380,32 +417,64 @@ class SearchService:
             return self._rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
         return np.asarray(key, np.uint32).reshape(2)
 
-    def submit_game(self, key=None, lane: int = LANE_ARENA,
-                    sims: int = 0) -> int:
+    def _default_params(self):
+        """The players' static (c_uct, vl) pairs — per-request defaults."""
+        return ((self.player_a.cfg.c_uct, self.player_b.cfg.c_uct),
+                (self.player_a.cfg.virtual_loss,
+                 self.player_b.cfg.virtual_loss))
+
+    @staticmethod
+    def _pair(value, default, cast):
+        """Normalise a per-request knob to an (A-side, B-side) pair."""
+        if value is None:
+            return (cast(default[0]), cast(default[1]))
+        if np.ndim(value) == 0:
+            return (cast(value), cast(value))
+        a, b = value
+        return (cast(a), cast(b))
+
+    def submit_game(self, key=None, lane: int = LANE_ARENA, sims=0,
+                    c_uct=None, virtual_loss=None) -> int:
         """Queue one full self-play game (A vs B); returns its ticket.
 
         Colour is assigned at admission by the slot-pool cell, capped to
         the +-1 balance by ``colour_cap`` — exactly the PR 1 host queue.
+
+        ``sims`` / ``c_uct`` / ``virtual_loss`` configure this game's two
+        searches and are **traced** through the dispatch (no recompile
+        across values — the tournament-multiplexing contract).  Each
+        accepts a scalar (both sides) or an ``(a_side, b_side)`` pair;
+        ``None`` (and ``sims <= 0``) means the players' configured
+        values, which is bit-identical to the pre-traced path.
         """
         if lane not in GAME_LANES:
             raise ValueError(f"game lane must be one of {GAME_LANES}")
         return self._submit(self._pending_games, self._init_state,
-                            key, lane, sims)
+                            key, lane, sims, c_uct, virtual_loss)
 
-    def submit_serve(self, state: GoState, key=None, sims: int = 0) -> int:
+    def submit_serve(self, state: GoState, key=None, sims=0,
+                     c_uct=None, virtual_loss=None) -> int:
         """Queue one external best-move query for ``state``; returns its
-        ticket.  The single search always runs under player A's config
-        with the request key, so the result is a pure function of
-        ``(state, key, sims)``."""
+        ticket.  The single search always runs under player A with the
+        request key, so the result is a pure function of
+        ``(state, key, sims, c_uct, virtual_loss)`` — placement- and
+        batch-mate-independent.  ``c_uct`` / ``virtual_loss`` are traced
+        per-query strength knobs defaulting to player A's config.
+        """
         return self._submit(self._pending_serve, state, key,
-                            LANE_SERVE, sims)
+                            LANE_SERVE, sims, c_uct, virtual_loss)
 
     def _submit(self, pending: List[_Pending], state: GoState, key,
-                lane: int, sims: int) -> int:
+                lane: int, sims, c_uct, virtual_loss) -> int:
         cls = CLS_SERVE if lane == LANE_SERVE else CLS_GAME
         cap = (self.serve_capacity if cls == CLS_SERVE
                else self.game_capacity)
-        shard = self._placement.choose(cls, cap)
+        cfg_cu, cfg_vl = self._default_params()
+        sims = self._pair(sims, (0, 0), int)
+        cu = self._pair(c_uct, cfg_cu, float)
+        vl = self._pair(virtual_loss, cfg_vl, float)
+        shard = self._placement.choose(cls, cap,
+                                       config_key=(sims, cu, vl))
         if shard is None:
             raise RuntimeError(
                 f"{LANE_NAMES[lane]} queue full ({cap} in flight per "
@@ -413,8 +482,8 @@ class SearchService:
         ticket = self._next_ticket
         self._next_ticket += 1
         pending.append(_Pending(state=state, key=self._draw_key(key),
-                                lane=lane, sims=int(sims), ticket=ticket,
-                                shard=shard))
+                                lane=lane, sims=sims, c_uct=cu, vl=vl,
+                                ticket=ticket, shard=shard))
         self._assigned[ticket] = (cls, shard)
         self._submitted[lane] += 1
         return ticket
@@ -448,7 +517,12 @@ class SearchService:
                 [r.key for r in rows]
                 + [np.zeros(2, np.uint32)] * pad)),
             lane=jnp.asarray([r.lane for r in rows] + [0] * pad, jnp.int32),
-            sims=jnp.asarray([r.sims for r in rows] + [0] * pad, jnp.int32),
+            sims=jnp.asarray([r.sims for r in rows] + [(0, 0)] * pad,
+                             jnp.int32),
+            c_uct=jnp.asarray([r.c_uct for r in rows] + [(0., 0.)] * pad,
+                              jnp.float32),
+            vl=jnp.asarray([r.vl for r in rows] + [(0., 0.)] * pad,
+                           jnp.float32),
             ticket=jnp.asarray([r.ticket for r in rows] + [-1] * pad,
                                jnp.int32),
         )
@@ -551,6 +625,7 @@ class SearchService:
         chunk = SearchRequest(
             state=jax.tree.map(lambda x: x[idx], gq.states),
             key=gq.keys[idx], lane=gq.lane[idx], sims=gq.sims[idx],
+            c_uct=gq.c_uct[idx], vl=gq.vl[idx],
             ticket=gq.ticket[idx])
         got = jax.tree.map(lambda x: lax.ppermute(x, self._axis, to_next),
                            chunk)
@@ -604,6 +679,8 @@ class SearchService:
             lane=merge(sl.lane, sq.lane, gq.lane),
             moves=jnp.where(refilled, 0, sl.moves),
             sims=merge(sl.sims, sq.sims, gq.sims),
+            c_uct=merge(sl.c_uct, sq.c_uct, gq.c_uct),
+            vl=merge(sl.vl, sq.vl, gq.vl),
             a_black=jnp.where(adm_s, True,
                               jnp.where(adm_g, cellA, sl.a_black)),
         )
@@ -616,7 +693,13 @@ class SearchService:
             colour_count=colour_count.astype(jnp.int32))
 
     def _advance(self, pool: PoolState) -> PoolState:
-        """One move in every slot: the parity-balanced half-batch search."""
+        """One move in every slot: the parity-balanced half-batch search.
+
+        After the involution gather the head half is always the slots
+        player A moves in, so A's search reads the requests' side-0
+        (sims, c_uct, vl) columns and B's the side-1 columns — the traced
+        per-slot knobs that let one compiled dispatch host mixed configs.
+        """
         sl = pool.slots
         S = sl.ticket.shape[0]
         h = S // 2
@@ -628,14 +711,20 @@ class SearchService:
         k3 = jax.vmap(lambda k: jax.random.split(k, 3))(keys_p)
         new_keys, ka, kb = k3[:, 0], k3[:, 1], k3[:, 2]
         sims_p = sl.sims[idx]
+        cu_p = sl.c_uct[idx]
+        vl_p = sl.vl[idx]
         is_serve = (sl.lane == LANE_SERVE) & (sl.ticket >= 0)
         # serve contract: the query key drives its (single) search directly
         ka = jnp.where(is_serve[idx][:, None], keys_p, ka)
 
         head = jax.tree.map(lambda x: x[:h], st)
         tail = jax.tree.map(lambda x: x[h:], st)
-        res_a = self.player_a.search_batch(head, ka[:h], sims_p[:h])
-        res_b = self.player_b.search_batch(tail, kb[h:], sims_p[h:])
+        res_a = self.player_a.search_batch(
+            head, ka[:h], sims_p[:h, 0],
+            params=SearchParams(cu_p[:h, 0], vl_p[:h, 0]))
+        res_b = self.player_b.search_batch(
+            tail, kb[h:], sims_p[h:, 1],
+            params=SearchParams(cu_p[h:, 1], vl_p[h:, 1]))
         actions = jnp.concatenate([res_a.action, res_b.action])
         nodes = jnp.concatenate([res_a.tree.size, res_b.tree.size])
         visits = jnp.concatenate([res_a.root_visits, res_b.root_visits])
@@ -662,6 +751,7 @@ class SearchService:
             states=new_st, keys=new_keys,
             ticket=jnp.where(finished, -1, sl.ticket),
             lane=sl.lane, moves=moves_new, sims=sl.sims,
+            c_uct=sl.c_uct, vl=sl.vl,
             a_black=sl.a_black)
         return pool._replace(slots=slots, ring=ring,
                              parity=pool.parity + 1,

@@ -1,25 +1,42 @@
-"""Round-robin tournament scheduler on the SearchService dispatcher.
+"""All-play-all tournament scheduler, multiplexed through one slot pool.
 
 The paper's self-play methodology is a single 2x-vs-1x pairing; the
-tournament scheduler generalises it to the full cross table the ROADMAP
-calls for: every unordered pair of configurations plays a colour-balanced
-mini-match, and all games flow through one SearchService slot pool
-(``LANE_TOURNAMENT`` tickets) — the same admission-controlled dispatch
-that serves self-play and external queries.
+tournament scheduler generalises it to the full cross table.  Because the
+UCT knobs ``(c_uct, virtual_loss)`` and the playout budget ``sims`` are
+*per-slot traced* through the SearchService dispatch (core/service.py),
+every pairing of every configuration plays **concurrently in one pool**
+under **one compiled dispatch**: a game submitted for pairing ``(i, j)``
+simply carries ``(cfg_i, cfg_j)``'s knobs as per-side traced values.  This
+is the Scaling-MCTS follow-up's task-parallel regime (arXiv:1507.04383) —
+differently-configured searches stay resident with zero re-setup — where
+the pre-PR 4 scheduler retraced (or serialised) whenever configs differed.
 
-Pairs are scheduled through the pool round-robin.  Search shapes (lanes,
-budget) are *static* to the compiled dispatch, so every pair compiles its
-own dispatch step (each pairing binds fresh players, and a jitted bound
-method owns its own cache — making same-shape pairs share one compiled
-program needs the per-slot traced (c_uct, virtual_loss) follow-up in the
-ROADMAP).  Within a pair, games run concurrently across the pool's slots
-with device-side refill and colour balance +-1 (the paper's
-alternating-colours methodology).  ``mesh=`` shards each pair's pool over
-a one-axis device mesh (slot counts are padded to an even per-shard
-share), with ``placement``/``rebalance`` as in core/service.py.
+Scheduling: games are submitted in pair-interleaved waves (wave ``w``
+holds one game of every pairing) with the A/B *role* alternating per wave,
+so each config plays both dispatch sides equally; colour (Black/White) is
+assigned at admission under the pool-wide colour cap.  Colour balance is
+therefore **aggregate** (+-1 across the whole cross table, the paper's
+alternating-colours cap) plus statistical per pairing (role alternation
+decorrelates a pairing from any fixed admission cell) — weaker than the
+strict per-pairing +-1 the per-pair pools enforce; tournaments where
+per-pairing colour parity matters more than throughput can pass
+``multiplex=False`` (colour-targeted admission is a ROADMAP follow-up).
+Results come back origin-tagged (ticket -> pairing), and the cross table
+accumulates a win matrix, per-config points, and Bradley–Terry Elo
+ratings.
+
+Configs that differ in *static* search shape (``lanes``, ``max_nodes``,
+``parallelism``, board) cannot share a compiled search; those tournaments
+transparently fall back to the per-pair pools of PR 2 (one service per
+pairing).  ``multiplex=True`` asserts the one-pool path and raises if the
+configs are not trace-compatible.  ``mesh=`` shards the pool over a
+one-axis device mesh with ``placement``/``rebalance`` as in
+core/service.py — ``placement="config_affine"`` additionally keeps a
+pairing's games on the shard that last hosted its configuration.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
@@ -30,6 +47,44 @@ from repro.core import stats
 from repro.core.mcts import MCTS
 from repro.core.service import LANE_TOURNAMENT, SearchService, pad_slots
 from repro.go.board import GoEngine
+
+# MCTSConfig fields that may differ between multiplexed configs: they are
+# traced through the dispatch (seed is host-side bookkeeping only).
+TRACED_FIELDS = ("c_uct", "virtual_loss", "sims_per_move", "seed")
+
+
+def trace_compatible(configs: Sequence[MCTSConfig]) -> bool:
+    """True when all configs share one compiled search shape.
+
+    Configs differing only in :data:`TRACED_FIELDS` multiplex through one
+    pool; any other difference (lanes, tree capacity, board, parallelism
+    mode, ...) changes the compiled program and forces per-pair pools.
+    """
+    strip = {f: 0 for f in TRACED_FIELDS}
+    base = dataclasses.replace(configs[0], **strip)
+    return all(dataclasses.replace(c, **strip) == base for c in configs[1:])
+
+
+def elo_ratings(score: np.ndarray, games: np.ndarray,
+                iters: int = 200) -> np.ndarray:
+    """Bradley–Terry Elo fit of a cross table (deterministic, no RNG).
+
+    ``score[i, j]`` is i's points against j (1 per win, 0.5 per draw) and
+    ``games[i, j]`` the games they played.  Each played pairing gets one
+    virtual draw so perfect scores stay finite; ratings are centred on a
+    mean of 0 Elo.
+    """
+    P = score.shape[0]
+    played = (games > 0) & ~np.eye(P, dtype=bool)
+    s = np.where(played, score + 0.5, 0.0)
+    n = np.where(played, games + 1.0, 0.0)
+    w = np.ones(P)
+    for _ in range(iters):
+        denom = (n / (w[:, None] + w[None, :] + 1e-30)).sum(axis=1)
+        w = np.where(denom > 0, s.sum(axis=1) / np.maximum(denom, 1e-30), w)
+        w = w / np.exp(np.mean(np.log(np.maximum(w, 1e-30))))
+    elo = 400.0 * np.log10(np.maximum(w, 1e-30))
+    return elo - elo.mean()
 
 
 class PairResult(NamedTuple):
@@ -43,10 +98,13 @@ class PairResult(NamedTuple):
 
 
 class TournamentResult(NamedTuple):
+    """The finished cross table: per-pair records plus derived standings."""
     names: Tuple[str, ...]
     pairs: Dict[Tuple[int, int], PairResult]
     points: np.ndarray        # f64[P]: 1 per win, 0.5 per draw
     games: int                # total games played
+    win_matrix: np.ndarray    # f64[P,P]: points of row vs column
+    elo: np.ndarray           # f64[P]: Bradley-Terry ratings, mean 0
 
     def table(self) -> str:
         """Human-readable standings, best first."""
@@ -57,15 +115,25 @@ class TournamentResult(NamedTuple):
             played[j] += n
         order = np.argsort(-self.points)
         width = max(len(n) for n in self.names)
-        lines = [f"{'player':<{width}}  points  games"]
+        lines = [f"{'player':<{width}}  points  elo     games"]
         for p in order:
             lines.append(f"{self.names[p]:<{width}}  "
-                         f"{self.points[p]:<6.1f}  {played[p]}")
+                         f"{self.points[p]:<6.1f}  "
+                         f"{self.elo[p]:<+7.0f} {played[p]}")
         return "\n".join(lines)
 
 
 class Tournament:
-    """All-pairs round-robin between MCTS configurations, one shared pool."""
+    """All-pairs round-robin between MCTS configurations, one shared pool.
+
+    Static-vs-traced contract: the slot count, superstep, mesh shape, and
+    the configs' shared search shape compile **once**; each game's
+    ``(c_uct, virtual_loss, sims)`` ride through the dispatch as traced
+    per-slot values, so a tournament over N trace-compatible configs
+    costs exactly one compilation regardless of N (pinned in
+    tests/test_multiplex.py).  ``multiplex=None`` auto-detects
+    compatibility; ``False`` forces the legacy per-pair pools.
+    """
 
     def __init__(self, engine: GoEngine, configs: Sequence[MCTSConfig],
                  names: Optional[Sequence[str]] = None,
@@ -73,47 +141,127 @@ class Tournament:
                  max_moves: Optional[int] = None, seed: int = 0,
                  superstep: int = 4, mesh=None,
                  placement: str = "round_robin", rebalance: bool = True,
-                 **mcts_kw):
+                 multiplex: Optional[bool] = None, **mcts_kw):
         if len(configs) < 2:
             raise ValueError("tournament needs at least 2 configs")
         if names is not None and len(names) != len(configs):
             raise ValueError("names must match configs")
+        compatible = trace_compatible(configs)
+        if multiplex and not compatible:
+            raise ValueError(
+                "multiplex=True needs trace-compatible configs: only "
+                f"{TRACED_FIELDS} may differ (lanes/max_nodes/board/"
+                "parallelism change the compiled search shape)")
+        self.multiplex = compatible if multiplex is None else bool(multiplex)
         self.engine = engine
         self.configs = list(configs)
         self.names = tuple(names) if names is not None else tuple(
             f"cfg{i}:{c.lanes}x{c.sims_per_move}"
             for i, c in enumerate(configs))
         self.games_per_pair = games_per_pair
-        slots = slots or min(games_per_pair, 8)
+        self.n_pairs = len(configs) * (len(configs) - 1) // 2
+        slots = slots or min(games_per_pair *
+                             (self.n_pairs if self.multiplex else 1), 8)
         self.mesh = mesh
         self.placement = placement
         self.rebalance = rebalance
         # pools shard over the mesh: pad the slot count so every shard
-        # gets an even share (each pair's pool reuses this shape)
+        # gets an even share (the legacy path reuses this shape per pair)
         self.slots = pad_slots(slots, mesh)
         self.max_moves = max_moves
         self.seed = seed
         self.superstep = superstep
         self.mcts_kw = mcts_kw
         self.host_syncs = 0
+        self.service: Optional[SearchService] = None   # multiplexed pool
+
+    # ------------------------------------------------------------ scheduling
 
     def round_robin(self) -> TournamentResult:
-        """Play every pair's mini-match through the service pool."""
+        """Play the full cross table; one pool when trace-compatible."""
         P = len(self.configs)
+        self.host_syncs = 0
+        if self.multiplex:
+            per_pair = self._round_robin_multiplexed()
+        else:
+            per_pair = self._round_robin_paired()
         points = np.zeros(P)
+        win = np.zeros((P, P))
+        games = np.zeros((P, P))
         pairs: Dict[Tuple[int, int], PairResult] = {}
         total = 0
-        self.host_syncs = 0
-        for n, (i, j) in enumerate(itertools.combinations(range(P), 2)):
-            pair = self._play_pair(i, j, seed=self.seed + 1000 * n)
-            pairs[(i, j)] = pair
-            points[i] += pair.i_wins + 0.5 * pair.draws
-            points[j] += pair.j_wins + 0.5 * pair.draws
-            total += pair.i_wins + pair.j_wins + pair.draws
+        for (i, j), (iw, jw, dr) in per_pair.items():
+            pairs[(i, j)] = PairResult(
+                i=i, j=j, i_wins=iw, j_wins=jw, draws=dr,
+                rate=stats.win_rate(iw, jw, dr))
+            points[i] += iw + 0.5 * dr
+            points[j] += jw + 0.5 * dr
+            win[i, j] = iw + 0.5 * dr
+            win[j, i] = jw + 0.5 * dr
+            games[i, j] = games[j, i] = iw + jw + dr
+            total += iw + jw + dr
         return TournamentResult(names=self.names, pairs=pairs,
-                                points=points, games=total)
+                                points=points, games=total,
+                                win_matrix=win,
+                                elo=elo_ratings(win, games))
 
-    def _play_pair(self, i: int, j: int, seed: int) -> PairResult:
+    def _round_robin_multiplexed(self) -> Dict[Tuple[int, int],
+                                               Tuple[int, int, int]]:
+        """Every pairing in flight at once through one compiled pool.
+
+        The shared players' static shape is ``configs[0]`` with the
+        *maximum* playout budget (the compiled loop bound — smaller
+        per-game budgets mask the tail); each game carries its pairing's
+        traced knobs.  Wave ``w`` submits one game per pairing with the
+        roles swapped on odd waves.
+        """
+        cfgs = self.configs
+        shared = dataclasses.replace(
+            cfgs[0], sims_per_move=max(c.sims_per_move for c in cfgs))
+        player = MCTS(self.engine, shared, **self.mcts_kw)
+        svc = SearchService(self.engine, player, player, self.slots,
+                            max_moves=self.max_moves,
+                            superstep=self.superstep, mesh=self.mesh,
+                            placement=self.placement,
+                            rebalance=self.rebalance)
+        self.service = svc
+        pair_list = list(itertools.combinations(range(len(cfgs)), 2))
+        total = self.games_per_pair * len(pair_list)
+        svc.reset(seed=self.seed, colour_cap=(total + 1) // 2,
+                  game_capacity=total, ring_capacity=total + self.slots)
+        meta: Dict[int, Tuple[int, int, int]] = {}  # ticket -> (i, j, a_side)
+        for wave in range(self.games_per_pair):
+            for (i, j) in pair_list:
+                a, b = (i, j) if wave % 2 == 0 else (j, i)
+                t = svc.submit_game(
+                    lane=LANE_TOURNAMENT,
+                    sims=(cfgs[a].sims_per_move, cfgs[b].sims_per_move),
+                    c_uct=(cfgs[a].c_uct, cfgs[b].c_uct),
+                    virtual_loss=(cfgs[a].virtual_loss,
+                                  cfgs[b].virtual_loss))
+                meta[t] = (i, j, a)
+        recs = svc.drain()
+        self.host_syncs += svc.host_syncs
+        out = {p: [0, 0, 0] for p in pair_list}
+        for r in recs:
+            i, j, a_side = meta[r.ticket]
+            # +1 = the A-side config won (A owns Black iff a_is_black)
+            a_score = r.winner * (1.0 if r.a_is_black else -1.0)
+            i_score = a_score if a_side == i else -a_score
+            out[(i, j)][0 if i_score > 0 else 1 if i_score < 0 else 2] += 1
+        return {p: tuple(v) for p, v in out.items()}
+
+    def _round_robin_paired(self) -> Dict[Tuple[int, int],
+                                          Tuple[int, int, int]]:
+        """Legacy fallback: one pool per pairing (static-shape configs)."""
+        P = len(self.configs)
+        out = {}
+        for n, (i, j) in enumerate(itertools.combinations(range(P), 2)):
+            out[(i, j)] = self._play_pair(i, j, seed=self.seed + 1000 * n)
+        return out
+
+    def _play_pair(self, i: int, j: int,
+                   seed: int) -> Tuple[int, int, int]:
         g = self.games_per_pair
         player_i = MCTS(self.engine, self.configs[i], **self.mcts_kw)
         player_j = MCTS(self.engine, self.configs[j], **self.mcts_kw)
@@ -133,6 +281,4 @@ class Tournament:
         i_wins = sum(1 for v in i_res if v > 0)
         j_wins = sum(1 for v in i_res if v < 0)
         draws = sum(1 for v in i_res if v == 0)
-        return PairResult(i=i, j=j, i_wins=i_wins, j_wins=j_wins,
-                          draws=draws,
-                          rate=stats.win_rate(i_wins, j_wins, draws))
+        return (i_wins, j_wins, draws)

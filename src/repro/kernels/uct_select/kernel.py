@@ -9,9 +9,12 @@ over the 8x128 VREG lanes.
 
 Tiling: one grid step owns a ``(ROWS, A_pad)`` tile of each [B, A] statistic
 (A padded to a lane multiple of 128 by ``ops.py``).  Per-row scalars
-(parent_n, player) ride along as ``(ROWS, 1)`` tiles.  For the 9x9 Go action
-space (A=82 -> 128) and ROWS=8 that is 6 tiles x 4 KiB — tiny, letting many
-node-batches pipeline.
+(parent_n, player, and the *traced* search knobs c_uct / vl_weight) ride
+along as ``(ROWS, 1)`` tiles and broadcast over the action lanes — so one
+compiled kernel scores edges for any mix of per-row search configurations
+(the tournament-multiplexing contract; only ``use_puct`` stays a Python
+constant).  For the 9x9 Go action space (A=82 -> 128) and ROWS=8 that is
+8 tiles x <= 4 KiB — tiny, letting many node-batches pipeline.
 """
 from __future__ import annotations
 
@@ -28,8 +31,8 @@ LANE = 128
 
 
 def _uct_kernel(visit_ref, value_ref, vloss_ref, prior_ref, legal_ref,
-                hasc_ref, parent_ref, player_ref, out_ref, *,
-                c_uct: float, vl_weight: float, use_puct: bool):
+                hasc_ref, parent_ref, player_ref, cuct_ref, vlw_ref,
+                out_ref, *, use_puct: bool):
     n = visit_ref[...]
     v = value_ref[...]
     vl = vloss_ref[...]
@@ -38,6 +41,8 @@ def _uct_kernel(visit_ref, value_ref, vloss_ref, prior_ref, legal_ref,
     has_child = hasc_ref[...]
     parent_n = parent_ref[...]          # (ROWS, 1)
     player = player_ref[...]            # (ROWS, 1)
+    c_uct = cuct_ref[...]               # (ROWS, 1) traced per-row knob
+    vl_weight = vlw_ref[...]            # (ROWS, 1) traced per-row knob
 
     n_eff = jnp.maximum(n + vl, 1.0)
     q = (player * v - vl * vl_weight) / n_eff
@@ -53,21 +58,23 @@ def _uct_kernel(visit_ref, value_ref, vloss_ref, prior_ref, legal_ref,
 
 
 def uct_scores_pallas(child_visit, child_value, child_vloss, prior, legal,
-                      has_child, parent_n, player, *, c_uct: float,
-                      vl_weight: float, use_puct: bool,
-                      interpret: bool = False):
-    """Inputs [B, A_pad] (f32; masks as f32 0/1), parent_n/player [B, 1]."""
+                      has_child, parent_n, player, c_uct, vl_weight, *,
+                      use_puct: bool, interpret: bool = False):
+    """Inputs [B, A_pad] (f32; masks as f32 0/1); per-row [B, 1] columns.
+
+    ``parent_n`` / ``player`` / ``c_uct`` / ``vl_weight`` are the per-row
+    columns — the last two are traced search knobs, not constants.
+    """
     b, a = child_visit.shape
     assert b % ROWS == 0 and a % LANE == 0, (b, a)
     tile = pl.BlockSpec((ROWS, a), lambda i: (i, 0))
     col = pl.BlockSpec((ROWS, 1), lambda i: (i, 0))
     return pl.pallas_call(
-        functools.partial(_uct_kernel, c_uct=c_uct, vl_weight=vl_weight,
-                          use_puct=use_puct),
+        functools.partial(_uct_kernel, use_puct=use_puct),
         out_shape=jax.ShapeDtypeStruct((b, a), jnp.float32),
         grid=(b // ROWS,),
-        in_specs=[tile, tile, tile, tile, tile, tile, col, col],
+        in_specs=[tile, tile, tile, tile, tile, tile, col, col, col, col],
         out_specs=tile,
         interpret=interpret,
     )(child_visit, child_value, child_vloss, prior, legal, has_child,
-      parent_n, player)
+      parent_n, player, c_uct, vl_weight)

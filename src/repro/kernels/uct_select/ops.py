@@ -3,6 +3,11 @@
 Pads the action axis to a 128-lane multiple and the batch axis to the row
 tile, calls the kernel, and slices back.  ``repro.core.mcts`` routes its
 edge scoring through here so the kernel and the search share one call site.
+
+``c_uct`` / ``vl_weight`` are **traced** operands (Python float or per-row
+``[B]`` array, broadcast to a ``[B, 1]`` column for the kernel) — never
+static arguments — so scoring N distinct search configurations compiles
+exactly once.  Only ``use_puct`` and ``interpret`` select a program.
 """
 from __future__ import annotations
 
@@ -12,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.uct_select.kernel import LANE, ROWS, uct_scores_pallas
-from repro.kernels.uct_select.ref import uct_scores_ref
+from repro.kernels.uct_select.ref import per_row, uct_scores_ref
 
 
 def _pad2(x, b_to, a_to):
@@ -21,13 +26,16 @@ def _pad2(x, b_to, a_to):
     return jnp.pad(x, ((0, pb), (0, pa)))
 
 
-@functools.partial(jax.jit, static_argnames=("c_uct", "vl_weight",
-                                             "use_puct", "interpret"))
+@functools.partial(jax.jit, static_argnames=("use_puct", "interpret"))
 def uct_scores(child_visit, child_value, child_vloss, prior, legal,
-               has_child, parent_n, player, *, c_uct: float = 0.9,
-               vl_weight: float = 1.0, use_puct: bool = False,
-               interpret: bool = False):
-    """Batched edge scores [B, A]; see ref.py for semantics."""
+               has_child, parent_n, player, *, c_uct=0.9, vl_weight=1.0,
+               use_puct: bool = False, interpret: bool = False):
+    """Batched edge scores [B, A]; see ref.py for semantics.
+
+    ``c_uct`` / ``vl_weight`` accept a scalar (one configuration for the
+    whole batch) or an ``[B]`` array (one per row); both are traced, so
+    changing their values never recompiles.
+    """
     use_pallas = interpret or jax.default_backend() == "tpu"
     legal = legal.astype(jnp.float32)
     has_child = has_child.astype(jnp.float32)
@@ -44,7 +52,8 @@ def uct_scores(child_visit, child_value, child_vloss, prior, legal,
                        has_child)]
     pn = jnp.pad(parent_n.astype(jnp.float32), (0, bp - b))[:, None]
     pidx = jnp.pad(player.astype(jnp.float32), (0, bp - b))[:, None]
-    out = uct_scores_pallas(*args2, pn, pidx, c_uct=c_uct,
-                            vl_weight=vl_weight, use_puct=use_puct,
+    cols = [jnp.pad(per_row(x, b)[:, 0], (0, bp - b))[:, None]
+            for x in (c_uct, vl_weight)]
+    out = uct_scores_pallas(*args2, pn, pidx, *cols, use_puct=use_puct,
                             interpret=interpret)
     return out[:b, :a]

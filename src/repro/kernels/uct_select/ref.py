@@ -4,6 +4,13 @@ This is the arithmetic every selection step of every lane performs at every
 tree level — the paper's hottest loop (FUEGO spends its selection time here;
 its low integer/scalar throughput on the Phi is one of the paper's findings).
 
+``c_uct`` and ``vl_weight`` are *traced* operands — a Python float or a
+per-row ``[B]`` array — never compile-time constants, so one compiled
+program scores edges for any mix of search configurations (the per-slot
+tournament multiplexing contract; see docs/ARCHITECTURE.md).  A scalar is
+broadcast over the batch, which performs bit-identical arithmetic to the
+historical static-constant path.
+
 Semantics (matches ``repro.core.mcts.MCTS._edge_scores`` exactly):
   q    = (player * value - vloss * vl_weight) / max(n + vloss, 1)
   uct  : u = c * sqrt(log(max(parent_n, 2)) / max(n + vloss, 1))
@@ -18,18 +25,29 @@ BIG = 1e9
 FPU = 10.0
 
 
+def per_row(x, b: int) -> jnp.ndarray:
+    """Broadcast a scalar-or-``[B]`` traced knob to a ``[B, 1]`` column."""
+    return jnp.broadcast_to(jnp.asarray(x, jnp.float32), (b,))[:, None]
+
+
 def uct_scores_ref(child_visit, child_value, child_vloss, prior, legal,
-                   has_child, parent_n, player, *, c_uct: float,
-                   vl_weight: float, use_puct: bool):
-    """All inputs [B, A] except parent_n, player [B]; returns scores [B, A]."""
+                   has_child, parent_n, player, *, c_uct, vl_weight,
+                   use_puct: bool):
+    """All inputs [B, A] except parent_n, player [B]; returns scores [B, A].
+
+    ``c_uct`` / ``vl_weight`` are traced: float or [B] (broadcast per row).
+    """
+    b = child_visit.shape[0]
+    c = per_row(c_uct, b)
+    vlw = per_row(vl_weight, b)
     n_eff = jnp.maximum(child_visit + child_vloss, 1.0)
-    q = (player[:, None] * child_value - child_vloss * vl_weight) / n_eff
+    q = (player[:, None] * child_value - child_vloss * vlw) / n_eff
     if use_puct:
         root_term = jnp.sqrt(parent_n)[:, None]
-        u = c_uct * prior * root_term / (1.0 + child_visit + child_vloss)
-        score = jnp.where(has_child, q + u, c_uct * prior * root_term)
+        u = c * prior * root_term / (1.0 + child_visit + child_vloss)
+        score = jnp.where(has_child, q + u, c * prior * root_term)
     else:
         pn = jnp.maximum(parent_n, 2.0)[:, None]
-        u = c_uct * jnp.sqrt(jnp.log(pn) / n_eff)
+        u = c * jnp.sqrt(jnp.log(pn) / n_eff)
         score = jnp.where(has_child, q + u, FPU + prior)
     return jnp.where(legal, score, -BIG)

@@ -44,6 +44,11 @@ def main() -> None:
     ap.add_argument("--prefix-moves", type=int, default=8,
                     help="random moves played before each queried position")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--c-uct", type=float, default=None,
+                    help="per-query UCT exploration constant (traced: "
+                         "any value reuses the compiled bucket)")
+    ap.add_argument("--virtual-loss", type=float, default=None,
+                    help="per-query virtual-loss weight (traced)")
     ap.add_argument("--shards", type=int, default=1,
                     help="shard the serving pool over this many devices")
     ap.add_argument("--placement", default="round_robin",
@@ -65,7 +70,9 @@ def main() -> None:
               for _ in range(args.queries)]
 
     t0 = time.time()
-    tickets = [svc.submit(b, to_play=tp) for b, tp in boards]
+    tickets = [svc.submit(b, to_play=tp, c_uct=args.c_uct,
+                          virtual_loss=args.virtual_loss)
+               for b, tp in boards]
     svc.flush()
     results = [svc.result(t) for t in tickets]
     dt = time.time() - t0

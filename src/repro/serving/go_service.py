@@ -5,14 +5,18 @@ fixed-bucket pattern: requests are admitted into a fixed-capacity
 SearchService slot pool so one compiled dispatch serves every query.  The
 static bucket axes are ``(board_size, komi, max_sims)`` — a new komi opens
 a new bucket (engine komi is baked into playout scoring), while the
-per-request ``sims`` knob is *traced* (masked search tail), so budgets
-from 1 to ``max_sims`` share one executable.
+per-request ``sims`` budget **and the per-request strength knobs**
+``c_uct`` / ``virtual_loss`` are *traced* (masked search tail; per-lane
+scalar broadcast), so budgets from 1 to ``max_sims`` and arbitrary UCT
+configurations share one executable — a caller can dial a query's
+exploration per request with zero recompilation.
 
-A query is a pure function of ``(board, to_play, sims, key)``: the
-dispatcher admits serve tickets only into cells searched by the bucket's
-single player, and the search consumes the request key directly, so
-results do not depend on slot placement or on what else shares the batch
-(tests/test_service.py pins this).
+A query is a pure function of
+``(board, to_play, sims, c_uct, virtual_loss, key)``: the dispatcher
+admits serve tickets only into cells searched by the bucket's single
+player, and the search consumes the request key directly, so results do
+not depend on slot placement or on what else shares the batch
+(tests/test_service.py and tests/test_multiplex.py pin this).
 
 Typical use::
 
@@ -97,6 +101,7 @@ class GoService:
 
     @property
     def host_syncs(self) -> int:
+        """Total blocking host<->device round-trips across all buckets."""
         return sum(b.host_syncs for b in self._buckets.values())
 
     def shard_occupancy(self, komi: Optional[float] = None) -> np.ndarray:
@@ -121,25 +126,32 @@ class GoService:
 
     def submit(self, board, to_play: int = BLACK,
                komi: Optional[float] = None, sims: int = 0,
-               key=None) -> int:
+               key=None, c_uct: Optional[float] = None,
+               virtual_loss: Optional[float] = None) -> int:
         """Queue one best-move query; returns a ticket for :meth:`result`.
 
-        ``sims`` caps the playout budget (0 / > max_sims both mean
-        ``max_sims``); ``key`` fixes the search RNG for reproducible
-        answers (default: drawn from the service chain).
+        Traced per-query knobs (no recompilation across values): ``sims``
+        caps the playout budget (0 / > max_sims both mean ``max_sims``);
+        ``c_uct`` / ``virtual_loss`` override the bucket's UCT constants
+        (``None`` keeps the bucket defaults, bit-identical to omitting
+        them).  ``komi`` is *static* — a new value opens a new bucket and
+        compiles.  ``key`` fixes the search RNG for reproducible answers
+        (default: drawn from the service chain).
         """
         komi = self.default_komi if komi is None else float(komi)
         svc = self._bucket(komi)
         if key is None:
             key = self._rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
         state = self._to_state(board, to_play, svc.engine)
-        inner = svc.submit_serve(state, key=key, sims=int(sims))
+        inner = svc.submit_serve(state, key=key, sims=int(sims),
+                                 c_uct=c_uct, virtual_loss=virtual_loss)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._tickets[ticket] = (komi, inner)
         return ticket
 
     def flush(self) -> None:
+        """Push every bucket's queued submissions to its device queues."""
         for svc in self._buckets.values():
             svc.flush()
 
@@ -190,9 +202,16 @@ class GoService:
 
     def best_move(self, board, to_play: int = BLACK,
                   komi: Optional[float] = None, sims: int = 0,
-                  key=None) -> MoveResult:
-        """Blocking single query: board in, move out."""
-        return self.result(self.submit(board, to_play, komi, sims, key))
+                  key=None, c_uct: Optional[float] = None,
+                  virtual_loss: Optional[float] = None) -> MoveResult:
+        """Blocking single query: board in, move out.
+
+        ``sims`` / ``c_uct`` / ``virtual_loss`` are the traced per-query
+        knobs of :meth:`submit` (they never recompile the bucket).
+        """
+        return self.result(self.submit(board, to_play, komi, sims, key,
+                                       c_uct=c_uct,
+                                       virtual_loss=virtual_loss))
 
     def best_move_batch(self, boards, to_play: int = BLACK,
                         komi: Optional[float] = None,

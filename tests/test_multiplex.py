@@ -1,0 +1,259 @@
+"""Heterogeneous multiplexing tests: per-slot traced (c_uct, virtual_loss).
+
+The PR 4 tentpole contract, three invariants:
+
+* **bit-identity** — a pool whose requests carry explicit traced params
+  equal to the players' static configs plays bit-for-bit the games (and
+  answers bit-for-bit the queries) of the static PR 3 path, and a mixed
+  pool's serve answers equal each config's dedicated single-config pool;
+* **no retrace** — >= 3 distinct (c_uct, virtual_loss, sims) configs share
+  exactly one compiled dispatch, under both ``mesh=None`` and a device
+  mesh (the 8-fake-device variant lives in tests/test_sharded_service.py);
+* **tournament multiplexing** — the all-play-all scheduler runs every
+  pairing through one pool/one trace and derives a consistent cross
+  table (win matrix, points, Elo).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS, SearchParams
+from repro.core.service import SearchService
+from repro.core.tournament import Tournament, elo_ratings, trace_compatible
+
+CFG = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+CAP = 12
+# three trace-compatible configurations (only traced fields differ)
+CONFIGS = (CFG,
+           dataclasses.replace(CFG, c_uct=1.7, virtual_loss=2.5),
+           dataclasses.replace(CFG, c_uct=0.4, virtual_loss=0.0,
+                               sims_per_move=4))
+
+
+@pytest.fixture(scope="module")
+def base_player(engine5):
+    return MCTS(engine5, CFG)
+
+
+@pytest.fixture(scope="module")
+def mid_state(engine5):
+    st = engine5.init_state()
+    for mv in (3, 7, 12, 16):
+        st = engine5.jit_play(st, jnp.int32(mv))
+    return st
+
+
+def _serve_all(svc, mid_state, queries):
+    """Submit (key, sims, c_uct, vl) queries; return results by ticket."""
+    tickets = [svc.submit_serve(mid_state, key=k, sims=s, c_uct=c,
+                                virtual_loss=v)
+               for (k, s, c, v) in queries]
+    recs = {r.ticket: r for r in svc.drain()}
+    return [recs[t] for t in tickets]
+
+
+class TestSearchBatchParams:
+    def test_params_equal_to_config_bit_identical(self, engine5,
+                                                  base_player):
+        """Traced params carrying the config constants reproduce the
+        static path exactly (the homogeneous acceptance invariant)."""
+        roots = jax.tree.map(lambda x: x[None], engine5.init_state())
+        key = jax.random.PRNGKey(4)[None]
+        base = base_player.search_batch(roots, key)
+        got = base_player.search_batch(
+            roots, key,
+            params=SearchParams(jnp.asarray([CFG.c_uct]),
+                                jnp.asarray([CFG.virtual_loss])))
+        assert int(got.action[0]) == int(base.action[0])
+        np.testing.assert_array_equal(np.asarray(got.root_visits),
+                                      np.asarray(base.root_visits))
+        np.testing.assert_array_equal(np.asarray(got.tree.visit),
+                                      np.asarray(base.tree.visit))
+
+    def test_params_match_statically_configured_player(self, engine5,
+                                                       base_player):
+        """search_batch(params=(c, v)) == a player whose MCTSConfig bakes
+        (c, v) statically — for every heterogeneous config."""
+        roots = jax.tree.map(lambda x: x[None], engine5.init_state())
+        key = jax.random.PRNGKey(7)[None]
+        for cfg in CONFIGS[1:]:
+            want = MCTS(engine5, dataclasses.replace(
+                cfg, sims_per_move=CFG.sims_per_move)).search_batch(
+                    roots, key)
+            got = base_player.search_batch(
+                roots, key,
+                params=SearchParams(jnp.asarray([cfg.c_uct]),
+                                    jnp.asarray([cfg.virtual_loss])))
+            np.testing.assert_array_equal(np.asarray(got.root_visits),
+                                          np.asarray(want.root_visits))
+
+    def test_params_are_traced_not_static(self, engine5, base_player):
+        """Changing (c_uct, vl_weight) values must not recompile."""
+        fn = jax.jit(base_player.search_batch)
+        roots = jax.tree.map(lambda x: x[None], engine5.init_state())
+        key = jax.random.PRNGKey(0)[None]
+        for cfg in CONFIGS:
+            fn(roots, key, jnp.asarray([cfg.sims_per_move], jnp.int32),
+               SearchParams(jnp.asarray([cfg.c_uct]),
+                            jnp.asarray([cfg.virtual_loss])))
+        assert fn._cache_size() == 1
+
+
+class TestMixedConfigPool:
+    def test_explicit_params_bit_identical_to_static_players(self, engine5):
+        """A pool of base players + per-game traced (c_uct, vl) plays
+        bit-for-bit the games of a pool whose players bake the same
+        values statically (the PR 3 path) — including an asymmetric
+        A-side/B-side pairing.  (Budgets stay at the shared loop bound:
+        the traced ``sims`` contract is full-budget bit-identity plus
+        masked truncation, PR 2.)"""
+        cfg_a = dataclasses.replace(CFG, c_uct=1.7, virtual_loss=2.5)
+        cfg_b = dataclasses.replace(CFG, c_uct=0.4, virtual_loss=0.5)
+        static = SearchService(engine5, MCTS(engine5, cfg_a),
+                               MCTS(engine5, cfg_b), slots=2, max_moves=CAP)
+        shared = MCTS(engine5, CFG)
+        traced = SearchService(engine5, shared, shared, slots=2,
+                               max_moves=CAP)
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(5), 4))
+
+        def run(svc, **kw):
+            svc.reset(seed=0, colour_cap=2)
+            tickets = [svc.submit_game(key=keys[i], **kw) for i in range(4)]
+            recs = {r.ticket: r for r in svc.drain()}
+            return [recs[t] for t in tickets]
+
+        want = run(static)
+        got = run(traced,
+                  c_uct=(cfg_a.c_uct, cfg_b.c_uct),
+                  virtual_loss=(cfg_a.virtual_loss, cfg_b.virtual_loss))
+        for w, g in zip(want, got):
+            assert w[:7] == g[:7]           # every scalar result field
+            np.testing.assert_array_equal(w.root_visits, g.root_visits)
+
+    def test_mixed_serve_matches_single_config_pools(self, engine5,
+                                                     base_player,
+                                                     mid_state):
+        """Each config's answers from one mixed pool equal a dedicated
+        pool statically configured for it, interleaved arbitrarily."""
+        mixed = SearchService(engine5, base_player, base_player, slots=4,
+                              max_moves=CAP)
+        mixed.reset(seed=0)
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(11),
+                                           len(CONFIGS)))
+        queries = [(keys[n], cfg.sims_per_move, cfg.c_uct, cfg.virtual_loss)
+                   for n, cfg in enumerate(CONFIGS)]
+        got = _serve_all(mixed, mid_state, queries)
+        for n, cfg in enumerate(CONFIGS):
+            single_cfg = dataclasses.replace(
+                cfg, sims_per_move=CFG.sims_per_move)   # same static shape
+            player = MCTS(engine5, single_cfg)
+            single = SearchService(engine5, player, player, slots=4,
+                                   max_moves=CAP)
+            single.reset(seed=0)
+            want = _serve_all(single, mid_state,
+                              [(keys[n], cfg.sims_per_move, None, None)])[0]
+            assert got[n].action == want.action
+            np.testing.assert_array_equal(got[n].root_visits,
+                                          want.root_visits)
+
+    def test_one_trace_across_three_configs(self, engine5, base_player,
+                                            mid_state):
+        """>= 3 distinct (c_uct, virtual_loss) pairs, zero retraces of the
+        dispatch or the push paths (mesh=None; the sharded twin lives in
+        tests/test_sharded_service.py)."""
+        svc = SearchService(engine5, base_player, base_player, slots=4,
+                            max_moves=CAP)
+        for seed, cfg in enumerate(CONFIGS):
+            svc.reset(seed=seed)
+            svc.submit_game(sims=cfg.sims_per_move, c_uct=cfg.c_uct,
+                            virtual_loss=cfg.virtual_loss)
+            svc.submit_serve(mid_state, c_uct=cfg.c_uct,
+                             virtual_loss=cfg.virtual_loss)
+            assert len(svc.drain()) == 2
+        assert svc._dispatch._cache_size() == 1
+        assert svc._push_games._cache_size() == 1
+        assert svc._push_serve._cache_size() == 1
+
+
+class TestMultiplexedTournament:
+    def test_all_play_all_one_pool_one_trace(self, engine5):
+        t = Tournament(engine5, CONFIGS, names=("base", "hot", "cold"),
+                       games_per_pair=4, max_moves=CAP, seed=3)
+        assert t.multiplex
+        res = t.round_robin()
+        assert res.games == 4 * 3
+        # one pool, one compiled dispatch for all three pairings
+        assert t.service is not None
+        assert t.service._dispatch._cache_size() == 1
+        # cross-table consistency
+        assert res.points.sum() == pytest.approx(res.games)
+        np.testing.assert_allclose(
+            res.win_matrix.sum(axis=1), res.points)
+        assert res.elo.sum() == pytest.approx(0.0, abs=1e-6)
+        assert res.elo.shape == (3,)
+        for (i, j), pr in res.pairs.items():
+            assert pr.i_wins + pr.j_wins + pr.draws == 4
+            assert res.win_matrix[i, j] == pr.i_wins + 0.5 * pr.draws
+        assert "elo" in res.table()
+
+    def test_multiplex_validation_and_fallback(self, engine5):
+        from repro.core.selfplay import double_resources
+        incompatible = [CFG, double_resources(CFG)]    # lanes differ
+        assert not trace_compatible(list(incompatible))
+        with pytest.raises(ValueError):
+            Tournament(engine5, incompatible, multiplex=True)
+        t = Tournament(engine5, incompatible)
+        assert not t.multiplex                         # auto-fallback
+        assert trace_compatible(list(CONFIGS))
+
+    def test_elo_orders_a_dominant_player(self):
+        score = np.array([[0.0, 3.5, 4.0],
+                          [0.5, 0.0, 2.0],
+                          [0.0, 2.0, 0.0]])
+        games = np.array([[0, 4, 4], [4, 0, 4], [4, 4, 0]], float)
+        elo = elo_ratings(score, games)
+        assert elo[0] > elo[1] > elo[2]
+        assert elo.sum() == pytest.approx(0.0, abs=1e-9)
+
+
+class TestGoServiceStrengthKnob:
+    @pytest.fixture(scope="class")
+    def go_service(self):
+        from repro.serving.go_service import GoService
+        return GoService(board_size=5, komi=0.5, max_sims=8, lanes=2,
+                         slots=4, seed=0)
+
+    def test_per_query_knob_matches_static_bucket(self, go_service,
+                                                  engine5):
+        """A query with c_uct/virtual_loss overrides equals the search of
+        a player statically configured with those values, and the default
+        (None) stays bit-identical to omitting the knob."""
+        board = np.zeros(25, np.int8)
+        board[12] = 1
+        key = np.asarray(jax.random.PRNGKey(8))
+        plain = go_service.best_move(board, to_play=-1, key=key)
+        dflt = go_service.best_move(board, to_play=-1, key=key,
+                                    c_uct=None, virtual_loss=None)
+        assert plain.action == dflt.action
+        np.testing.assert_array_equal(plain.root_visits, dflt.root_visits)
+
+        hot = go_service.best_move(board, to_play=-1, key=key, c_uct=2.5,
+                                   virtual_loss=0.5)
+        bucket = go_service._buckets[0.5]
+        cfg = dataclasses.replace(bucket.player_a.cfg, c_uct=2.5,
+                                  virtual_loss=0.5)
+        want = MCTS(bucket.engine, cfg).search_batch(
+            jax.tree.map(lambda x: x[None],
+                         bucket.engine.init_state()._replace(
+                             board=jnp.asarray(board),
+                             to_play=jnp.int8(-1))),
+            jnp.asarray(key)[None])
+        assert hot.action == int(want.action[0])
+        np.testing.assert_array_equal(hot.root_visits,
+                                      np.asarray(want.root_visits[0]))
+        # the overrides reused the bucket's compiled dispatch
+        assert bucket._dispatch._cache_size() == 1

@@ -94,9 +94,9 @@ class TestSingleSearchPerStep:
         def counting(player, tag):
             orig = player.search_batch
 
-            def wrapped(roots, rngs, sims=None):
+            def wrapped(roots, rngs, sims=None, params=None):
                 searched.append((tag, int(rngs.shape[0])))
-                return orig(roots, rngs, sims)
+                return orig(roots, rngs, sims, params)
             player.search_batch = wrapped
 
         counting(a2, "A")

@@ -64,6 +64,18 @@ class TestPlacementPolicies:
         assert pol.choose(placement.CLS_SERVE, 4) == 0
         assert pol.choose(placement.CLS_GAME, 4) == 1
 
+    def test_config_affine_sticks_then_falls_back(self):
+        pol = placement.PlacementPolicy("config_affine", 3)
+        k1, k2 = ("cfgA",), ("cfgB",)
+        # first sighting: least loaded; repeats stick to the same shard
+        assert pol.choose(placement.CLS_GAME, 2, config_key=k1) == 0
+        assert pol.choose(placement.CLS_GAME, 2, config_key=k1) == 0
+        # a different config key lands on the least-loaded shard
+        assert pol.choose(placement.CLS_GAME, 2, config_key=k2) == 1
+        # k1's shard is full -> displaced to least-loaded, new affinity
+        assert pol.choose(placement.CLS_GAME, 2, config_key=k1) == 2
+        assert pol.choose(placement.CLS_GAME, 2, config_key=k1) == 2
+
     def test_unknown_policy_raises(self):
         with pytest.raises(ValueError):
             placement.place("spiral", 0, np.zeros(2, np.int64), 4)
@@ -118,6 +130,24 @@ class TestOneShardOracle:
                                           rs[t].root_visits)
         np.testing.assert_array_equal(plain.shard_occupancy(),
                                       sharded.shard_occupancy())
+
+    def test_one_trace_across_configs_one_shard_mesh(self, engine5,
+                                                     players, mid_state):
+        """>= 3 distinct traced (c_uct, virtual_loss) pairs share one
+        compiled sharded dispatch (the mesh twin of the mesh=None
+        assertion in tests/test_multiplex.py)."""
+        a, b = players
+        svc = SearchService(engine5, a, b, slots=2, max_moves=CAP,
+                            mesh=make_service_mesh(1))
+        for seed, (cu, vl) in enumerate(((0.9, 1.0), (1.7, 2.5),
+                                         (0.4, 0.0))):
+            svc.reset(seed=seed)
+            svc.submit_game(c_uct=cu, virtual_loss=vl)
+            svc.submit_serve(mid_state, c_uct=cu, virtual_loss=vl)
+            assert len(svc.drain()) == 2
+        assert svc._dispatch_mesh._cache_size() == 1
+        assert svc._push_games_mesh._cache_size() == 1
+        assert svc._push_serve_mesh._cache_size() == 1
 
     def test_mesh_validation(self, engine5, players):
         a, b = players
@@ -201,6 +231,52 @@ class TestMultiDevice:
         assert occ.shape == (4,)
         assert occ[0] > 0
         assert occ[2] == 0 and occ[3] == 0      # beyond the rebalance hop
+
+    def test_one_trace_across_configs_8_devices(self, engine5, players,
+                                                mid_state):
+        """The acceptance assertion on real (faked) multi-device shards:
+        >= 3 distinct (c_uct, virtual_loss) configs, mixed game + serve
+        lanes, exactly one compiled dispatch — and config_affine
+        placement routes them without changing any serve answer."""
+        a, b = players
+        svc = SearchService(engine5, a, b, slots=8, max_moves=CAP,
+                            mesh=make_service_mesh(4),
+                            placement="config_affine")
+        pairs = ((0.9, 1.0), (1.7, 2.5), (0.4, 0.0))
+        svc.reset(seed=0, colour_cap=2)
+        sk = np.asarray(jax.random.split(jax.random.PRNGKey(13), 3))
+        game_t = [svc.submit_game(c_uct=cu, virtual_loss=vl)
+                  for cu, vl in pairs]
+        serve_t = [svc.submit_serve(mid_state, key=sk[n], c_uct=cu,
+                                    virtual_loss=vl)
+                   for n, (cu, vl) in enumerate(pairs)]
+        recs = {r.ticket: r for r in svc.drain()}
+        assert sorted(recs) == sorted(game_t + serve_t)
+        assert svc._dispatch_mesh._cache_size() == 1
+        # serve answers equal the unsharded mixed pool's (placement- and
+        # shard-independence of the traced-param serve contract)
+        plain = SearchService(engine5, a, b, slots=2, max_moves=CAP)
+        plain.reset(seed=0)
+        for n, (cu, vl) in enumerate(pairs):
+            t = plain.submit_serve(mid_state, key=sk[n], c_uct=cu,
+                                   virtual_loss=vl)
+            want = {r.ticket: r for r in plain.drain()}[t]
+            assert recs[serve_t[n]].action == want.action
+            np.testing.assert_array_equal(recs[serve_t[n]].root_visits,
+                                          want.root_visits)
+
+    def test_multiplexed_tournament_over_mesh(self, engine5):
+        """The all-play-all scheduler shards its single pool."""
+        import dataclasses
+        from repro.core.tournament import Tournament
+        cfgs = [CFG, dataclasses.replace(CFG, c_uct=1.6),
+                dataclasses.replace(CFG, virtual_loss=2.0)]
+        t = Tournament(engine5, cfgs, games_per_pair=2, slots=8,
+                       max_moves=10, seed=2, mesh=make_service_mesh(4))
+        res = t.round_robin()
+        assert t.multiplex
+        assert res.games == 6
+        assert t.service._dispatch_mesh._cache_size() == 1
 
     def test_rebalance_spreads_fill_first_backlog(self, engine5, players,
                                                   mid_state):
