@@ -5,17 +5,25 @@ path (host-queue refill, one host sync per step) on the 5x5 reference
 config, a mixed workload (arena games + serve queries sharing one slot
 pool), a ``shards x placement`` sweep of the mesh-sharded pool (the same
 slot count split over 1..N devices; ``--devices`` fakes them on CPU),
-and — schema ``bench_service/v3`` — a **mixed-config sweep**: N distinct
-``(c_uct, virtual_loss)`` tournament configurations multiplexed through
-one pool as per-slot traced params, pinned to exactly one compiled
-dispatch (the compile count is asserted) and compared against the PR 2
-baseline of one statically-configured pool per pairing.  The device-side
-refill moves admission and result collection into the jitted dispatch,
-so the host only flushes submissions and polls the result ring once per
+a **mixed-config sweep** (v3): N distinct ``(c_uct, virtual_loss)``
+tournament configurations multiplexed through one pool as per-slot
+traced params, pinned to exactly one compiled dispatch (the compile
+count is asserted) and compared against the PR 2 baseline of one
+statically-configured pool per pairing, and — schema
+``bench_service/v4`` — an **overlap cell**: the streaming dispatch
+pipeline (core/streaming.py) against the synchronous path at supersteps
+1/2/4, reporting host-blocked time per move, realised in-flight depth,
+and sims/sec (the Phi offload studies' host<->device transfer-overlap
+lever made machine-checkable: a deeper pipeline must spend strictly
+less time blocked on the device per move).  The device-side refill
+moves admission and result collection into the jitted dispatch, so the
+host only flushes submissions and polls the result ring once per
 ``superstep`` moves — ``host_syncs_per_move`` makes that reduction
 machine-checkable (the paper's scheduling thesis: the loop shape, not
 the lane count, sets throughput; the sweeps are its slot-placement and
-config-residency analogues).
+config-residency analogues).  The sharded sweep's ``fill_first`` knee
+row now runs under both the multi-hop (doubling) and the PR 3 one-hop
+rebalance so the O(log shards) drain shows up as a measured delta.
 
 Both refill paths are warmed (compile excluded) and play bit-identical
 games; "useful" sims are the mover's, as in benchmarks/bench_arena.py.
@@ -68,7 +76,7 @@ KOMI = 0.5
 MOVE_CAP = 30
 MAX_NODES = 128
 SERVE_SIMS = 16
-SCHEMA = "bench_service/v3"
+SCHEMA = "bench_service/v4"
 
 
 def _useful_sims(total_moves: float, sims_a: int, sims_b: int) -> float:
@@ -188,6 +196,143 @@ def time_sharded_cell(svc: SearchService, games: int, seed: int,
     }
 
 
+def time_overlap_cell(svc, boards, games: int, seed: int, depth: int,
+                      repeats: int = 5) -> dict:
+    """One (superstep, pipeline_depth) cell of the overlap sweep.
+
+    The workload *streams*: games beyond the first slot-full and every
+    serve query are submitted from inside the loop as earlier requests
+    complete — so each superstep the host packs fresh request chunks,
+    flushes them, and unpacks results.  That host-side I/O is exactly
+    what ``pipeline_depth > 1`` overlaps with device compute (at depth 1
+    it all happens while the device idles between supersteps).
+
+    ``pipeline_depth`` is a host-side knob — the same service (and the
+    same compiled dispatch) runs every depth; only when the host reads
+    the device changes.  Wall clock and host-blocked time are each
+    min-of-``repeats`` against scheduler noise.
+    """
+    from repro.core.streaming import DispatchPipeline
+
+    svc.pipeline_depth = depth
+    queries = len(boards)
+
+    def run(s):
+        svc.reset(seed=s, colour_cap=2 ** 30,
+                  game_capacity=max(2, games),
+                  serve_capacity=max(2, queries))
+        pipe = DispatchPipeline(svc)
+        n_games = 0
+        while n_games < min(games, svc.slots):   # seed the pool
+            svc.submit_game()
+            n_games += 1
+        n_serve = 0
+        recs = []
+        while len(recs) < games + queries:
+            # trickle the remaining workload in: the host-write half of
+            # the double buffer, overlapped by the in-flight supersteps
+            for _ in range(2):
+                if n_serve < queries:
+                    svc.submit_serve(boards[n_serve], sims=SERVE_SIMS)
+                    n_serve += 1
+            pipe.pump()
+            done = pipe.reconcile(block=True)
+            for r in done:
+                if r.lane != LANE_SERVE and n_games < games:
+                    svc.submit_game()            # refill the finished slot
+                    n_games += 1
+            recs.extend(done)
+        while pipe.in_flight_supersteps:         # drain the window so the
+            pipe.reconcile(block=True)           # next repeat starts clean
+        return recs, pipe.stats()
+
+    run(seed + 1000)                             # warm / compile
+    wall = blocked = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        recs, stats = run(seed)
+        wall = min(wall, time.perf_counter() - t0)
+        blocked = min(blocked, svc.host_blocked_s)
+    game_moves = float(sum(r.moves for r in recs if r.lane != LANE_SERVE))
+    n_serve = sum(1 for r in recs if r.lane == LANE_SERVE)
+    moves = game_moves + n_serve
+    sims = (_useful_sims(game_moves, svc.player_a.cfg.sims_per_move,
+                         svc.player_b.cfg.sims_per_move)
+            + n_serve * SERVE_SIMS)
+    return {
+        "superstep": svc.superstep, "pipeline_depth": depth,
+        "slots": svc.slots, "games": games, "serve_queries": n_serve,
+        "wall_s": wall, "moves": moves, "sims": sims,
+        "sims_per_sec": sims / wall,
+        "host_blocked_s": blocked,
+        "host_blocked_per_move": blocked / moves,
+        "host_syncs_per_move": svc.host_syncs / moves,
+        "in_flight_depth": stats["max_in_flight"],
+        "steps_issued": stats["steps_issued"],
+    }
+
+
+def run_overlap(games: int, queries: int, seed: int,
+                depths=(1, 4)) -> dict:
+    """The v4 overlap cell: streaming pipeline vs synchronous dispatch.
+
+    A mixed workload (the reference 2n-vs-n games plus serve queries, so
+    every superstep produces results for the host to unpack) drains at
+    supersteps 1/2/4 under each pipeline depth.  ``pipeline_depth``
+    never retraces (asserted); the pipelined rows must spend strictly
+    less host-blocked time per move than the synchronous ones — the
+    overlap is exactly the host-side packing/unpacking/placement work
+    that now runs while the device computes.
+    """
+    engine = GoEngine(BOARD, komi=KOMI)
+    base = MCTSConfig(board_size=BOARD, lanes=2, sims_per_move=16,
+                      max_nodes=MAX_NODES)
+    cfg_a, cfg_b = double_resources(base), base
+    player_a, player_b = MCTS(engine, cfg_a), MCTS(engine, cfg_b)
+
+    rng = np.random.default_rng(seed)
+    boards = []
+    for _ in range(queries):
+        st = engine.init_state()
+        for _ in range(4):
+            legal = np.asarray(engine.jit_legal(st))[: engine.n2]
+            st = engine.jit_play(
+                st, jax.numpy.int32(rng.choice(np.where(legal)[0])))
+        boards.append(st)
+
+    # fewer slots than games: the tail of the workload streams in as
+    # slots free up, so every superstep has host packing to overlap
+    slots = max(2, 2 * (games // 3))
+    rows, summary = [], {}
+    for superstep in (1, 2, 4):
+        svc = SearchService(engine, player_a, player_b, slots=slots,
+                            max_moves=MOVE_CAP, superstep=superstep)
+        cells = {d: time_overlap_cell(svc, boards, games, seed, d)
+                 for d in depths}
+        if svc._dispatch._cache_size() != 1:
+            raise RuntimeError(
+                f"pipeline_depth retraced the dispatch "
+                f"({svc._dispatch._cache_size()} compiles) — it must be "
+                "a host-side knob")
+        rows.extend(cells[d] for d in depths)
+        deep = depths[-1]
+        summary[f"superstep{superstep}"] = {
+            "host_blocked_per_move_sync":
+                cells[1]["host_blocked_per_move"],
+            "host_blocked_per_move_pipelined":
+                cells[deep]["host_blocked_per_move"],
+            "host_blocked_reduction":
+                cells[1]["host_blocked_per_move"]
+                / max(cells[deep]["host_blocked_per_move"], 1e-12),
+            "overlap_win": bool(cells[deep]["host_blocked_per_move"]
+                                < cells[1]["host_blocked_per_move"]),
+            "speedup_vs_sync": (cells[deep]["sims_per_sec"]
+                                / cells[1]["sims_per_sec"]),
+        }
+    return {"games": games, "queries": queries, "serve_sims": SERVE_SIMS,
+            "depths": list(depths), "rows": rows, "summary": summary}
+
+
 def run_sharded_sweep(games: int, seed: int, devices: int) -> dict:
     """shards x placement over a fixed total slot count (weak shards,
     constant work): splitting the same pool over more devices isolates
@@ -216,7 +361,19 @@ def run_sharded_sweep(games: int, seed: int, devices: int) -> dict:
             else ("round_robin",)
         for pol in pols:
             svc.placement = pol            # re-read by reset(); no retrace
-            rows.append(time_sharded_cell(svc, games, seed))
+            row = time_sharded_cell(svc, games, seed)
+            row["rebalance_hops"] = "multi" if shards > 1 else None
+            rows.append(row)
+        if shards == shard_counts[-1] and shards > 1:
+            # the PR 3 one-hop ring on the knee policy: the multi-hop
+            # schedule's O(log shards) backlog drain, measured
+            single = SearchService(engine, player_a, player_b, slots,
+                                   max_moves=MOVE_CAP, mesh=mesh,
+                                   multihop=False,
+                                   placement="fill_first")
+            row = time_sharded_cell(single, games, seed)
+            row["rebalance_hops"] = "single"
+            rows.append(row)
     base_rate = rows[0]["sims_per_sec"]
     for row in rows:
         row["speedup_vs_1shard"] = row["sims_per_sec"] / base_rate
@@ -369,11 +526,20 @@ def run_mixed(games: int, queries: int, seed: int) -> dict:
 
 
 def _payload(ref: dict, mixed: dict, sharded: dict,
-             multi: dict) -> dict:
+             multi: dict, overlap: dict) -> dict:
     return {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
             "move_cap": MOVE_CAP, "max_nodes": MAX_NODES,
             "reference": ref, "mixed": mixed, "sharded": sharded,
-            "multi_config": multi}
+            "multi_config": multi, "overlap": overlap}
+
+
+def _overlap_csv(overlap: dict) -> None:
+    s2 = overlap["summary"]["superstep2"]
+    csv_row("service_overlap_pipeline",
+            s2["host_blocked_per_move_pipelined"],
+            f"blocked_cut={s2['host_blocked_reduction']:.2f};"
+            f"win={int(s2['overlap_win'])};"
+            f"speedup={s2['speedup_vs_sync']:.2f}")
 
 
 def run() -> None:
@@ -391,9 +557,11 @@ def run() -> None:
             f"configs={multi['configs']};compiles=1;"
             f"setup_cut={multi['setup_reduction']:.1f};"
             f"speedup={multi['speedup_vs_per_pair_pools']:.2f}")
+    overlap = run_overlap(games=8, queries=16, seed=0)
+    _overlap_csv(overlap)
     with open("BENCH_service.json", "w") as f:
-        json.dump(_payload(ref, mixed, sharded, multi), f, indent=2,
-                  sort_keys=True)
+        json.dump(_payload(ref, mixed, sharded, multi, overlap), f,
+                  indent=2, sort_keys=True)
 
 
 def main() -> None:
@@ -405,6 +573,10 @@ def main() -> None:
     ap.add_argument("--devices", type=int, default=1,
                     help="fake this many CPU devices for the sharded sweep "
                          "(must be the first jax initialisation)")
+    ap.add_argument("--overlap-queries", type=int, default=16,
+                    help="serve queries mixed into the overlap cell "
+                         "(host-side result unpacking is the overlapped "
+                         "work)")
     args = ap.parse_args()
     devices = min(args.devices, jax.device_count()) if args.devices > 1 \
         else jax.device_count()
@@ -429,8 +601,10 @@ def main() -> None:
     sharded = run_sharded_sweep(args.games, args.seed, devices)
     for row in sharded["sweep"]:
         occ = " ".join(f"{o:.2f}" for o in row["shard_occupancy"])
+        hops = f", {row['rebalance_hops']}-hop" if row["rebalance_hops"] \
+            else ""
         print(f"sharded {row['shards']}x{row['slots'] // row['shards']} "
-              f"slots ({row['placement'] or 'single'}): "
+              f"slots ({row['placement'] or 'single'}{hops}): "
               f"{row['sims_per_sec']:.0f} sims/s "
               f"({row['speedup_vs_1shard']:.2f}x vs 1 shard)  occ [{occ}]")
     csv_row("service_sharded_sweep", sharded["sweep"][-1]["wall_s"],
@@ -450,9 +624,23 @@ def main() -> None:
             f"setup_cut={multi['setup_reduction']:.1f};"
             f"speedup={multi['speedup_vs_per_pair_pools']:.2f}")
 
+    overlap = run_overlap(args.games, args.overlap_queries, args.seed)
+    for row in overlap["rows"]:
+        print(f"overlap superstep {row['superstep']} depth "
+              f"{row['pipeline_depth']}: "
+              f"{row['host_blocked_per_move'] * 1e3:.2f} ms blocked/move, "
+              f"{row['sims_per_sec']:.0f} sims/s "
+              f"(in-flight {row['in_flight_depth']})")
+    for name, s in overlap["summary"].items():
+        print(f"overlap {name}: blocked/move cut "
+              f"{s['host_blocked_reduction']:.2f}x "
+              f"({'win' if s['overlap_win'] else 'NO WIN'}), "
+              f"{s['speedup_vs_sync']:.2f}x sims/s vs sync")
+    _overlap_csv(overlap)
+
     with open(args.out, "w") as f:
-        json.dump(_payload(ref, mixed, sharded, multi), f, indent=2,
-                  sort_keys=True)
+        json.dump(_payload(ref, mixed, sharded, multi, overlap), f,
+                  indent=2, sort_keys=True)
     print(f"wrote {args.out}")
 
 

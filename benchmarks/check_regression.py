@@ -22,11 +22,19 @@ import argparse
 import json
 import sys
 
+def _overlap_row(d: dict, superstep: int, depth: int) -> dict:
+    rows = [r for r in d["overlap"]["rows"]
+            if r["superstep"] == superstep and r["pipeline_depth"] == depth]
+    return rows[0]
+
+
 # gated metrics: name -> extractor over the BENCH_service.json payload
 METRICS = {
     "reference.arena_sims_per_sec": lambda d: d["reference"]["arena_sims_per_sec"],
     "reference.service_sims_per_sec": lambda d: d["reference"]["service_sims_per_sec"],
     "mixed.sims_per_sec": lambda d: d["mixed"]["sims_per_sec"],
+    # v4 overlap cell: pipelined throughput at the reference superstep
+    "overlap.pipelined_sims_per_sec": lambda d: _overlap_row(d, 2, 4)["sims_per_sec"],
 }
 
 

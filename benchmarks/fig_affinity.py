@@ -17,7 +17,10 @@ faked via ``benchmarks.run --devices N``), a sharded SearchService pool
 plays a fixed mixed-config tournament workload under every
 ``core.placement`` policy, reporting measured per-shard occupancy,
 utilisation, and imbalance — the paper's Fig. 9 mechanism on live
-shards rather than a structural model.
+shards rather than a structural model.  The ``fill_first`` knee row runs
+twice — multi-hop (doubling ppermute distance, PR 5) vs the PR 3 one-hop
+rebalance — so the O(log shards) backlog drain shows up as an occupancy/
+imbalance delta on the deliberately-bad compact placement.
 """
 from __future__ import annotations
 
@@ -92,17 +95,20 @@ def run_request_level(games_per_pair: int = 2) -> None:
     cfgs = [base, dataclasses.replace(base, c_uct=1.6),
             dataclasses.replace(base, virtual_loss=2.0)]
     mesh = make_service_mesh(n_dev)
-    for policy in placement.POLICIES:
+    sweep = [(policy, True) for policy in placement.POLICIES]
+    sweep.append(("fill_first", False))     # the PR 3 one-hop knee row
+    for policy, multihop in sweep:
         t = Tournament(eng, cfgs, games_per_pair=games_per_pair,
                        slots=2 * n_dev, max_moves=20, seed=9, mesh=mesh,
-                       placement=policy)
+                       placement=policy, multihop=multihop)
         t0 = time.time()
         res = t.round_robin()
         wall = time.time() - t0
         occ = t.service.shard_occupancy()
         util = float((occ > 0).mean())
         imb = float(occ.max() / max(occ.mean(), 1e-9))
-        csv_row(f"affinity_request_{policy}", wall / res.games,
+        hops = "multi" if multihop else "single"
+        csv_row(f"affinity_request_{policy}_{hops}hop", wall / res.games,
                 f"util={util:.2f};imbalance={imb:.2f};"
                 f"occ_mean={occ.mean():.2f}")
 

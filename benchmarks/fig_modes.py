@@ -43,10 +43,11 @@ def run() -> None:
     # structural: nodes grown per playout budget
     for name, cfg in contenders.items():
         m = MCTS(eng, cfg)
-        res = jax.jit(lambda s, k: m.search(s, k))(
-            eng.init_state(), jax.random.PRNGKey(0))
+        res = jax.jit(m.search_batch)(
+            jax.tree.map(lambda x: x[None], eng.init_state()),
+            jax.random.PRNGKey(0)[None])
         csv_row(f"mode_tree_growth_{name}", 0.0,
-                f"nodes={int(res.tree.size)};iters={m.iterations}")
+                f"nodes={int(res.tree.size[0])};iters={m.iterations}")
 
     # strength vs the same sequential baseline
     for name, cfg in contenders.items():

@@ -24,7 +24,8 @@ def run(lanes_points=(1, 2, 4, 8)) -> None:
         cfg = MCTSConfig(board_size=BOARD, lanes=lanes,
                          sims_per_move=8 * lanes, max_nodes=256)
         m = MCTS(eng, cfg)
-        fn = jax.jit(lambda k: m.search(eng.init_state(), k).tree.size)
+        root = jax.tree.map(lambda x: x[None], eng.init_state())
+        fn = jax.jit(lambda k: m.search_batch(root, k[None]).tree.size[0])
         sec, _ = time_fn(fn, jax.random.PRNGKey(0), warmup=1, iters=2)
         sims = m.iterations * lanes
         csv_row(f"games_per_sec_n{lanes}", sec,

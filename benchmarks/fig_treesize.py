@@ -25,7 +25,9 @@ def run(budgets=(8, 16, 32, 64), lanes_points=(1, 4)) -> None:
             cfg = MCTSConfig(board_size=BOARD, lanes=lanes,
                              sims_per_move=sims, max_nodes=512)
             m = MCTS(eng, cfg)
-            fn = jax.jit(lambda k: m.search(st1, k).tree.size)
+            root = jax.tree.map(lambda x: x[None], st1)
+            fn = jax.jit(
+                lambda k: m.search_batch(root, k[None]).tree.size[0])
             sec, size = time_fn(fn, jax.random.PRNGKey(1), warmup=1,
                                 iters=2)
             csv_row(f"treesize_n{lanes}_b{sims}", sec,

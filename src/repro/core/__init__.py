@@ -10,7 +10,7 @@ Public API
                       (per-game traced ``sims`` budget + traced
                       ``SearchParams`` (c_uct, vl_weight)) and
                       ``init_tree_batch`` — the pre-service five-method
-                      surface survives as deprecated shims
+                      surface (and its ``SearchResult`` alias) is gone
 ``SearchParams``      traced per-search UCT knobs; one compiled search
                       serves any mix of configurations
 ``SearchService``     the unified dispatcher (core/service.py): a
@@ -18,14 +18,15 @@ Public API
                       (``LANE_ARENA`` / ``LANE_SERVE`` /
                       ``LANE_TOURNAMENT``), device-side refill, and a
                       result ring buffer; ``submit_* -> flush -> dispatch
-                      -> poll``
+                      -> poll``, or streamed via ``DispatchPipeline``
+``DispatchPipeline``  streaming drain loop (core/streaming.py): keeps
+                      ``pipeline_depth`` supersteps in flight and
+                      reconciles ring back buffers as they land
 ``SearchRequest``     pending-request pytree (state, key, lane, per-side
                       sims / c_uct / vl pairs, ticket)
 ``SearchResult``      completed-request host record scattered back from
-                      the ring.  NOTE: this name moved in PR 2 — the raw
-                      per-search pytree it used to denote is now
-                      ``SearchOutput`` (``repro.core.mcts.SearchResult``
-                      remains an alias of that old type)
+                      the ring; ticket-tagged and order-independent
+                      (``finished_step`` stamps device completion time)
 ``Arena``             self-play client of the service (``refill="host"``
                       keeps the PR 1 host-queue loop as baseline/oracle)
 ``Tournament``        all-play-all cross table multiplexed through one
@@ -46,12 +47,14 @@ from repro.core.tree import Tree, init_tree, init_tree_batch, \
 from repro.core.arena import Arena, GameResult
 from repro.core.service import (LANE_ARENA, LANE_SERVE, LANE_TOURNAMENT,
                                 SearchRequest, SearchResult, SearchService)
+from repro.core.streaming import DispatchPipeline
 from repro.core.tournament import Tournament, TournamentResult
 from repro.core import stats, affinity, selfplay
 
 __all__ = ["MCTS", "SearchOutput", "SearchParams", "SearchResult",
            "SearchRequest",
-           "SearchService", "LANE_ARENA", "LANE_SERVE", "LANE_TOURNAMENT",
+           "SearchService", "DispatchPipeline",
+           "LANE_ARENA", "LANE_SERVE", "LANE_TOURNAMENT",
            "make_mcts", "Tree", "init_tree", "init_tree_batch",
            "root_action_visits", "select_action", "Arena", "GameResult",
            "Tournament", "TournamentResult", "stats", "affinity",

@@ -66,17 +66,21 @@ class Arena:
     slot pool; ``refill="host"`` runs the PR 1 per-step host-queue loop.
     Both play bit-identical games.
 
-    ``mesh``/``placement``/``rebalance`` shard the backing pool over a
-    one-axis device mesh (see core/service.py): games are placed onto
-    per-device sub-pools by the host policy, each device steps its own
-    slots, and self-play throughput scales past one device.
+    ``mesh``/``placement``/``rebalance``/``multihop`` shard the backing
+    pool over a one-axis device mesh (see core/service.py): games are
+    placed onto per-device sub-pools by the host policy, each device
+    steps its own slots, and self-play throughput scales past one
+    device.  ``pipeline_depth`` streams the drain (that many supersteps
+    in flight, host I/O overlapped with device compute) — the result set
+    is depth-invariant because games are ticket-keyed.
     """
 
     def __init__(self, engine: GoEngine, player_a: MCTS, player_b: MCTS,
                  slots: int, max_moves: Optional[int] = None,
                  refill: str = "device", superstep: int = 2,
                  mesh=None, placement: str = "round_robin",
-                 rebalance: bool = True):
+                 rebalance: bool = True, multihop: bool = True,
+                 pipeline_depth: int = 1):
         if slots < 2 or slots % 2:
             raise ValueError(f"slots must be even and >= 2, got {slots}")
         if refill not in ("device", "host"):
@@ -95,10 +99,13 @@ class Arena:
         self.mesh = mesh
         self.placement = placement
         self.rebalance = rebalance
+        self.multihop = multihop
+        self.pipeline_depth = pipeline_depth
         self._service: Optional[SearchService] = None   # built on first use
         self._step = jax.jit(self._step_impl)
         self._refill = jax.jit(self._refill_impl)
         self.host_syncs = 0     # host<->device round-trips of the last run
+        self.host_blocked_s = 0.0   # device-wait time of the last run
 
     @property
     def service(self) -> SearchService:
@@ -108,7 +115,8 @@ class Arena:
                 self.engine, self.player_a, self.player_b, self.slots,
                 max_moves=self.max_moves, superstep=self.superstep,
                 mesh=self.mesh, placement=self.placement,
-                rebalance=self.rebalance)
+                rebalance=self.rebalance, multihop=self.multihop,
+                pipeline_depth=self.pipeline_depth)
         return self._service
 
     # ----------------------------------------------- host-queue device side
@@ -208,6 +216,7 @@ class Arena:
             lane=LANE_ARENA) for i in range(games)]
         recs = {r.ticket: r for r in svc.drain()}
         self.host_syncs = svc.host_syncs
+        self.host_blocked_s = svc.host_blocked_s
         return [GameResult(winner=recs[t].winner, moves=recs[t].moves,
                            tree_nodes=recs[t].tree_nodes,
                            a_is_black=recs[t].a_is_black) for t in tickets]
@@ -221,6 +230,7 @@ class Arena:
         G, h = self.slots, self.slots // 2
         host_rng = np.random.default_rng(seed)
         self.host_syncs = 0
+        self.host_blocked_s = 0.0   # per-step syncs; not separately timed
 
         def draw_key(i: int) -> np.ndarray:
             if game_keys is not None:

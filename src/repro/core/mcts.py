@@ -22,7 +22,6 @@ analogue and ``lanes`` the thread count, so ``sims/move = iterations x lanes``.
 from __future__ import annotations
 
 import functools
-import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -59,24 +58,13 @@ class SearchParams(NamedTuple):
     vl_weight: jax.Array       # f32[G] virtual-loss weight in the Q term
 
 
-# Back-compat alias for the pre-SearchService name; the service-level
-# completed-request record now owns ``SearchResult`` (core/service.py).
-SearchResult = SearchOutput
-
-
-def _warn_deprecated(old: str, instead: str) -> None:
-    warnings.warn(
-        f"MCTS.{old} is deprecated; {instead}.  The supported public "
-        "surface is MCTS.search_batch / MCTS.init_tree_batch, with "
-        "core.service.SearchService as the dispatcher for single-root "
-        "queries, self-play, and tournaments.",
-        DeprecationWarning, stacklevel=3)
-
-
 class MCTS:
     """Search driver bound to an engine + config (methods jit/vmap-safe).
 
-    Public API (everything else is a deprecated shim or private):
+    Public API (everything else is private; the pre-service five-method
+    surface — ``search`` / ``search_root_parallel`` / ``best_move`` /
+    ``jit_best_move`` — was removed once every caller routed through
+    ``search_batch`` or the SearchService/GoService dispatchers):
 
     ==================  ======================================================
     ``search_batch``    one full move search per game over a leading game
@@ -396,37 +384,6 @@ class MCTS:
     @functools.partial(jax.jit, static_argnums=0)
     def _jit_best_move(self, root: GoState, rng) -> jax.Array:
         return self._best_move(root, rng)
-
-    # ------------------------------------------------ deprecated entry points
-    # Pre-SearchService five-method surface.  Kept as working shims so seed
-    # callers keep passing; new code goes through search_batch or the
-    # SearchService / GoService dispatchers.
-
-    def search(self, root: GoState, rng,
-               sims: Optional[jax.Array] = None) -> SearchOutput:
-        """Deprecated single-root search; use a [1]-batch ``search_batch``."""
-        _warn_deprecated("search", "vmap is the service's job — use "
-                         "search_batch (a [1]-batch for single roots)")
-        return self._search(root, rng, sims)
-
-    def search_root_parallel(self, root: GoState, rng) -> SearchOutput:
-        """Deprecated root-parallel search; use the service dispatchers."""
-        _warn_deprecated("search_root_parallel",
-                         "use core.distributed.distributed_best_move or a "
-                         "root-parallel MCTSConfig via the service")
-        return self._search_root_parallel(root, rng)
-
-    def best_move(self, root: GoState, rng) -> jax.Array:
-        """Deprecated; use :meth:`GoService.best_move`."""
-        _warn_deprecated("best_move",
-                         "use serving.go_service.GoService.best_move")
-        return self._best_move(root, rng)
-
-    def jit_best_move(self, root: GoState, rng) -> jax.Array:
-        """Deprecated; use :meth:`GoService.best_move`."""
-        _warn_deprecated("jit_best_move",
-                         "use serving.go_service.GoService.best_move")
-        return self._jit_best_move(root, rng)
 
 
 def make_mcts(engine: GoEngine, cfg: MCTSConfig, **kw) -> MCTS:

@@ -34,6 +34,21 @@ Placement is pure host-side bookkeeping: it never changes a serve query's
 answer (the serve RNG contract makes results placement-independent) and is
 deterministic in submission order, so a seeded run places — and therefore
 plays — identically every time (tests/test_sharded_service.py pins this).
+
+Streaming estimates: with a deep dispatch pipeline the polled truth lags
+the device by up to ``pipeline_depth`` supersteps, so raw in-flight
+counts overstate occupancy.  The service feeds the policy a per-class,
+per-shard **landed** estimate (results observed complete on device but
+not yet polled — non-blocking ring peeks classify each unread row by
+its ticket, ``SearchService.peek_landed``); :meth:`PlacementPolicy
+.choose` subtracts the request class's landed count when
+*comparing* shard loads, while the hard per-shard capacity gate stays on
+the raw in-flight count so a device queue can never overflow on an
+optimistic estimate.  Estimates are refreshed only by the pipelined
+path: at ``pipeline_depth=1`` they are identically zero and placement is
+bit-for-bit the PR 4 behaviour.  Because peeks depend on device timing,
+streaming-mode placement (and so game colouring) may vary run to run —
+the synchronous path keeps the determinism pin above.
 """
 from __future__ import annotations
 
@@ -54,6 +69,7 @@ def place(
     in_flight: np.ndarray,
     capacity: int,
     affine: Optional[int] = None,
+    load: Optional[np.ndarray] = None,
 ) -> Optional[int]:
     """Pure placement step: the shard that admits the next request.
 
@@ -61,12 +77,18 @@ def place(
     policies), ``in_flight`` the per-shard outstanding count for the
     request's class, ``capacity`` the per-shard in-flight cap, ``affine``
     the shard that last hosted this request's search configuration (only
-    ``config_affine`` reads it).  Returns ``None`` when every shard is
-    full.
+    ``config_affine`` reads it).  ``load`` is the per-shard occupancy
+    *estimate* used for load comparisons (in-flight minus landed results
+    not yet polled; defaults to ``in_flight`` — the synchronous truth);
+    the capacity gate always uses the raw ``in_flight`` so estimates can
+    never oversubscribe a device queue.  Returns ``None`` when every
+    shard is full.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown placement {policy!r}; want {POLICIES}")
     n = len(in_flight)
+    if load is None:
+        load = in_flight
     open_ = in_flight < capacity
     if not open_.any():
         return None
@@ -80,7 +102,7 @@ def place(
     if policy == "config_affine" and affine is not None and open_[affine]:
         return int(affine)                      # sticky while there is room
     # colour_balanced (and affine fallback): least loaded, lowest index
-    masked = np.where(open_, in_flight, np.iinfo(np.int64).max)
+    masked = np.where(open_, load, np.iinfo(np.int64).max)
     return int(np.argmin(masked))
 
 
@@ -99,8 +121,22 @@ class PlacementPolicy:
         self.policy = policy
         self.n_shard = n_shard
         self.in_flight = np.zeros((2, n_shard), np.int64)  # [class, shard]
+        # device-completed but unpolled, per [class, shard] (the streaming
+        # pipeline classifies unread ring rows by ticket)
+        self.landed = np.zeros((2, n_shard), np.int64)
         self._cursor = [0, 0]
         self._affine = {}  # config_key -> shard that last hosted it
+
+    def note_landed(self, landed: np.ndarray) -> None:
+        """Record device-completed-but-unpolled results per class/shard.
+
+        Fed by the streaming pipeline's non-blocking ring peeks
+        (``SearchService.peek_landed``), which classify each unread ring
+        row by its ticket; an absolute ``[2, n_shard]`` observation, not
+        a delta.  Each :meth:`release` retires one landed result, so the
+        estimate decays back to the polled truth between peeks.
+        """
+        self.landed = np.maximum(np.asarray(landed, np.int64), 0)
 
     def choose(self, cls: int, capacity: int, config_key=None) -> Optional[int]:
         """Admit one request of class ``cls``; returns its shard or None.
@@ -108,11 +144,16 @@ class PlacementPolicy:
         ``config_key`` is any hashable signature of the request's traced
         search configuration (the SearchService passes the per-side
         ``(sims, c_uct, virtual_loss)`` tuple); only ``config_affine``
-        consults it.
+        consults it.  Load comparisons run against the in-flight
+        *estimate* (in-flight minus landed); the capacity gate stays on
+        the raw count (see the module docstring).
         """
         track = self.policy == "config_affine" and config_key is not None
         affine = self._affine.get(config_key) if track else None
-        s = place(self.policy, self._cursor[cls], self.in_flight[cls], capacity, affine)
+        load = self.in_flight[cls] - np.minimum(self.landed[cls],
+                                                self.in_flight[cls])
+        s = place(self.policy, self._cursor[cls], self.in_flight[cls],
+                  capacity, affine, load=load)
         if s is None:
             return None
         self.in_flight[cls, s] += 1
@@ -128,5 +169,10 @@ class PlacementPolicy:
         return s
 
     def release(self, cls: int, shard: int) -> None:
-        """Return a shard's slot when the request's result is polled."""
+        """Return a shard's slot when the request's result is polled.
+
+        Also retires one landed-estimate unit: a polled result was, by
+        definition, landed.
+        """
         self.in_flight[cls, shard] -= 1
+        self.landed[cls, shard] = max(self.landed[cls, shard] - 1, 0)

@@ -34,6 +34,27 @@ steps, cutting the per-step host sync of the PR 1 arena loop to
 ``~2/superstep`` per move (``host_syncs`` counts them;
 benchmarks/bench_service.py proves the reduction).
 
+Streaming (``pipeline_depth > 1``): the host<->device boundary is double
+buffered.  Every queue and the result ring are functionally updated by
+the jitted dispatch, so each issued superstep leaves behind an immutable
+*back buffer* of the ring while the device keeps appending to the fresh
+*front* buffers; :meth:`SearchService.dispatch_async` captures that back
+buffer as a :class:`RingView` completion handle, and the
+:class:`~repro.core.streaming.DispatchPipeline` keeps up to
+``pipeline_depth`` supersteps in flight, reconciling each view as it
+lands.  Because a view's buffers are never touched by later supersteps,
+reconciling superstep ``i`` blocks only until *its* computation finishes
+(a raw ``device_get`` on the snapshot — an enqueued gather would queue
+behind the whole in-flight window), so host-side result processing,
+request packing, and placement overlap with device compute —
+``host_blocked_s`` measures exactly the time that overlap removes.
+Results complete **out of superstep order** across shards and lanes; the
+ordering contract is explicit in the pytree types: every
+:class:`SearchResult` is identified by its ``ticket`` (never by arrival
+position) and stamps ``finished_step``, the device dispatch step that
+completed it.  ``pipeline_depth=1`` *is* the synchronous PR 4 path,
+bit for bit (pinned in tests/test_pipeline.py).
+
 RNG contract:
 
 * game lanes: a slot splits ``key -> (key, ka, kb)`` once per step like
@@ -59,6 +80,7 @@ single-device program, so ``mesh`` over one device is bit-identical to
 from __future__ import annotations
 
 import functools
+import time
 from typing import List, NamedTuple, Optional
 
 import jax
@@ -67,7 +89,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec
 
-from repro.compat import shard_map
+from repro.compat import donate_jit, shard_map
 from repro.core.mcts import MCTS, SearchParams
 from repro.core.placement import CLS_GAME, CLS_SERVE, PlacementPolicy
 from repro.go.board import GoEngine, GoState
@@ -101,7 +123,18 @@ class SearchRequest(NamedTuple):
 
 
 class SearchResult(NamedTuple):
-    """One completed request, scattered back from the ring (host scalars)."""
+    """One completed request, scattered back from the ring (host scalars).
+
+    Ordering contract (the streaming-pipeline invariant): results are
+    identified by ``ticket``, **never** by arrival position.  With
+    ``pipeline_depth > 1`` completions land out of superstep order —
+    shards drain independently and a long game outlives the serve
+    queries admitted after it — so the only order guarantees are (a)
+    FIFO per shard within one poll and (b) ``finished_step`` is the
+    device dispatch step (since reset) that completed the request, a
+    total order *within* a shard.  Consumers key results by ticket
+    (Arena/Tournament/GoService all do).
+    """
     ticket: int
     lane: int
     action: int               # move chosen by the final (serve: only) search
@@ -110,6 +143,7 @@ class SearchResult(NamedTuple):
     tree_nodes: int           # final search's tree size (Fig. 12 metric)
     a_is_black: bool          # game lanes: colour assignment
     root_visits: np.ndarray   # f32[A] final root visit distribution
+    finished_step: int = -1   # dispatch step (since reset) of completion
 
 
 class _Pending(NamedTuple):
@@ -151,7 +185,14 @@ class _Queue(NamedTuple):
 
 
 class _Ring(NamedTuple):
-    """Device-resident circular result buffer (capacity R)."""
+    """Device-resident circular result buffer (capacity R).
+
+    Functionally updated each dispatch step, so a host-held reference to
+    a superstep's ring is an immutable back buffer (see
+    :class:`RingView`): rows are ticket-tagged and ``step``-stamped so
+    completions stay identifiable however far out of superstep order the
+    host reads them.
+    """
     ticket: jax.Array     # i32[R]
     lane: jax.Array       # i32[R]
     action: jax.Array     # i32[R]
@@ -160,20 +201,41 @@ class _Ring(NamedTuple):
     nodes: jax.Array      # i32[R]
     a_black: jax.Array    # bool[R]
     visits: jax.Array     # f32[R,A]
+    step: jax.Array       # i32[R] dispatch step that completed the row
     count: jax.Array      # i32: total ever appended
 
 
 class PoolState(NamedTuple):
-    """Everything the jitted dispatch step owns (one shard's worth)."""
+    """Everything the jitted dispatch step owns (one shard's worth).
+
+    The jit boundary splits this into a donatable *work* half (``ring``
+    replaced by ``None``) and the ring: supersteps may reuse the work
+    buffers in place on backends with donation, while every ring the
+    host snapshotted stays immutable (``compat.donate_jit``).
+    """
     slots: _Slots
     games: _Queue         # full-game requests (arena + tournament lanes)
     serve: _Queue         # single-search queries
-    ring: _Ring
+    ring: Optional[_Ring]     # None inside the jit's donated work half
     colour_count: jax.Array   # i32[2]; index 1 = games where A owns Black
     colour_cap: jax.Array     # i32 per-colour admission budget
     parity: jax.Array         # i32 global move parity (0 => Black to move)
     occ_sum: jax.Array        # i32 sum over steps of occupied slots
     occ_steps: jax.Array      # i32 dispatch steps run (occupancy denominator)
+    hop_idx: jax.Array        # i32 rebalance hop-schedule cursor
+
+
+class RingView(NamedTuple):
+    """Completion handle for one issued superstep (a ring back buffer).
+
+    ``dispatch_async`` returns the result ring exactly as the issued
+    superstep leaves it; later supersteps append to *fresh* buffers, so
+    polling this view blocks only until its own superstep finishes.
+    ``epoch`` invalidates views across :meth:`SearchService.reset`.
+    """
+    ring: _Ring
+    steps: int            # dispatch steps this superstep ran
+    epoch: int            # service reset() generation that issued it
 
 
 def _pow2(n: int) -> int:
@@ -244,15 +306,26 @@ class SearchService:
     ``slots / n_shard`` slots with private queues and ring; ``placement``
     names the host policy routing submissions to shards (core/placement.py)
     and ``rebalance`` enables the once-per-superstep cross-shard ppermute
-    of surplus pending games.  Capacities passed to :meth:`reset` are
-    *per shard*.
+    of surplus pending games (``multihop`` doubles the ppermute hop
+    distance each superstep — 1, 2, 4, ... — so a ``fill_first`` backlog
+    drains in O(log shards) supersteps; ``multihop=False`` keeps the PR 3
+    one-hop ring).  Capacities passed to :meth:`reset` are *per shard*.
+
+    ``pipeline_depth`` sets how many supersteps the
+    :class:`~repro.core.streaming.DispatchPipeline` keeps in flight when
+    draining: ``1`` is the synchronous flush -> dispatch -> poll loop
+    (bit-identical to the pre-streaming dispatcher, pinned in
+    tests/test_pipeline.py); ``K > 1`` overlaps host flush/poll/placement
+    with device supersteps.  The depth never changes the compiled
+    program — only when the host reads it.
     """
 
     def __init__(self, engine: GoEngine, player_a: MCTS, player_b: MCTS,
                  slots: int, max_moves: Optional[int] = None,
                  superstep: int = 4, mesh=None,
                  mesh_axis: Optional[str] = None,
-                 placement: str = "round_robin", rebalance: bool = True):
+                 placement: str = "round_robin", rebalance: bool = True,
+                 multihop: bool = True, pipeline_depth: int = 1):
         if mesh is not None:
             axes = tuple(mesh.axis_names)
             if len(axes) != 1:
@@ -271,6 +344,9 @@ class SearchService:
                 f"(each shard needs an even count >= 2), got {slots}")
         if superstep < 1:
             raise ValueError(f"superstep must be >= 1, got {superstep}")
+        if pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {pipeline_depth}")
         self.engine = engine
         self.player_a = player_a
         self.player_b = player_b
@@ -280,22 +356,38 @@ class SearchService:
         self.mesh = mesh
         self.placement = placement
         self.rebalance = rebalance
+        self.multihop = multihop
+        self.pipeline_depth = int(pipeline_depth)
         self.n_shard = n_shard
         self._axis = axis
         self._shard_slots = slots // n_shard
+        # rebalance hop schedule: [1] (PR 3 ring) or doubling 1, 2, 4, ...
+        if n_shard > 1 and rebalance:
+            if multihop:
+                self._hops, h = [], 1
+                while h < n_shard:
+                    self._hops.append(h)
+                    h *= 2
+            else:
+                self._hops = [1]
+        else:
+            self._hops = []
         PlacementPolicy(placement, n_shard)      # validate the policy name
         self._chunk = slots               # flush granularity
         self._init_state = engine.init_state()
-        self._dispatch = jax.jit(self._dispatch_impl, static_argnums=(1,))
+        self._dispatch = donate_jit(self._dispatch_impl,
+                                    donate_argnums=(0,), static_argnums=(2,))
         self._push_games = jax.jit(self._push_games_impl)
         self._push_serve = jax.jit(self._push_serve_impl)
         if mesh is not None:
-            self._dispatch_mesh = jax.jit(self._dispatch_mesh_impl,
-                                          static_argnums=(1,))
+            self._dispatch_mesh = donate_jit(self._dispatch_mesh_impl,
+                                             donate_argnums=(0,),
+                                             static_argnums=(2,))
             self._push_games_mesh = jax.jit(functools.partial(
                 self._push_mesh_impl, which="games"))
             self._push_serve_mesh = jax.jit(functools.partial(
                 self._push_mesh_impl, which="serve"))
+        self._epoch = -1
         self.reset()
 
     # ------------------------------------------------------------- lifecycle
@@ -357,6 +449,9 @@ class SearchService:
         self._submitted = {LANE_ARENA: 0, LANE_SERVE: 0, LANE_TOURNAMENT: 0}
         self._completed = dict(self._submitted)
         self.host_syncs = 0           # host<->device round-trips (flush+poll)
+        self.host_blocked_s = 0.0     # time spent waiting on the device
+        self.last_drain_stats = {}    # DispatchPipeline.stats() of last drain
+        self._epoch += 1              # invalidates outstanding RingViews
 
     def _fresh_pool(self, slot_keys: np.ndarray, colour_cap: int) -> PoolState:
         """One shard's empty PoolState (the whole pool when unsharded)."""
@@ -401,6 +496,7 @@ class SearchService:
             nodes=jnp.zeros((R,), jnp.int32),
             a_black=jnp.zeros((R,), jnp.bool_),
             visits=jnp.zeros((R, A), jnp.float32),
+            step=jnp.zeros((R,), jnp.int32),
             count=jnp.int32(0),
         )
         return PoolState(
@@ -408,7 +504,8 @@ class SearchService:
             serve=queue(self.serve_capacity), ring=ring,
             colour_count=jnp.zeros((2,), jnp.int32),
             colour_cap=jnp.int32(colour_cap), parity=jnp.int32(0),
-            occ_sum=jnp.int32(0), occ_steps=jnp.int32(0))
+            occ_sum=jnp.int32(0), occ_steps=jnp.int32(0),
+            hop_idx=jnp.int32(0))
 
     # ------------------------------------------------------------ submission
 
@@ -540,13 +637,22 @@ class SearchService:
                          n: jax.Array) -> PoolState:
         return pool._replace(serve=_queue_push(pool.serve, req, n))
 
-    def _dispatch_impl(self, pool: PoolState, steps: int) -> PoolState:
+    def _dispatch_impl(self, work: PoolState, ring: _Ring, steps: int):
+        """``steps`` supersteps over one shard's pool.
+
+        The jit boundary splits the pool into the donatable *work* half
+        (``work.ring is None``) and the result ring: work buffers may be
+        reused in place across calls (``compat.donate_jit``), while every
+        ring is a fresh output so host-held :class:`RingView` snapshots
+        stay valid however many supersteps run after them.
+        """
         def one(_, p):
             return self._advance(self._admit(p))
 
-        return jax.lax.fori_loop(0, steps, one, pool)
+        pool = jax.lax.fori_loop(0, steps, one, work._replace(ring=ring))
+        return pool._replace(ring=None), pool.ring
 
-    def _dispatch_mesh_impl(self, pool: PoolState, steps: int) -> PoolState:
+    def _dispatch_mesh_impl(self, work: PoolState, ring: _Ring, steps: int):
         """The sharded dispatch: every device steps its own sub-pool.
 
         Each shard's PoolState rides the mesh axis (leading axis of every
@@ -557,15 +663,18 @@ class SearchService:
         """
         spec = PartitionSpec(self._axis)
 
-        def body(p):
-            local = jax.tree.map(lambda x: x[0], p)
-            if self.n_shard > 1 and self.rebalance:
+        def body(w, r):
+            local = jax.tree.map(lambda x: x[0], w._replace(ring=r))
+            if self._hops:
                 local = self._rebalance_impl(local)
-            out = self._dispatch_impl(local, steps)
-            return jax.tree.map(lambda x: x[None], out)
+            out_w, out_r = self._dispatch_impl(
+                local._replace(ring=None), local.ring, steps)
+            out = jax.tree.map(lambda x: x[None],
+                               out_w._replace(ring=out_r))
+            return out._replace(ring=None), out.ring
 
-        return shard_map(body, mesh=self.mesh, in_specs=spec,
-                         out_specs=spec, check_vma=False)(pool)
+        return shard_map(body, mesh=self.mesh, in_specs=(spec, spec),
+                         out_specs=(spec, spec), check_vma=False)(work, ring)
 
     def _push_mesh_impl(self, pool: PoolState, req: SearchRequest,
                         shards: jax.Array, *, which: str) -> PoolState:
@@ -595,23 +704,46 @@ class SearchService:
             out_specs=spec, check_vma=False)(pool, req, shards)
 
     def _rebalance_impl(self, pool: PoolState) -> PoolState:
-        """Shift surplus pending games one shard along the mesh ring.
+        """Rebalance surplus pending games along the shard ring.
 
-        Runs inside the shard_map body.  Shard ``i`` donates up to
-        ``slots/n_shard`` of its most recent pending games to shard
-        ``i+1`` when its backlog exceeds the neighbour's — two scalar
-        ``ppermute``\\ s (backlog + headroom) decide the count, one chunk
-        ``ppermute`` moves the requests.  Donations are capped by the
-        receiver's rebalance headroom (queue rows beyond the host's
-        ``game_capacity`` share), so a host flush can never overflow a
-        queue the rebalance topped up.
+        Runs inside the shard_map body, once per dispatch call.  The hop
+        distance follows the schedule in ``self._hops``: ``[1]`` is the
+        PR 3 one-hop ring; with ``multihop`` the distance doubles every
+        superstep (1, 2, 4, ...), so a ``fill_first`` backlog reaches
+        every shard in O(log shards) supersteps instead of one ring
+        position per superstep — the 2015 follow-up's work-distribution
+        fix applied to the donation topology.  Each schedule entry is a
+        *static* permutation (``ppermute`` needs one), selected by the
+        traced ``hop_idx`` cursor via ``lax.switch``.
+        """
+        hops = self._hops
+        if len(hops) == 1:
+            out = self._rebalance_hop(pool, hops[0])
+        else:
+            out = lax.switch(
+                pool.hop_idx % len(hops),
+                [functools.partial(self._rebalance_hop, hop=h)
+                 for h in hops],
+                pool)
+        return out._replace(hop_idx=pool.hop_idx + 1)
+
+    def _rebalance_hop(self, pool: PoolState, hop: int) -> PoolState:
+        """One donation round at a fixed hop distance.
+
+        Shard ``i`` donates up to ``slots/n_shard`` of its most recent
+        pending games to shard ``i+hop`` when its backlog exceeds that
+        shard's — two scalar ``ppermute``\\ s (backlog + headroom) decide
+        the count, one chunk ``ppermute`` moves the requests.  Donations
+        are capped by the receiver's rebalance headroom (queue rows
+        beyond the host's ``game_capacity`` share), so a host flush can
+        never overflow a queue the rebalance topped up.
         """
         n = self.n_shard
         gq = pool.games
         Qg = gq.lane.shape[0]
         K = self._shard_slots
-        from_next = [((i + 1) % n, i) for i in range(n)]
-        to_next = [(i, (i + 1) % n) for i in range(n)]
+        from_next = [((i + hop) % n, i) for i in range(n)]
+        to_next = [(i, (i + hop) % n) for i in range(n)]
 
         backlog = gq.size - gq.head
         headroom = (Qg - self.game_capacity) - backlog
@@ -746,7 +878,7 @@ class SearchService:
         winner = jax.vmap(self.engine.result)(new_st)
 
         ring = self._append_ring(pool.ring, finished, sl, actions, winner,
-                                 moves_new, nodes, visits)
+                                 moves_new, nodes, visits, pool.occ_steps)
         slots = _Slots(
             states=new_st, keys=new_keys,
             ticket=jnp.where(finished, -1, sl.ticket),
@@ -759,7 +891,7 @@ class SearchService:
                              occ_steps=pool.occ_steps + 1)
 
     def _append_ring(self, ring: _Ring, finished, sl: _Slots, actions,
-                     winner, moves, nodes, visits) -> _Ring:
+                     winner, moves, nodes, visits, step) -> _Ring:
         R = ring.ticket.shape[0]
         off = ring.count + _excl_cumsum(finished)
         widx = jnp.where(finished, off % R, R)                 # R: dropped
@@ -776,69 +908,171 @@ class SearchService:
             nodes=put(ring.nodes, nodes),
             a_black=put(ring.a_black, sl.a_black),
             visits=put(ring.visits, visits),
+            step=put(ring.step, jnp.full_like(sl.ticket, step)),
             count=ring.count + finished.sum(),
         )
 
     # --------------------------------------------------------------- polling
 
+    def _get(self, x):
+        """Blocking device fetch, accounted in ``host_blocked_s``."""
+        t0 = time.perf_counter()
+        out = jax.device_get(x)
+        self.host_blocked_s += time.perf_counter() - t0
+        return out
+
+    @property
+    def epoch(self) -> int:
+        """reset() generation counter — stamps and invalidates RingViews."""
+        return self._epoch
+
     def dispatch(self, steps: Optional[int] = None) -> None:
         """Run ``steps`` (default ``superstep``) moves without host sync."""
         fn = self._dispatch if self.mesh is None else self._dispatch_mesh
-        self._pool = fn(self._pool, int(steps or self.superstep))
+        work, ring = fn(self._pool._replace(ring=None), self._pool.ring,
+                        int(steps or self.superstep))
+        self._pool = work._replace(ring=ring)
 
-    def poll(self) -> List[SearchResult]:
+    def dispatch_async(self, steps: Optional[int] = None) -> RingView:
+        """Issue one superstep and return its completion handle.
+
+        The dispatch itself never blocks (JAX async dispatch); the
+        returned :class:`RingView` snapshots the ring as this superstep
+        leaves it, so ``poll(view=...)`` later blocks only until *this*
+        superstep's computation lands — the double-buffered read side of
+        the streaming pipeline.
+        """
+        steps = int(steps or self.superstep)
+        self.dispatch(steps)
+        return RingView(ring=self._pool.ring, steps=steps,
+                        epoch=self._epoch)
+
+    _RING_FIELDS = ("ticket", "lane", "action", "winner", "moves", "nodes",
+                    "a_black", "visits", "step")
+
+    def poll(self, view: Optional[RingView] = None) -> List[SearchResult]:
         """Drain newly finished requests from the result rings.
 
-        Transfers scale with *new* results, not ring capacity: one sync
-        reads the append counter(s), and only when one moved does a
-        second sync gather the unread rows of *every* shard in one
-        ``device_get`` (so an idle poll costs one scalar round-trip, no
-        ``[R, A]`` visits traffic, and ``host_syncs`` stays an honest
-        count of blocking transfers).  Shard rings drain in shard order,
-        FIFO within each.
+        Without ``view`` (the synchronous path) transfers scale with
+        *new* results, not ring capacity: one sync reads the append
+        counter(s), and only when one moved does a second sync gather
+        the unread rows of *every* shard in one ``device_get`` (so an
+        idle poll costs one scalar round-trip, no ``[R, A]`` visits
+        traffic, and ``host_syncs`` stays an honest count of blocking
+        transfers).
+
+        With ``view`` (a :meth:`dispatch_async` handle) the unread rows
+        come from that superstep's snapshot via a *raw* transfer of the
+        ring buffers, sliced host-side: enqueueing a device gather on
+        the snapshot would queue behind every in-flight superstep and
+        re-serialise the pipeline, whereas the raw fetch waits only for
+        the snapshot's own producer.  Shard rings drain in shard order,
+        FIFO within each; across polls only the ticket identifies a
+        result (see :class:`SearchResult`).
         """
-        ring = self._pool.ring
-        counts = np.atleast_1d(np.asarray(jax.device_get(ring.count)))
+        if view is not None and view.epoch != self._epoch:
+            raise RuntimeError(
+                "stale RingView: the service was reset() after this "
+                "superstep was issued")
+        ring = self._pool.ring if view is None else view.ring
+        counts = np.atleast_1d(np.asarray(self._get(ring.count)))
         self.host_syncs += 1
-        gathers = {}
+        news = {}
         for s in range(self.n_shard):
-            count, read = int(counts[s]), int(self._ring_read[s])
-            new = count - read
-            if new == 0:
-                continue
+            new = int(counts[s]) - int(self._ring_read[s])
+            if new <= 0:
+                continue        # <0: an out-of-order view, already drained
             if new > self.ring_capacity:
                 raise RuntimeError(
                     f"result ring overflowed ({new} unread > capacity "
                     f"{self.ring_capacity}); poll() more often or reset() "
                     "with a larger ring_capacity")
-            bufs = (ring.ticket, ring.lane, ring.action, ring.winner,
-                    ring.moves, ring.nodes, ring.a_black, ring.visits)
-            if self.mesh is not None:
-                bufs = jax.tree.map(lambda buf: buf[s], bufs)
-            idx = jnp.asarray([i % self.ring_capacity
-                               for i in range(read, count)])
-            gathers[s] = jax.tree.map(lambda buf: buf[idx], bufs)
-        if not gathers:
+            news[s] = new
+        if not news:
             return []
-        fetched = jax.device_get(gathers)       # one blocking transfer
+        bufs = tuple(getattr(ring, f) for f in self._RING_FIELDS)
+        rows = {}
+        if view is None:
+            gathers = {}
+            for s in news:
+                sb = bufs if self.mesh is None \
+                    else jax.tree.map(lambda buf: buf[s], bufs)
+                idx = jnp.asarray(
+                    [i % self.ring_capacity
+                     for i in range(int(self._ring_read[s]), int(counts[s]))])
+                gathers[s] = jax.tree.map(lambda buf: buf[idx], sb)
+            rows = self._get(gathers)           # one blocking transfer
+        else:
+            whole = self._get(bufs)             # raw back-buffer read
+            for s in news:
+                sb = whole if self.mesh is None \
+                    else tuple(b[s] for b in whole)
+                idx = np.asarray(
+                    [i % self.ring_capacity
+                     for i in range(int(self._ring_read[s]), int(counts[s]))])
+                rows[s] = tuple(np.asarray(b)[idx] for b in sb)
         self.host_syncs += 1
         out: List[SearchResult] = []
-        for s in sorted(fetched):
-            ticket, lane, action, winner, moves, nodes, a_black, visits = \
-                fetched[s]
-            for j in range(int(counts[s]) - int(self._ring_read[s])):
+        for s in sorted(rows):
+            ticket, lane, action, winner, moves, nodes, a_black, visits, \
+                step = rows[s]
+            for j in range(news[s]):
                 rec = SearchResult(
                     ticket=int(ticket[j]), lane=int(lane[j]),
                     action=int(action[j]), winner=float(winner[j]),
                     moves=int(moves[j]), tree_nodes=int(nodes[j]),
                     a_is_black=bool(a_black[j]),
-                    root_visits=np.array(visits[j]))
+                    root_visits=np.array(visits[j]),
+                    finished_step=int(step[j]))
                 self._completed[rec.lane] += 1
                 cls, assigned = self._assigned.pop(rec.ticket)
                 self._placement.release(cls, assigned)
                 out.append(rec)
             self._ring_read[s] = counts[s]
         return out
+
+    def peek_landed(self) -> bool:
+        """Non-blocking refresh of the placement occupancy estimate.
+
+        When the newest superstep's ring is already materialised, feed
+        the per-(class, shard) completed-but-unpolled counts to the
+        placement policy as its *landed* estimate — unpolled ring rows
+        are classified by looking their tickets up in the host's
+        assignment map — so submissions placed between reconciles see
+        estimated in-flight occupancy rather than the stale polled
+        truth.  Returns whether the estimate was refreshed.
+
+        Requires a real ``jax.Array.is_ready``: on JAX builds without it
+        the peek is skipped entirely — the conservative direction *here*
+        (a blocking read every pump would re-serialise the pipeline;
+        ``compat.array_is_ready``'s ``True`` fallback suits callers who
+        were about to block anyway, not this one).  Estimates depend on
+        device timing, so in streaming workloads placement (and
+        therefore game colouring) may vary run to run — the synchronous
+        path stays deterministic (see core/placement.py).
+        """
+        ring = self._pool.ring
+        is_ready = getattr(ring.count, "is_ready", None)
+        if is_ready is None or not is_ready():
+            return False
+        # outputs of one executable materialise together: count ready
+        # means the ticket column is (at worst trivially) ready too
+        counts = np.atleast_1d(np.asarray(jax.device_get(ring.count)))
+        tickets = np.asarray(jax.device_get(ring.ticket))
+        if self.mesh is None:
+            tickets = tickets[None]
+        landed = np.zeros((2, self.n_shard), np.int64)
+        R = self.ring_capacity
+        for s in range(self.n_shard):
+            # clamp to the last R rows: older unread rows are already
+            # lost to wrap-around (poll() will raise overflow for them)
+            start = max(int(self._ring_read[s]), int(counts[s]) - R)
+            for i in range(start, int(counts[s])):
+                assigned = self._assigned.get(int(tickets[s, i % R]))
+                if assigned is not None:
+                    landed[assigned[0], s] += 1
+        self._placement.note_landed(landed)
+        return True
 
     def shard_occupancy(self) -> np.ndarray:
         """Mean fraction of occupied slots per shard since reset().
@@ -859,19 +1093,30 @@ class SearchService:
         """Submitted (including still-pending) but not yet completed."""
         return sum(self._submitted.values()) - sum(self._completed.values())
 
+    def accounting(self) -> tuple:
+        """``(submitted, completed, in_flight)`` request totals.
+
+        ``in_flight`` counts tickets between submission and poll (host
+        pending + device queued/active + landed-but-unpolled); the
+        pipeline asserts ``submitted == completed + in_flight`` at every
+        reconcile (tests/test_pipeline.py pins it).
+        """
+        return (sum(self._submitted.values()),
+                sum(self._completed.values()),
+                len(self._assigned))
+
     def drain(self, max_steps: Optional[int] = None) -> List[SearchResult]:
-        """Flush, then dispatch+poll until every submission completes."""
-        self.flush()
-        budget = max_steps or (self.outstanding * (self.max_moves + 2)
-                               + 2 * self.slots + 16)
-        out: List[SearchResult] = []
-        steps = 0
-        while self.outstanding > 0:
-            if steps > budget:
-                raise RuntimeError(
-                    f"SearchService.drain stalled: {self.outstanding} "
-                    f"requests still outstanding after {steps} steps")
-            self.dispatch()
-            steps += self.superstep
-            out.extend(self.poll())
+        """Flush, then dispatch+poll until every submission completes.
+
+        Runs through a :class:`~repro.core.streaming.DispatchPipeline`
+        at this service's ``pipeline_depth``: depth 1 reproduces the
+        lock-step flush -> dispatch -> poll loop exactly; deeper
+        pipelines keep that many supersteps in flight and overlap the
+        host I/O with device compute.  The pipeline's counters land in
+        ``last_drain_stats``.
+        """
+        from repro.core.streaming import DispatchPipeline
+        pipe = DispatchPipeline(self)
+        out = pipe.run_until_drained(max_steps)
+        self.last_drain_stats = pipe.stats()
         return out

@@ -141,6 +141,7 @@ class Tournament:
                  max_moves: Optional[int] = None, seed: int = 0,
                  superstep: int = 4, mesh=None,
                  placement: str = "round_robin", rebalance: bool = True,
+                 multihop: bool = True, pipeline_depth: int = 1,
                  multiplex: Optional[bool] = None, **mcts_kw):
         if len(configs) < 2:
             raise ValueError("tournament needs at least 2 configs")
@@ -165,6 +166,8 @@ class Tournament:
         self.mesh = mesh
         self.placement = placement
         self.rebalance = rebalance
+        self.multihop = multihop
+        self.pipeline_depth = pipeline_depth
         # pools shard over the mesh: pad the slot count so every shard
         # gets an even share (the legacy path reuses this shape per pair)
         self.slots = pad_slots(slots, mesh)
@@ -223,7 +226,9 @@ class Tournament:
                             max_moves=self.max_moves,
                             superstep=self.superstep, mesh=self.mesh,
                             placement=self.placement,
-                            rebalance=self.rebalance)
+                            rebalance=self.rebalance,
+                            multihop=self.multihop,
+                            pipeline_depth=self.pipeline_depth)
         self.service = svc
         pair_list = list(itertools.combinations(range(len(cfgs)), 2))
         total = self.games_per_pair * len(pair_list)
@@ -269,7 +274,9 @@ class Tournament:
                             max_moves=self.max_moves,
                             superstep=self.superstep, mesh=self.mesh,
                             placement=self.placement,
-                            rebalance=self.rebalance)
+                            rebalance=self.rebalance,
+                            multihop=self.multihop,
+                            pipeline_depth=self.pipeline_depth)
         svc.reset(seed=seed, colour_cap=(g + 1) // 2, game_capacity=g,
                   ring_capacity=g + self.slots)
         for _ in range(g):

@@ -2,9 +2,12 @@
 
 Simulates external traffic: random mid-game positions are queued as serve
 tickets and answered through the SearchService dispatcher's slot pool.
+``--pipeline-depth K`` streams the serve loop — up to K supersteps stay
+in flight while the host queues fresh queries and unpacks answers
+(``host blocked`` in the report is the time that overlap removes).
 
     PYTHONPATH=src python -m repro.launch.serve_go --board 5 --sims 32 \
-        --queries 8 --prefix-moves 6
+        --queries 8 --prefix-moves 6 --pipeline-depth 4
 """
 from __future__ import annotations
 
@@ -53,6 +56,9 @@ def main() -> None:
                     help="shard the serving pool over this many devices")
     ap.add_argument("--placement", default="round_robin",
                     help="query->shard policy (repro.core.placement)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="supersteps kept in flight by the streaming "
+                         "dispatch pipeline (1 = synchronous)")
     args = ap.parse_args()
 
     mesh = None
@@ -64,11 +70,15 @@ def main() -> None:
     rng = np.random.default_rng(args.seed)
     svc = GoService(board_size=args.board, komi=args.komi,
                     max_sims=args.sims, lanes=args.lanes, slots=args.slots,
-                    seed=args.seed, mesh=mesh, placement=args.placement)
+                    seed=args.seed, mesh=mesh, placement=args.placement,
+                    pipeline_depth=args.pipeline_depth)
 
     boards = [random_position(engine, rng, args.prefix_moves)
               for _ in range(args.queries)]
 
+    # streaming serve loop: queue everything, then collect — result()
+    # polls through the bucket pipelines, which keep pipeline-depth
+    # supersteps in flight (and stall-guard with max_polls)
     t0 = time.time()
     tickets = [svc.submit(b, to_play=tp, c_uct=args.c_uct,
                           virtual_loss=args.virtual_loss)
@@ -86,7 +96,9 @@ def main() -> None:
     sims = args.queries * args.sims
     print(f"{args.queries} queries in {dt:.2f}s "
           f"({args.queries / dt:.1f} moves/s, ~{sims / dt:.0f} sims/s, "
-          f"{svc.host_syncs} host syncs)")
+          f"{svc.host_syncs} host syncs, "
+          f"{svc.host_blocked_s:.2f}s host blocked, "
+          f"pipeline depth {args.pipeline_depth})")
     if mesh is not None:
         print("shard occupancy: "
               + " ".join(f"{o:.2f}" for o in svc.shard_occupancy()))

@@ -35,6 +35,7 @@ import numpy as np
 from repro.config import MCTSConfig
 from repro.core.mcts import MCTS
 from repro.core.service import SearchService, pad_slots
+from repro.core.streaming import DispatchPipeline
 from repro.go.board import BLACK, NO_KO, GoEngine, GoState
 
 
@@ -54,13 +55,21 @@ class GoService:
     (``placement`` routes queries to shards, core/placement.py); serve
     answers are placement-independent by the dispatcher's RNG contract,
     so sharding only changes throughput, never a move.
+
+    ``pipeline_depth`` streams the serve loop: each bucket drives a
+    persistent :class:`~repro.core.streaming.DispatchPipeline`, so
+    :meth:`poll` keeps up to that many supersteps in flight instead of
+    awaiting each one — queued queries, result unpacking, and placement
+    overlap with device search.  Answers are unchanged at any depth (the
+    serve RNG contract makes them pure functions of the query).
     """
 
     def __init__(self, board_size: int = 9, komi: float = 6.0,
                  max_sims: int = 64, lanes: int = 8, slots: int = 8,
                  max_nodes: int = 0, superstep: int = 2, seed: int = 0,
                  queue_capacity: int = 0, mesh=None,
-                 placement: str = "round_robin", **mcts_kw):
+                 placement: str = "round_robin", pipeline_depth: int = 1,
+                 **mcts_kw):
         self.board_size = int(board_size)
         self.default_komi = float(komi)
         self.max_sims = int(max_sims)
@@ -73,8 +82,10 @@ class GoService:
         self.superstep = superstep
         self.seed = seed
         self.queue_capacity = queue_capacity or 4 * self.slots
+        self.pipeline_depth = int(pipeline_depth)
         self.mcts_kw = mcts_kw
         self._buckets: Dict[float, SearchService] = {}
+        self._pipes: Dict[float, DispatchPipeline] = {}  # komi -> pipeline
         self._tickets: Dict[int, Tuple[float, int]] = {}  # ticket -> bucket
         self._done: Dict[int, MoveResult] = {}
         self._next_ticket = 0
@@ -93,16 +104,23 @@ class GoService:
             player = MCTS(engine, cfg, **self.mcts_kw)
             svc = SearchService(engine, player, player, self.slots,
                                 superstep=self.superstep, mesh=self.mesh,
-                                placement=self.placement)
+                                placement=self.placement,
+                                pipeline_depth=self.pipeline_depth)
             svc.reset(seed=self.seed, serve_capacity=self.queue_capacity,
                       game_capacity=2)
             self._buckets[komi] = svc
+            self._pipes[komi] = DispatchPipeline(svc)
         return svc
 
     @property
     def host_syncs(self) -> int:
         """Total blocking host<->device round-trips across all buckets."""
         return sum(b.host_syncs for b in self._buckets.values())
+
+    @property
+    def host_blocked_s(self) -> float:
+        """Total time spent waiting on devices across all buckets."""
+        return sum(b.host_blocked_s for b in self._buckets.values())
 
     def shard_occupancy(self, komi: Optional[float] = None) -> np.ndarray:
         """Per-shard occupancy of one bucket's pool (default bucket)."""
@@ -156,7 +174,14 @@ class GoService:
             svc.flush()
 
     def poll(self) -> List[int]:
-        """Advance every bucket one superstep; returns newly done tickets."""
+        """Pump every bucket's pipeline; returns newly done tickets.
+
+        Each call flushes queued queries, tops the bucket's in-flight
+        window up to ``pipeline_depth`` supersteps, and reconciles the
+        oldest one — at depth 1 exactly the old flush -> dispatch ->
+        poll superstep; deeper windows leave the device running while
+        the host unpacks answers.
+        """
         done = []
         inner_to_ticket = {(k, inn): t
                            for t, (k, inn) in self._tickets.items()
@@ -164,9 +189,9 @@ class GoService:
         for komi, svc in self._buckets.items():
             if svc.outstanding == 0:
                 continue
-            svc.flush()
-            svc.dispatch()
-            for rec in svc.poll():
+            pipe = self._pipes[komi]
+            pipe.pump()
+            for rec in pipe.reconcile():
                 ticket = inner_to_ticket.get((komi, rec.ticket))
                 if ticket is None:
                     continue        # a game lane sharing the bucket

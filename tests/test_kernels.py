@@ -83,7 +83,7 @@ class TestUctSelect:
         cfg = MCTSConfig(board_size=5, lanes=2, sims_per_move=16,
                          max_nodes=64)
         m = MCTS(eng, cfg)
-        t = jax.jit(lambda s, k: m.search(s, k))(
+        t = jax.jit(lambda s, k: m._search(s, k))(
             eng.init_state(), jax.random.PRNGKey(0)).tree
 
         node = 0

@@ -20,7 +20,7 @@ CFG5 = MCTSConfig(board_size=5, lanes=4, sims_per_move=32, max_nodes=128)
 @pytest.fixture(scope="module")
 def search5(engine5):
     m = MCTS(engine5, CFG5)
-    fn = jax.jit(lambda s, k: m.search(s, k))
+    fn = jax.jit(lambda s, k: m._search(s, k))
     return m, fn
 
 
@@ -73,7 +73,7 @@ class TestTreeInvariants:
     def test_capacity_respected(self, engine5, rng):
         cfg = dataclasses.replace(CFG5, max_nodes=8, sims_per_move=64)
         m = MCTS(engine5, cfg)
-        t = jax.jit(lambda s, k: m.search(s, k))(
+        t = jax.jit(lambda s, k: m._search(s, k))(
             engine5.init_state(), rng).tree
         assert int(t.size) <= 8
 
@@ -119,7 +119,7 @@ class TestParallelModes:
         cfg = dataclasses.replace(CFG5, parallelism="root", root_trees=4,
                                   sims_per_move=64)
         m = MCTS(engine5, cfg)
-        res = jax.jit(lambda s, k: m.search_root_parallel(s, k))(
+        res = jax.jit(lambda s, k: m._search_root_parallel(s, k))(
             engine5.init_state(), rng)
         legal = engine5.legal_moves(engine5.init_state())
         assert bool(legal[int(res.action)])
@@ -130,7 +130,7 @@ class TestParallelModes:
         cfg = dataclasses.replace(CFG5, lanes=1, leaf_playouts=4,
                                   sims_per_move=32)
         m = MCTS(engine5, cfg)
-        res = jax.jit(lambda s, k: m.search(s, k))(engine5.init_state(), rng)
+        res = jax.jit(lambda s, k: m._search(s, k))(engine5.init_state(), rng)
         expected = 1 + m.iterations * 1 * 4
         assert float(res.tree.visit[0]) == expected
 

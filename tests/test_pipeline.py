@@ -1,0 +1,357 @@
+"""Streaming dispatch pipeline tests (core/streaming.py + service views).
+
+The PR 5 tentpole contracts:
+
+* **depth invariance** — a submit-then-drain workload returns the exact
+  result sequence at any ``pipeline_depth`` (the device program never
+  depends on host read timing), under ``mesh=None`` and on faked
+  multi-device meshes;
+* **depth 1 is the synchronous path** — ``drain()`` at the default depth
+  reproduces the explicit flush -> dispatch -> poll loop bit for bit,
+  including the host-sync count;
+* **accounting** — ``submitted == completed + in_flight`` at every
+  reconcile;
+* **overflow** — a host that polls too late gets a RuntimeError, never a
+  silently overwritten ring row;
+* **staleness** — views issued before a ``reset()`` are evicted/refused;
+* **multi-hop rebalance** — the doubling hop schedule reaches shard
+  ``i+2`` on the second superstep where the PR 3 one-hop ring cannot;
+* **placement estimates** — landed results shift load comparisons but
+  never the hard capacity gate.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compat import make_service_mesh
+from repro.config import MCTSConfig
+from repro.core import placement
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources
+from repro.core.service import SearchService
+from repro.core.streaming import DispatchPipeline
+
+CFG = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+CAP = 12
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def players(engine5):
+    return MCTS(engine5, double_resources(CFG)), MCTS(engine5, CFG)
+
+
+@pytest.fixture(scope="module")
+def mid_state(engine5):
+    st = engine5.init_state()
+    for mv in (3, 7, 12, 16):
+        st = engine5.jit_play(st, jnp.int32(mv))
+    return st
+
+
+def _submit_mixed(svc, games, serves, mid_state, seed=0):
+    """Reset + queue a fixed mixed workload; returns the tickets."""
+    svc.reset(seed=seed, colour_cap=(games + 1) // 2 or 1,
+              game_capacity=max(2, games))
+    gk = np.asarray(jax.random.split(jax.random.PRNGKey(7), max(1, games)))
+    sk = np.asarray(jax.random.split(jax.random.PRNGKey(9), max(1, serves)))
+    tickets = [svc.submit_game(key=gk[i]) for i in range(games)]
+    tickets += [svc.submit_serve(mid_state, key=sk[i])
+                for i in range(serves)]
+    return tickets
+
+
+def _assert_same_results(want, got):
+    """Full-sequence equality: order, every scalar field, visits."""
+    assert [r.ticket for r in want] == [r.ticket for r in got]
+    for w, g in zip(want, got):
+        assert w[:7] == g[:7]
+        assert w.finished_step == g.finished_step
+        np.testing.assert_array_equal(w.root_visits, g.root_visits)
+
+
+class TestDepthInvariance:
+    def test_depth4_bit_identical_to_sync(self, engine5, players,
+                                          mid_state):
+        """The acceptance pin: pipeline_depth=1 vs >1 drain the identical
+        result sequence (tickets, scalars, visit distributions, even the
+        completion-step stamps) under mesh=None."""
+        runs = {}
+        for depth in (1, 4):
+            svc = SearchService(engine5, *players, slots=4, max_moves=CAP,
+                                pipeline_depth=depth)
+            tickets = _submit_mixed(svc, 5, 3, mid_state)
+            recs = svc.drain()
+            assert sorted(r.ticket for r in recs) == sorted(tickets)
+            assert svc.last_drain_stats["max_in_flight"] == depth
+            runs[depth] = recs
+        _assert_same_results(runs[1], runs[4])
+        # single shard: ring FIFO == device completion order, so the
+        # finished_step stamps are monotone across the whole drain
+        steps = [r.finished_step for r in runs[4]]
+        assert steps == sorted(steps)
+
+    def test_depth1_pipeline_is_the_sync_loop(self, engine5, players,
+                                              mid_state):
+        """drain() at depth 1 == the explicit PR 4 superstep loop, bit
+        for bit including the blocking-sync count."""
+        a, b = players
+        manual = SearchService(engine5, a, b, slots=4, max_moves=CAP)
+        _submit_mixed(manual, 4, 2, mid_state)
+        manual.flush()
+        want = []
+        while manual.outstanding > 0:
+            manual.dispatch()
+            want.extend(manual.poll())
+
+        piped = SearchService(engine5, a, b, slots=4, max_moves=CAP)
+        _submit_mixed(piped, 4, 2, mid_state)
+        got = piped.drain()
+        _assert_same_results(want, got)
+        assert piped.host_syncs == manual.host_syncs
+
+    def test_pipeline_depth_validation(self, engine5, players):
+        a, b = players
+        with pytest.raises(ValueError):
+            SearchService(engine5, a, b, slots=2, pipeline_depth=0)
+        svc = SearchService(engine5, a, b, slots=2)
+        with pytest.raises(ValueError):
+            DispatchPipeline(svc, depth=-1)
+        with pytest.raises(ValueError):
+            DispatchPipeline(svc, depth=0)    # must not fall back to default
+        with pytest.raises(ValueError):
+            DispatchPipeline(svc, steps=0)
+
+
+class TestPipelineMechanics:
+    def test_accounting_invariant_every_reconcile(self, engine5, players,
+                                                  mid_state):
+        """submitted == completed + in-flight at every reconcile, and the
+        window never exceeds the configured depth."""
+        svc = SearchService(engine5, *players, slots=4, max_moves=CAP,
+                            pipeline_depth=3)
+        _submit_mixed(svc, 6, 2, mid_state)
+        pipe = DispatchPipeline(svc)
+        svc.flush()
+        got = []
+        while svc.outstanding > 0:
+            pipe.pump()
+            assert pipe.in_flight_supersteps <= 3
+            got.extend(pipe.reconcile(block=True))  # raises on drift
+            submitted, completed, in_flight = svc.accounting()
+            assert submitted == completed + in_flight
+            assert submitted == 8
+        assert len(got) == 8
+        assert pipe.reconciles > 0
+        assert pipe.stats()["max_in_flight"] == 3
+
+    def test_ring_overflow_raises_when_host_polls_late(self, engine5,
+                                                       players, mid_state):
+        """A deep window over a tiny ring must fail loudly on reconcile,
+        not silently overwrite unread results."""
+        a, _ = players
+        svc = SearchService(engine5, a, a, slots=4, max_moves=CAP,
+                            superstep=4, pipeline_depth=4)
+        svc.reset(seed=0, serve_capacity=16, ring_capacity=4)
+        sk = np.asarray(jax.random.split(jax.random.PRNGKey(2), 12))
+        for i in range(12):
+            svc.submit_serve(mid_state, key=sk[i])
+        pipe = DispatchPipeline(svc)
+        pipe.pump()                       # 4 supersteps in flight, no polls
+        with pytest.raises(RuntimeError, match="overflowed"):
+            pipe.reconcile(block=True)
+
+    def test_out_of_order_view_is_harmless(self, engine5, players,
+                                           mid_state):
+        """Polling an older view after a newer one must be a no-op — the
+        read cursor never rolls backward into duplicate delivery."""
+        a, _ = players
+        svc = SearchService(engine5, a, a, slots=4, max_moves=CAP,
+                            superstep=1, pipeline_depth=2)
+        svc.reset(seed=0)
+        sk = np.asarray(jax.random.split(jax.random.PRNGKey(3), 6))
+        tickets = [svc.submit_serve(mid_state, key=sk[i]) for i in range(6)]
+        svc.flush()
+        v1 = svc.dispatch_async()         # 2 serves complete (2 A-cells)
+        v2 = svc.dispatch_async()         # 2 more
+        newer = svc.poll(view=v2)
+        assert len(newer) == 4
+        assert svc.poll(view=v1) == []    # older view: already drained
+        rest = svc.drain()
+        assert sorted(r.ticket for r in newer + rest) == tickets
+
+    def test_stale_views_evicted_on_reset(self, engine5, players,
+                                          mid_state):
+        svc = SearchService(engine5, *players, slots=4, max_moves=CAP,
+                            pipeline_depth=2)
+        _submit_mixed(svc, 0, 2, mid_state)
+        pipe = DispatchPipeline(svc)
+        svc.flush()
+        pipe.pump()
+        view = svc.dispatch_async()
+        svc.reset(seed=1)
+        assert pipe.reconcile(block=True) == []      # window evicted
+        assert pipe.in_flight_supersteps == 0
+        with pytest.raises(RuntimeError, match="stale"):
+            svc.poll(view=view)
+
+
+class TestPlacementEstimates:
+    def test_landed_estimate_shifts_load_comparison(self):
+        """A shard whose results landed (but were not yet polled) looks
+        less loaded to the least-loaded policies — per request class."""
+        pol = placement.PlacementPolicy("colour_balanced", 2)
+        assert [pol.choose(placement.CLS_GAME, 8) for _ in range(3)] \
+            == [0, 1, 0]                  # raw in-flight now [2, 1]
+        landed = np.zeros((2, 2), np.int64)
+        landed[placement.CLS_GAME, 0] = 2  # shard 0's games finished
+        pol.note_landed(landed)
+        assert pol.choose(placement.CLS_GAME, 8) == 0   # estimate wins
+        pol.release(placement.CLS_GAME, 0)
+        assert pol.landed[placement.CLS_GAME, 0] == 1   # poll retires one
+
+    def test_landed_estimate_is_class_aware(self):
+        """Landed serve results must not make a shard's *games* look
+        done: the estimate is classified per request class."""
+        pol = placement.PlacementPolicy("colour_balanced", 2)
+        assert [pol.choose(placement.CLS_GAME, 8) for _ in range(5)] \
+            == [0, 1, 0, 1, 0]            # games in flight [3, 2]
+        landed = np.zeros((2, 2), np.int64)
+        landed[placement.CLS_SERVE, 0] = 3   # only serves landed there
+        pol.note_landed(landed)
+        assert pol.choose(placement.CLS_GAME, 8) == 1   # still least-loaded
+
+    def test_capacity_gate_ignores_estimates(self):
+        """Estimates re-order shards but can never oversubscribe the hard
+        per-shard in-flight cap (device queues must not overflow)."""
+        pol = placement.PlacementPolicy("colour_balanced", 1)
+        assert pol.choose(placement.CLS_GAME, 2) == 0
+        assert pol.choose(placement.CLS_GAME, 2) == 0
+        landed = np.zeros((2, 1), np.int64)
+        landed[placement.CLS_GAME, 0] = 2
+        pol.note_landed(landed)
+        assert pol.choose(placement.CLS_GAME, 2) is None
+
+
+class TestGoServicePipelined:
+    def test_streaming_answers_equal_sync(self):
+        """Pipelined serving returns bit-identical moves (the serve RNG
+        contract is read-timing independent)."""
+        from repro.serving.go_service import GoService
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(5), 4))
+        boards = []
+        for i in range(4):
+            b = np.zeros(25, np.int8)
+            b[5 + 3 * i] = 1
+            boards.append(b)
+
+        def serve(depth):
+            svc = GoService(board_size=5, komi=0.5, max_sims=8, lanes=2,
+                            slots=4, seed=0, pipeline_depth=depth)
+            tickets = [svc.submit(b, to_play=-1, key=keys[i])
+                       for i, b in enumerate(boards)]
+            svc.flush()
+            return [svc.result(t) for t in tickets]
+
+        want, got = serve(1), serve(3)
+        for w, g in zip(want, got):
+            assert (w.action, w.coord, w.is_pass) == \
+                (g.action, g.coord, g.is_pass)
+            np.testing.assert_array_equal(w.root_visits, g.root_visits)
+
+
+@multidevice
+class TestPipelineMesh:
+    """In-process multi-device coverage (CI: the test-multidevice job)."""
+
+    def test_depth4_bit_identical_on_4_shards(self, engine5, players,
+                                              mid_state):
+        runs = {}
+        for depth in (1, 4):
+            svc = SearchService(engine5, *players, slots=8, max_moves=CAP,
+                                mesh=make_service_mesh(4),
+                                pipeline_depth=depth)
+            tickets = _submit_mixed(svc, 6, 3, mid_state)
+            recs = svc.drain()
+            assert sorted(r.ticket for r in recs) == sorted(tickets)
+            runs[depth] = recs
+        _assert_same_results(runs[1], runs[4])
+
+    def test_multihop_reaches_hop2_in_two_supersteps(self, engine5,
+                                                     players):
+        """The doubling schedule donates straight to shard i+2 on its
+        second superstep; the one-hop ring provably cannot (its only
+        path to shard 2 chains through shard 1's backlog)."""
+        a, b = players
+
+        def probe(multihop):
+            svc = SearchService(engine5, a, b, slots=8, max_moves=CAP,
+                                mesh=make_service_mesh(4),
+                                placement="fill_first", multihop=multihop)
+            svc.reset(seed=0, colour_cap=3, game_capacity=6)
+            for _ in range(6):
+                svc.submit_game()
+            svc.flush()
+            svc.dispatch(steps=1)         # rebalance hop 1
+            svc.dispatch(steps=1)         # hop 2 (multihop) / 1 (single)
+            sizes = np.asarray(jax.device_get(svc._pool.games.size))
+            recs = svc.drain()
+            return sizes, len(recs)
+
+        multi_sizes, multi_n = probe(True)
+        single_sizes, single_n = probe(False)
+        assert multi_n == single_n == 6   # both drain completely
+        assert multi_sizes[2] > 0         # hop-2 donation landed
+        assert single_sizes[2] == 0       # one-hop ring: not yet
+
+
+@pytest.mark.slow
+class TestPipelineSubprocess:
+    """8-fake-device depth invariance for single-device tier-1 runs."""
+
+    def test_depth_invariance_8_fake_devices(self):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                            + env.get("XLA_FLAGS", "")).strip()
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np
+assert jax.device_count() == 8
+from repro.compat import make_service_mesh
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.core.selfplay import double_resources
+from repro.core.service import SearchService
+from repro.go import GoEngine
+
+eng = GoEngine(5, komi=0.5)
+cfg = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+a, b = MCTS(eng, double_resources(cfg)), MCTS(eng, cfg)
+keys = np.asarray(jax.random.split(jax.random.PRNGKey(7), 8))
+
+def run(depth):
+    svc = SearchService(eng, a, b, slots=8, max_moves=10,
+                        mesh=make_service_mesh(4), pipeline_depth=depth)
+    svc.reset(seed=0, colour_cap=4, game_capacity=8)
+    for i in range(8):
+        svc.submit_game(key=keys[i])
+    return svc.drain()
+
+r1, r4 = run(1), run(4)
+assert [r.ticket for r in r1] == [r.ticket for r in r4]
+for w, g in zip(r1, r4):
+    assert w[:7] == g[:7] and w.finished_step == g.finished_step
+    np.testing.assert_array_equal(w.root_visits, g.root_visits)
+print("OK", len(r1))
+"""], env=env, capture_output=True, text=True, timeout=480)
+        assert out.returncode == 0, \
+            f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"

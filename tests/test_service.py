@@ -1,9 +1,8 @@
 """SearchService dispatcher tests (core/service.py): device-side refill
 bit-for-bit vs the host queue, mixed-lane ticket fairness, the serve-lane
-RNG contract, the traced per-request sims knob, deprecation shims, and the
-tournament scheduler."""
-import dataclasses
-
+RNG contract, the traced per-request sims knob, and the tournament
+scheduler.  (The streaming-pipeline suite lives in tests/test_pipeline.py;
+the PR 2 deprecation-shim tests left with the shims.)"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -211,35 +210,6 @@ class TestSimsKnob:
         for sims in (2, 4, 8):
             fn(roots, key, jnp.asarray([sims], jnp.int32))
         assert fn._cache_size() == 1
-
-
-class TestDeprecationShims:
-    def test_old_surface_warns_but_works(self, engine5, players,
-                                         jit_search):
-        _, b = players
-        st = engine5.init_state()
-        key = jax.random.PRNGKey(1)
-        with pytest.warns(DeprecationWarning):
-            res = jax.jit(b.search)(st, key)
-        want = jit_search(jax.tree.map(lambda x: x[None], st), key[None])
-        assert int(res.action) == int(want.action[0])
-        np.testing.assert_array_equal(np.asarray(res.root_visits),
-                                      np.asarray(want.root_visits[0]))
-        with pytest.warns(DeprecationWarning):
-            mv = b.jit_best_move(st, key)
-        assert int(mv) == int(res.action)
-
-    def test_root_parallel_and_best_move_shims(self, engine5):
-        cfg = dataclasses.replace(CFG, parallelism="root", root_trees=2,
-                                  sims_per_move=4)
-        m = MCTS(engine5, cfg)
-        st = engine5.init_state()
-        with pytest.warns(DeprecationWarning):
-            res = jax.jit(m.search_root_parallel)(st, jax.random.PRNGKey(0))
-        with pytest.warns(DeprecationWarning):
-            mv = jax.jit(m.best_move)(st, jax.random.PRNGKey(0))
-        assert 0 <= int(res.action) <= engine5.pass_action
-        assert int(mv) == int(res.action)    # root mode routes to the merge
 
 
 class TestTournament:
