@@ -1,0 +1,306 @@
+"""Open-loop Poisson load bench for the HTTP front door -> BENCH_load.json.
+
+The paper's threads-vs-performance figure, re-plotted for the serving
+tier: instead of thread count on the x-axis, *offered load* (requests/s)
+— and instead of raw throughput, the latency percentiles and shed rate a
+client actually experiences.  The generator is **open-loop**: arrival
+times are a Poisson process (pre-drawn exponential gaps) fired on
+schedule regardless of completions, so queue buildup is visible instead
+of being absorbed by closed-loop self-throttling — the standard
+methodology for SLO benchmarks, and the honest one for the paper's
+thesis that coordination (not compute) sets the knee.
+
+Per offered-load point the bench reports client-side p50/p95/p99 over
+successful requests, the explicit-shed split (HTTP 503 over-capacity /
+504 deadline), and the server's own ``/metrics`` delta.  The smoke cell
+(``--smoke``, the CI load gate) drives two komi buckets and asserts the
+SLO contract end to end: **zero unshed losses** (every request answers
+200, 503, or 504 — nothing hangs or errors), **no shedding** at the
+bottom point, **explicit shedding** at the top (4x capacity) point, and
+bottom-point p99 under ``--p99-budget-ms``.
+
+    PYTHONPATH=src python benchmarks/bench_load.py --smoke
+    PYTHONPATH=src python benchmarks/bench_load.py \
+        --requests 200 --rates 0.25,0.75,4.0 [--url http://host:port]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                    # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import numpy as np
+
+SCHEMA = "bench_load/v1"
+BOARD = 5
+SIMS = 16
+SLOTS = 8
+LANES = 4
+
+
+def _board(rng: np.random.Generator, n2: int) -> list:
+    """A sparse random position (a few non-capturing stones)."""
+    b = np.zeros(n2, np.int8)
+    stones = rng.choice(n2, size=3, replace=False)
+    b[stones[:2]] = 1
+    b[stones[2:]] = -1
+    return b.tolist()
+
+
+async def _request(client, at_s: float, payload: dict) -> dict:
+    """Fire one request at its scheduled time; never raise."""
+    loop = asyncio.get_event_loop()
+    await asyncio.sleep(max(0.0, at_s - loop.time()))
+    t0 = time.perf_counter()
+    try:
+        status, body = await client(payload)
+    except Exception as e:                       # a loss, not a shed
+        return {"status": -1, "latency_s": time.perf_counter() - t0,
+                "error": repr(e)}
+    return {"status": status, "latency_s": time.perf_counter() - t0,
+            "downgraded": bool(body.get("downgraded", False))}
+
+
+async def run_point(client, metrics, rate_rps: float, n: int,
+                    komis: list, deadline_ms: float,
+                    rng: np.random.Generator, n2: int) -> dict:
+    """One offered-load point: n Poisson arrivals at rate_rps."""
+    gaps = rng.exponential(1.0 / rate_rps, size=n)
+    fire_at = np.cumsum(gaps)
+    loop = asyncio.get_event_loop()
+    t0 = loop.time() + 0.05                      # small scheduling margin
+    before = await metrics()
+    tasks = [asyncio.ensure_future(_request(
+        client, t0 + fire_at[i],
+        {"board": _board(rng, n2), "komi": komis[i % len(komis)],
+         "deadline_ms": deadline_ms}))
+        for i in range(n)]
+    results = await asyncio.gather(*tasks)
+    wall = loop.time() - t0
+    after = await metrics()
+
+    ok = [r for r in results if r["status"] == 200]
+    lat_ms = np.array([r["latency_s"] for r in ok]) * 1e3
+    by_status = {}
+    for r in results:
+        by_status[r["status"]] = by_status.get(r["status"], 0) + 1
+    shed = by_status.get(503, 0) + by_status.get(504, 0) \
+        + by_status.get(410, 0)
+    losses = n - len(ok) - shed
+    delta = {k: after["metrics"][k] - before["metrics"][k]
+             for k in ("completed", "downgraded", "shed_overload",
+                       "shed_deadline", "deadline_miss")}
+    point = {
+        "offered_rps": rate_rps,
+        "requests": n,
+        "wall_s": wall,
+        "achieved_rps": len(ok) / wall if wall > 0 else 0.0,
+        "ok": len(ok),
+        "shed": shed,
+        "shed_rate": shed / n,
+        "losses": losses,
+        "by_status": {str(k): v for k, v in sorted(by_status.items())},
+        "downgraded": sum(1 for r in ok if r.get("downgraded")),
+        "server_delta": delta,
+    }
+    if len(ok):
+        point.update(
+            p50_ms=float(np.percentile(lat_ms, 50)),
+            p95_ms=float(np.percentile(lat_ms, 95)),
+            p99_ms=float(np.percentile(lat_ms, 99)),
+            mean_ms=float(lat_ms.mean()),
+            max_ms=float(lat_ms.max()),
+        )
+    return point
+
+
+async def calibrate(client, komis: list, slots: int,
+                    rng: np.random.Generator, n2: int,
+                    waves: int = 3) -> dict:
+    """Warm every komi bucket, then measure closed-loop capacity.
+
+    Warmup pays each bucket's one-time jit compile (excluded from every
+    timing) and seeds the server's deadline-policy calibration; capacity
+    is ``slots`` concurrent blocking queries per wave — the pool's
+    closed-loop ceiling the open-loop rates are scaled from.
+    """
+    for komi in komis:                           # compile, serially
+        status, _ = await client({"board": [0] * n2, "komi": komi})
+        if status != 200:
+            raise RuntimeError(f"warmup query failed with HTTP {status}")
+    t0 = time.perf_counter()
+    n = 0
+    for _ in range(waves):
+        batch = [client({"board": _board(rng, n2),
+                         "komi": komis[i % len(komis)]})
+                 for i in range(slots)]
+        for status, _ in await asyncio.gather(*batch):
+            if status == 200:
+                n += 1
+    wall = time.perf_counter() - t0
+    if n == 0:
+        raise RuntimeError("calibration produced no successful queries")
+    lat_ms = wall / waves * 1e3                  # one wave ~ one pool pass
+    return {"capacity_rps": n / wall, "wave_ms": lat_ms,
+            "warm_queries": n}
+
+
+def smoke_verdict(payload: dict, p99_budget_ms: float) -> list:
+    """The CI load gate's assertions; returns failure messages."""
+    fails = []
+    points = payload["points"]
+    total = sum(p["requests"] for p in points)
+    losses = sum(p["losses"] for p in points)
+    if losses:
+        fails.append(f"{losses}/{total} requests lost without an "
+                     "explicit shed (not 200/503/504)")
+    bottom, top = points[0], points[-1]
+    if bottom["shed"] != 0:
+        fails.append(f"bottom point ({bottom['offered_rps']:.1f} rps) "
+                     f"shed {bottom['shed']} requests; must shed none")
+    if top["shed"] == 0:
+        fails.append(f"top point ({top['offered_rps']:.1f} rps, "
+                     f"{top['requests']} reqs) shed nothing; over-"
+                     "capacity load must shed explicitly")
+    p99 = bottom.get("p99_ms", float("inf"))
+    if p99 > p99_budget_ms:
+        fails.append(f"bottom-point p99 {p99:.1f}ms over the "
+                     f"{p99_budget_ms:.0f}ms budget")
+    return fails
+
+
+async def run(args: argparse.Namespace) -> dict:
+    """Stand up (or attach to) a server and sweep the offered loads."""
+    rng = np.random.default_rng(args.seed)
+    komis = [float(k) for k in args.komis.split(",")]
+    n2 = args.board * args.board
+    server = None
+    if args.url:
+        host, port = args.url.split("//")[-1].rsplit(":", 1)
+        port = int(port)
+    else:
+        from repro.serving.go_service import GoService
+        from repro.serving.server import GoMoveServer
+        service = GoService(board_size=args.board, komi=komis[0],
+                            max_sims=args.sims, lanes=args.lanes,
+                            slots=args.slots, seed=args.seed,
+                            pipeline_depth=args.pipeline_depth,
+                            admission_limit=args.admission_limit)
+        server = GoMoveServer(service)
+        host, port = "127.0.0.1", await server.start()
+
+    from repro.serving.server import http_json
+
+    def client(payload):
+        return http_json(host, port, "POST", "/v1/best_move", payload,
+                         timeout_s=args.request_timeout_s)
+
+    async def metrics():
+        status, body = await http_json(host, port, "GET", "/metrics")
+        if status != 200:
+            raise RuntimeError(f"/metrics failed with HTTP {status}")
+        return body
+
+    try:
+        cal = await calibrate(client, komis, args.slots, rng, n2)
+        deadline_ms = args.deadline_ms or max(
+            250.0, args.deadline_factor * cal["wave_ms"])
+        rates = [float(r) for r in args.rates.split(",")]
+        points = []
+        for x in rates:
+            rate = max(0.5, x * cal["capacity_rps"])
+            print(f"point {x:.2f}x capacity: {rate:.1f} rps x "
+                  f"{args.requests} requests ...", flush=True)
+            points.append(await run_point(
+                client, metrics, rate, args.requests, komis,
+                deadline_ms, rng, n2))
+            p = points[-1]
+            print(f"  ok {p['ok']}/{p['requests']} shed {p['shed']} "
+                  f"lost {p['losses']} p99 "
+                  f"{p.get('p99_ms', float('nan')):.1f}ms", flush=True)
+        return {
+            "schema": SCHEMA,
+            "smoke": bool(args.smoke),
+            "config": {"board": args.board, "sims": args.sims,
+                       "slots": args.slots, "lanes": args.lanes,
+                       "komis": komis, "requests": args.requests,
+                       "admission_limit": args.admission_limit,
+                       "rates_x": rates, "deadline_ms": deadline_ms,
+                       "seed": args.seed, "url": args.url or None},
+            "calibration": cal,
+            "points": points,
+        }
+    finally:
+        if server is not None:
+            await server.stop()
+
+
+def main() -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_load.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI cell: 2 komi buckets, short bursts, "
+                         "assert the SLO contract")
+    ap.add_argument("--board", type=int, default=BOARD)
+    ap.add_argument("--sims", type=int, default=SIMS)
+    ap.add_argument("--slots", type=int, default=SLOTS)
+    ap.add_argument("--lanes", type=int, default=LANES)
+    ap.add_argument("--pipeline-depth", type=int, default=2)
+    ap.add_argument("--admission-limit", type=int, default=12,
+                    help="per-bucket outstanding-request cap; the top "
+                         "offered-load point must overflow it")
+    ap.add_argument("--komis", default="6.0,7.5",
+                    help="comma list; each value is one service bucket")
+    ap.add_argument("--requests", type=int, default=150,
+                    help="Poisson arrivals per offered-load point")
+    ap.add_argument("--rates", default="0.25,0.75,4.0",
+                    help="offered loads as fractions of measured capacity"
+                         " (>= 3 points; last one should be > 1)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request SLO (0 = auto from calibration)")
+    ap.add_argument("--deadline-factor", type=float, default=30.0,
+                    help="auto deadline = factor * calibrated wave time")
+    ap.add_argument("--request-timeout-s", type=float, default=120.0)
+    ap.add_argument("--p99-budget-ms", type=float, default=5000.0,
+                    help="smoke gate on the bottom point's p99 (generous:"
+                         " shared CI hosts, not a perf target)")
+    ap.add_argument("--url", default="",
+                    help="attach to a running server instead of "
+                         "starting one in-process")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 60)
+
+    payload = asyncio.run(run(args))
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+    for p in payload["points"]:
+        print(f"  {p['offered_rps']:8.1f} rps -> p50 "
+              f"{p.get('p50_ms', float('nan')):7.1f}ms  p99 "
+              f"{p.get('p99_ms', float('nan')):7.1f}ms  shed_rate "
+              f"{p['shed_rate']:.2f}")
+    if args.smoke:
+        fails = smoke_verdict(payload, args.p99_budget_ms)
+        for msg in fails:
+            print(f"SMOKE FAIL: {msg}")
+        if fails:
+            return 1
+        print("smoke: SLO contract holds (no losses; sheds only over "
+              "capacity; p99 in budget)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,34 +1,53 @@
-"""CI perf gate: compare a fresh BENCH_service.json against a baseline.
+"""CI perf gate: compare fresh bench artifacts against a baseline.
 
-The bench artifacts became machine-checkable in PR 1/2; this gate is their
-first consumer.  CI runs ``bench_service.py`` on the smoke cell, then:
+The bench artifacts became machine-checkable in PR 1/2; this gate is
+their first consumer.  CI runs ``bench_service.py`` on the smoke cell
+and ``bench_load.py --smoke`` on the serving tier, then:
 
     python benchmarks/check_regression.py BENCH_service.json \\
-        --baseline benchmarks/baselines/ci_cpu.json
+        --load BENCH_load.json --baseline benchmarks/baselines/ci_cpu.json
 
-A metric *fails* when it drops more than ``tolerance`` (default from the
-baseline file, +-30%) below the checked-in value — the paper's lesson is
-that scheduling regressions show up as throughput collapse, so the gate
-watches sims/sec.  Runs *above* the band only warn (faster CI hardware is
-not a bug) with a hint to refresh the baseline via ``--update``.
+Metrics are **direction-aware**: throughput (``*_sims_per_sec``) fails
+when it drops below the band, latency (``load.*_ms``, gated on the
+bottom offered-load point, the uncontended-path SLO) fails when it rises
+above it — the paper's lesson is that scheduling regressions show up as
+throughput collapse *and* latency growth, and a gate watching only one
+of them misses half the knee.  Runs on the good side of the band only
+warn (faster CI hardware is not a bug) with a hint to refresh the
+baseline via ``--update``, which rewrites it from every artifact passed.
+
+Either artifact may be omitted; its metrics report ``skip`` instead of
+failing, so the service gate and the load gate can run in separate CI
+jobs against the one combined baseline.
 
 Only single-device metrics are gated: the sharded sweep's faked devices
 share one physical CPU, so its wall clock measures host contention, not
 code regressions — those rows ride along as artifacts instead.
 """
+
 from __future__ import annotations
 
 import argparse
 import json
 import sys
 
+
 def _overlap_row(d: dict, superstep: int, depth: int) -> dict:
-    rows = [r for r in d["overlap"]["rows"]
-            if r["superstep"] == superstep and r["pipeline_depth"] == depth]
+    rows = [
+        r
+        for r in d["overlap"]["rows"]
+        if r["superstep"] == superstep and r["pipeline_depth"] == depth
+    ]
     return rows[0]
 
 
-# gated metrics: name -> extractor over the BENCH_service.json payload
+def _load_point(d: dict, which: int) -> dict:
+    """One offered-load point of a BENCH_load.json payload (0 = bottom)."""
+    return d["points"][which]
+
+
+# gated metrics: name -> extractor over the BENCH_service.json payload.
+# All are throughputs (higher is better).
 METRICS = {
     "reference.arena_sims_per_sec": lambda d: d["reference"]["arena_sims_per_sec"],
     "reference.service_sims_per_sec": lambda d: d["reference"]["service_sims_per_sec"],
@@ -37,51 +56,95 @@ METRICS = {
     "overlap.pipelined_sims_per_sec": lambda d: _overlap_row(d, 2, 4)["sims_per_sec"],
 }
 
+# gated serving-tier metrics over BENCH_load.json: client-observed latency
+# at the *bottom* (uncontended) offered-load point.  Lower is better — the
+# gate direction flips relative to the throughput metrics.
+LOAD_METRICS = {
+    "load.p50_ms": lambda d: _load_point(d, 0)["p50_ms"],
+    "load.p99_ms": lambda d: _load_point(d, 0)["p99_ms"],
+}
 
-def extract(payload: dict) -> dict:
-    return {name: float(fn(payload)) for name, fn in METRICS.items()}
+
+def lower_is_better(name: str) -> bool:
+    """Gate direction by metric name: latencies fail upward."""
+    return name.endswith("_ms")
+
+
+def extract(payload: dict, metrics: dict) -> dict:
+    """Pull one artifact's gated metric values."""
+    return {name: float(fn(payload)) for name, fn in metrics.items()}
 
 
 def check(current: dict, baseline: dict, tolerance: float) -> int:
-    """Print a verdict per metric; return the number of regressions."""
+    """Print a verdict table; return the number of regressions."""
     failures = 0
-    for name, base in baseline["metrics"].items():
+    rows = []
+    for name, base in sorted(baseline["metrics"].items()):
         if name not in current:
-            print(f"FAIL {name}: metric missing from current run")
-            failures += 1
+            rows.append(("skip", name, None, base, "artifact not provided"))
             continue
         cur = current[name]
         ratio = cur / base
         lo, hi = 1.0 - tolerance, 1.0 + tolerance
-        if ratio < lo:
-            print(f"FAIL {name}: {cur:.0f} vs baseline {base:.0f} ({ratio:.2f}x < {lo:.2f}x)")
-            failures += 1
-        elif ratio > hi:
-            print(f"WARN {name}: {cur:.0f} vs baseline {base:.0f} ({ratio:.2f}x > {hi:.2f}x)")
-            print("     faster than the baseline band; refresh it with --update")
+        if lower_is_better(name):
+            bad, good = ratio > hi, ratio < lo
+            note_bad = f"{ratio:.2f}x > {hi:.2f}x (latency grew)"
+            note_good = "below the band; refresh with --update"
         else:
-            print(f"ok   {name}: {cur:.0f} vs baseline {base:.0f} ({ratio:.2f}x)")
+            bad, good = ratio < lo, ratio > hi
+            note_bad = f"{ratio:.2f}x < {lo:.2f}x (throughput fell)"
+            note_good = "above the band; refresh with --update"
+        if bad:
+            rows.append(("FAIL", name, cur, base, note_bad))
+            failures += 1
+        elif good:
+            rows.append(("WARN", name, cur, base, note_good))
+        else:
+            rows.append(("ok", name, cur, base, f"{ratio:.2f}x"))
+    width = max(len(r[1]) for r in rows) if rows else 0
+    for verdict, name, cur, base, note in rows:
+        cur_s = f"{cur:10.1f}" if cur is not None else " " * 10
+        print(f"{verdict:<4} {name:<{width}} {cur_s} vs {base:10.1f}  {note}")
     return failures
 
 
 def main() -> int:
+    """CLI entry point; exit 1 on any gated regression."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("bench", help="BENCH_service.json from this run")
+    ap.add_argument("bench", nargs="?", default=None, help="BENCH_service.json (optional)")
+    ap.add_argument("--load", default=None, help="BENCH_load.json from this run (optional)")
     ap.add_argument("--baseline", default="benchmarks/baselines/ci_cpu.json")
     ap.add_argument("--tolerance", type=float, default=None, help="override the baseline's band")
     ap.add_argument("--update", action="store_true", help="rewrite the baseline from this run")
     args = ap.parse_args()
+    if args.bench is None and args.load is None:
+        ap.error("pass BENCH_service.json and/or --load BENCH_load.json")
 
-    with open(args.bench) as f:
-        payload = json.load(f)
-    current = extract(payload)
+    current = {}
+    source_schemas = []
+    if args.bench is not None:
+        with open(args.bench) as f:
+            payload = json.load(f)
+        current.update(extract(payload, METRICS))
+        source_schemas.append(payload.get("schema"))
+    if args.load is not None:
+        with open(args.load) as f:
+            load_payload = json.load(f)
+        current.update(extract(load_payload, LOAD_METRICS))
+        source_schemas.append(load_payload.get("schema"))
 
     if args.update:
+        try:
+            with open(args.baseline) as f:
+                merged = dict(json.load(f).get("metrics", {}))
+        except FileNotFoundError:
+            merged = {}
+        merged.update(current)  # keep metrics this run did not produce
         baseline = {
             "schema": "bench_baseline/v1",
-            "source_schema": payload.get("schema"),
+            "source_schema": ", ".join(s for s in source_schemas if s),
             "tolerance": args.tolerance if args.tolerance is not None else 0.3,
-            "metrics": current,
+            "metrics": merged,
         }
         with open(args.baseline, "w") as f:
             json.dump(baseline, f, indent=2, sort_keys=True)
@@ -91,10 +154,13 @@ def main() -> int:
 
     with open(args.baseline) as f:
         baseline = json.load(f)
-    tolerance = args.tolerance if args.tolerance is not None else float(baseline["tolerance"])
+    if args.tolerance is not None:
+        tolerance = args.tolerance
+    else:
+        tolerance = float(baseline["tolerance"])
     failures = check(current, baseline, tolerance)
     if failures:
-        print(f"{failures} metric(s) regressed beyond -{tolerance:.0%}")
+        print(f"{failures} metric(s) regressed beyond the +-{tolerance:.0%} band")
     return 1 if failures else 0
 
 

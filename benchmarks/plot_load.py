@@ -1,0 +1,72 @@
+"""Plot BENCH_load.json: latency percentiles and shed rate vs offered load.
+
+The serving-tier analogue of the paper's threads-vs-performance figure:
+x = offered requests/s (log), left y = client p50/p95/p99 latency (log),
+right y = explicit shed rate.  Requires matplotlib (the bench-nightly CI
+job installs it; the bench itself never needs it).
+
+    PYTHONPATH=src python benchmarks/plot_load.py BENCH_load.json \
+        [--out BENCH_load.png]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    """CLI entry point."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench", help="BENCH_load.json to plot")
+    ap.add_argument("--out", default="BENCH_load.png")
+    args = ap.parse_args()
+    try:
+        import matplotlib
+        matplotlib.use("Agg")
+        import matplotlib.pyplot as plt
+    except ImportError:
+        print("matplotlib not available; skipping the figure",
+              file=sys.stderr)
+        return 0
+
+    with open(args.bench) as f:
+        payload = json.load(f)
+    pts = [p for p in payload["points"] if "p50_ms" in p]
+    rps = [p["offered_rps"] for p in pts]
+
+    fig, ax = plt.subplots(figsize=(7, 4.5))
+    for q, style in (("p50_ms", "o-"), ("p95_ms", "s--"), ("p99_ms", "^:")):
+        ax.plot(rps, [p[q] for p in pts], style, label=q.replace("_ms", ""))
+    ax.set_xscale("log")
+    ax.set_yscale("log")
+    ax.set_xlabel("offered load (requests/s)")
+    ax.set_ylabel("client latency (ms)")
+    ax.grid(True, which="both", alpha=0.3)
+
+    ax2 = ax.twinx()
+    all_pts = payload["points"]
+    ax2.plot([p["offered_rps"] for p in all_pts],
+             [p["shed_rate"] for p in all_pts],
+             "x-", color="tab:red", alpha=0.6, label="shed rate")
+    ax2.set_ylabel("shed rate", color="tab:red")
+    ax2.set_ylim(0, 1)
+
+    cap = payload.get("calibration", {}).get("capacity_rps")
+    if cap:
+        ax.axvline(cap, color="gray", linestyle=":", alpha=0.7)
+        ax.annotate(f"capacity ~{cap:.1f} rps", (cap, ax.get_ylim()[1]),
+                    fontsize=8, ha="right", va="top", rotation=90)
+    ax.legend(loc="upper left", fontsize=9)
+    ax.set_title("HTTP front door: latency vs offered load "
+                 f"({payload['config']['board']}x"
+                 f"{payload['config']['board']}, "
+                 f"sims {payload['config']['sims']})")
+    fig.tight_layout()
+    fig.savefig(args.out, dpi=120)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -147,7 +147,14 @@ class SearchResult(NamedTuple):
 
 
 class _Pending(NamedTuple):
-    """Host-buffered submission awaiting flush()."""
+    """Host-buffered submission awaiting flush().
+
+    ``deadline`` is host-only metadata (absolute ``time.monotonic``
+    seconds, ``None`` = no SLO): it never reaches the device, so carrying
+    it cannot retrace the dispatch — late requests are dropped *before*
+    they flush (:meth:`SearchService.shed_expired`), and deadline-driven
+    budget cuts ride the already-traced ``sims`` columns.
+    """
     state: GoState
     key: np.ndarray
     lane: int
@@ -156,6 +163,7 @@ class _Pending(NamedTuple):
     vl: tuple             # (A-side, B-side) virtual-loss weights
     ticket: int
     shard: int
+    deadline: Optional[float] = None
 
 
 class _Slots(NamedTuple):
@@ -448,6 +456,7 @@ class SearchService:
         self._assigned = {}           # ticket -> (request class, shard)
         self._submitted = {LANE_ARENA: 0, LANE_SERVE: 0, LANE_TOURNAMENT: 0}
         self._completed = dict(self._submitted)
+        self._shed = dict(self._submitted)
         self.host_syncs = 0           # host<->device round-trips (flush+poll)
         self.host_blocked_s = 0.0     # time spent waiting on the device
         self.last_drain_stats = {}    # DispatchPipeline.stats() of last drain
@@ -550,19 +559,28 @@ class SearchService:
                             key, lane, sims, c_uct, virtual_loss)
 
     def submit_serve(self, state: GoState, key=None, sims=0,
-                     c_uct=None, virtual_loss=None) -> int:
+                     c_uct=None, virtual_loss=None,
+                     deadline: Optional[float] = None) -> int:
         """Queue one external best-move query for ``state``; returns its
         ticket.  The single search always runs under player A with the
         request key, so the result is a pure function of
         ``(state, key, sims, c_uct, virtual_loss)`` — placement- and
         batch-mate-independent.  ``c_uct`` / ``virtual_loss`` are traced
         per-query strength knobs defaulting to player A's config.
+
+        ``deadline`` (absolute ``time.monotonic`` seconds, ``None`` = no
+        SLO) is host-only metadata consumed by :meth:`shed_expired`: a
+        query whose deadline passes while it is still host-buffered is
+        shed instead of flushed.  It never reaches the device, so it can
+        never retrace the dispatch.
         """
         return self._submit(self._pending_serve, state, key,
-                            LANE_SERVE, sims, c_uct, virtual_loss)
+                            LANE_SERVE, sims, c_uct, virtual_loss,
+                            deadline=deadline)
 
     def _submit(self, pending: List[_Pending], state: GoState, key,
-                lane: int, sims, c_uct, virtual_loss) -> int:
+                lane: int, sims, c_uct, virtual_loss,
+                deadline: Optional[float] = None) -> int:
         cls = CLS_SERVE if lane == LANE_SERVE else CLS_GAME
         cap = (self.serve_capacity if cls == CLS_SERVE
                else self.game_capacity)
@@ -580,7 +598,8 @@ class SearchService:
         self._next_ticket += 1
         pending.append(_Pending(state=state, key=self._draw_key(key),
                                 lane=lane, sims=sims, c_uct=cu, vl=vl,
-                                ticket=ticket, shard=shard))
+                                ticket=ticket, shard=shard,
+                                deadline=deadline))
         self._assigned[ticket] = (cls, shard)
         self._submitted[lane] += 1
         return ticket
@@ -1088,18 +1107,58 @@ class SearchService:
         steps = np.atleast_1d(np.asarray(steps)).astype(np.float64)
         return occ / np.maximum(steps * self._shard_slots, 1.0)
 
+    def shed_expired(self, now: Optional[float] = None) -> List[int]:
+        """Drop expired host-pending serve requests before they flush.
+
+        The load-shedding half of the serving tier's deadline contract:
+        a query whose ``deadline`` (set at :meth:`submit_serve`) has
+        passed is removed from the host buffer, its placement slot is
+        released, and its ticket is returned — it never reaches the
+        device, so a shed request costs zero device work.  Requests
+        already flushed to the device queues are past the point of no
+        return and always complete (the front door records those as
+        deadline *misses*, not sheds).  Shed tickets count into the
+        accounting identity ``submitted == completed + in_flight +
+        shed`` (see :meth:`accounting`); tests/test_server.py pins the
+        pool staying consistent across the shed path.
+        """
+        now = time.monotonic() if now is None else now
+        shed: List[int] = []
+        keep: List[_Pending] = []
+        for p in self._pending_serve:
+            if p.deadline is not None and now >= p.deadline:
+                cls, shard = self._assigned.pop(p.ticket)
+                self._placement.release(cls, shard)
+                self._shed[p.lane] += 1
+                shed.append(p.ticket)
+            else:
+                keep.append(p)
+        self._pending_serve[:] = keep
+        return shed
+
+    @property
+    def shed_total(self) -> int:
+        """Requests explicitly shed (never dispatched) since reset()."""
+        return sum(self._shed.values())
+
     @property
     def outstanding(self) -> int:
-        """Submitted (including still-pending) but not yet completed."""
-        return sum(self._submitted.values()) - sum(self._completed.values())
+        """Submitted (including still-pending) but neither completed
+        nor shed."""
+        return (sum(self._submitted.values())
+                - sum(self._completed.values())
+                - sum(self._shed.values()))
 
     def accounting(self) -> tuple:
         """``(submitted, completed, in_flight)`` request totals.
 
         ``in_flight`` counts tickets between submission and poll (host
-        pending + device queued/active + landed-but-unpolled); the
-        pipeline asserts ``submitted == completed + in_flight`` at every
-        reconcile (tests/test_pipeline.py pins it).
+        pending + device queued/active + landed-but-unpolled); shed
+        requests (see :meth:`shed_expired`) leave ``in_flight``
+        immediately, so the full identity is ``submitted == completed +
+        in_flight + shed_total`` — the pipeline asserts it at every
+        reconcile (tests/test_pipeline.py and tests/test_server.py pin
+        it).
         """
         return (sum(self._submitted.values()),
                 sum(self._completed.values()),

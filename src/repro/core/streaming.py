@@ -22,8 +22,9 @@ Contracts:
   ``service.SearchResult``): a drain's result *set* is depth-invariant,
   and for submit-then-drain workloads the result *sequence* is too,
   because the device program never depends on host read timing;
-* at every reconcile ``submitted == completed + in_flight`` — the
-  pipeline checks the service's accounting and raises on drift;
+* at every reconcile ``submitted == completed + in_flight + shed`` — the
+  pipeline checks the service's accounting (including requests the
+  serving tier shed before they flushed) and raises on drift;
 * a ``service.reset()`` invalidates the window: stale views are evicted,
   never polled.
 """
@@ -113,11 +114,13 @@ class DispatchPipeline:
         out = self.service.poll(view=head if self.depth > 1 else None)
         self.reconciles += 1
         submitted, completed, in_flight = self.service.accounting()
-        if submitted != completed + in_flight:
+        shed = self.service.shed_total
+        if submitted != completed + in_flight + shed:
             raise RuntimeError(
                 f"in-flight accounting drifted at reconcile "
                 f"{self.reconciles}: {submitted} submitted != "
-                f"{completed} completed + {in_flight} in flight")
+                f"{completed} completed + {in_flight} in flight + "
+                f"{shed} shed")
         return out
 
     def _evict_stale(self) -> None:

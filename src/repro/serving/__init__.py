@@ -1,5 +1,10 @@
 from repro.serving.engine import ServeEngine, make_prefill_fn, make_decode_fn
-from repro.serving.go_service import GoService, MoveResult
+from repro.serving.go_service import (DeadlineExceededError, DeadlinePolicy,
+                                      GoService, MoveResult,
+                                      OverCapacityError)
+from repro.serving.metrics import LatencyHistogram, ServingMetrics
 
 __all__ = ["ServeEngine", "make_prefill_fn", "make_decode_fn",
-           "GoService", "MoveResult"]
+           "GoService", "MoveResult", "DeadlinePolicy",
+           "DeadlineExceededError", "OverCapacityError",
+           "LatencyHistogram", "ServingMetrics"]

@@ -18,6 +18,25 @@ player, and the search consumes the request key directly, so results do
 not depend on slot placement or on what else shares the batch
 (tests/test_service.py and tests/test_multiplex.py pin this).
 
+SLO discipline (the serving-tier front door contract, used by
+:mod:`repro.serving.server`):
+
+* **admission control** — :meth:`submit` rejects with
+  :class:`OverCapacityError` when the bucket's queue depth crosses
+  ``admission_limit`` (explicit load shedding, never silent loss);
+* **deadlines** — ``deadline_ms`` threads a per-request SLO through
+  submission: an unmeetable deadline is shed up front
+  (:class:`DeadlineExceededError`), a tight one is *downgraded* — its
+  traced ``sims`` budget is cut, which is free since budgets are traced
+  (no recompile) — and a request that expires while still host-buffered
+  is shed at the next :meth:`poll` (``SearchService.shed_expired``).
+  Requests already flushed to the device always complete; finishing
+  late only bumps the ``deadline_miss`` counter;
+* **observability** — every request's queue/dispatch/total latency
+  streams into :class:`~repro.serving.metrics.ServingMetrics`
+  (p50/p95/p99 histograms + shed/downgrade counters), the payload the
+  HTTP ``/metrics`` endpoint and benchmarks/bench_load.py read.
+
 Typical use::
 
     svc = GoService(board_size=9, komi=6.0, max_sims=256)
@@ -27,6 +46,8 @@ Typical use::
 """
 from __future__ import annotations
 
+import math
+import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import jax.numpy as jnp
@@ -37,6 +58,16 @@ from repro.core.mcts import MCTS
 from repro.core.service import SearchService, pad_slots
 from repro.core.streaming import DispatchPipeline
 from repro.go.board import BLACK, NO_KO, GoEngine, GoState
+from repro.serving.metrics import ServingMetrics
+
+
+class OverCapacityError(RuntimeError):
+    """Request shed at admission: bucket queue depth over the limit."""
+
+
+class DeadlineExceededError(TimeoutError):
+    """Request shed for its deadline: unmeetable at admission, or it
+    expired while still host-buffered (never dispatched)."""
 
 
 class MoveResult(NamedTuple):
@@ -46,6 +77,87 @@ class MoveResult(NamedTuple):
     coord: Optional[Tuple[int, int]]   # (row, col), None for pass
     is_pass: bool
     root_visits: np.ndarray   # f32[A] root visit distribution
+    sims_granted: int = 0     # playout budget actually dispatched (0 = full)
+    downgraded: bool = False  # True when a deadline cut the budget
+    latency_s: float = 0.0    # submit -> completion wall time
+
+
+class DeadlinePolicy:
+    """Admit / downgrade / shed decision for one deadline'd query.
+
+    Linear cost model: a query admitted at queue depth ``d`` into a
+    ``slots``-wide bucket waits ``waves = ceil((d + 1) / slots)`` search
+    waves, each costing ``base_s + sim_cost_s * sims`` — so
+
+        est(sims, depth) = base_s + sim_cost_s * sims * waves.
+
+    :meth:`decide` compares the estimate against the request's remaining
+    budget: full ``sims`` fits -> ``admit``; a cut budget of at least
+    ``floor_sims`` fits -> ``downgrade`` (free: the budget is a traced
+    dispatch input, PR 2); otherwise -> ``shed``.  ``observe`` keeps
+    ``sim_cost_s`` calibrated by EWMA over completed requests, so the
+    boundary tracks the machine; construct with ``calibrate=False`` for
+    a fixed, deterministic policy (the unit tests do).
+    """
+
+    def __init__(self, base_s: float = 0.02, sim_cost_s: float = 1e-3,
+                 floor_sims: int = 4, slots: int = 8,
+                 calibrate: bool = True, ewma: float = 0.2):
+        if floor_sims < 1:
+            raise ValueError(f"floor_sims must be >= 1, got {floor_sims}")
+        self.base_s = float(base_s)
+        self.sim_cost_s = float(sim_cost_s)
+        self.floor_sims = int(floor_sims)
+        self.slots = max(1, int(slots))
+        self.calibrate = calibrate
+        self.ewma = float(ewma)
+
+    def _waves(self, depth: int) -> int:
+        return max(1, math.ceil((depth + 1) / self.slots))
+
+    def estimate_s(self, sims: int, depth: int) -> float:
+        """Predicted completion latency at the given queue depth."""
+        return self.base_s + self.sim_cost_s * sims * self._waves(depth)
+
+    def decide(self, remaining_s: Optional[float], depth: int,
+               full_sims: int) -> Tuple[str, int]:
+        """``("admit"|"downgrade"|"shed", granted_sims)`` for one query."""
+        if remaining_s is None:
+            return "admit", full_sims
+        if self.estimate_s(full_sims, depth) <= remaining_s:
+            return "admit", full_sims
+        per_sim = self.sim_cost_s * self._waves(depth)
+        fit = int((remaining_s - self.base_s) / max(per_sim, 1e-12))
+        if fit >= self.floor_sims:
+            return "downgrade", min(fit, full_sims)
+        return "shed", 0
+
+    def observe(self, latency_s: float, sims: int, depth: int) -> None:
+        """EWMA-calibrate ``sim_cost_s`` from one completed request."""
+        if not self.calibrate or sims < 1:
+            return
+        per_sim = max(latency_s - self.base_s, 0.0) / (
+            sims * self._waves(depth))
+        self.sim_cost_s += self.ewma * (per_sim - self.sim_cost_s)
+
+
+class _Ticket:
+    """Host-side lifecycle record of one submitted query."""
+
+    __slots__ = ("komi", "inner", "t_submit", "t_flush", "deadline",
+                 "sims_granted", "downgraded", "depth")
+
+    def __init__(self, komi: float, inner: int, t_submit: float,
+                 deadline: Optional[float], sims_granted: int,
+                 downgraded: bool, depth: int):
+        self.komi = komi
+        self.inner = inner              # SearchService ticket
+        self.t_submit = t_submit
+        self.t_flush: Optional[float] = None
+        self.deadline = deadline        # absolute monotonic, None = no SLO
+        self.sims_granted = sims_granted
+        self.downgraded = downgraded
+        self.depth = depth              # bucket queue depth at admission
 
 
 class GoService:
@@ -62,6 +174,15 @@ class GoService:
     awaiting each one — queued queries, result unpacking, and placement
     overlap with device search.  Answers are unchanged at any depth (the
     serve RNG contract makes them pure functions of the query).
+
+    ``admission_limit`` (0 = the bucket queue capacity) bounds each
+    bucket's outstanding requests — :meth:`submit` sheds past it — and
+    ``deadline_policy`` decides admit/downgrade/shed for deadline'd
+    queries (see :class:`DeadlinePolicy`; the default self-calibrates).
+    Neither knob touches the device: shedding happens before flush and
+    downgrading rides the traced ``sims`` budget, so SLO enforcement
+    adds **zero** new jit traces (tests/test_server.py asserts the
+    compile count).
     """
 
     def __init__(self, board_size: int = 9, komi: float = 6.0,
@@ -69,6 +190,9 @@ class GoService:
                  max_nodes: int = 0, superstep: int = 2, seed: int = 0,
                  queue_capacity: int = 0, mesh=None,
                  placement: str = "round_robin", pipeline_depth: int = 1,
+                 admission_limit: int = 0,
+                 deadline_policy: Optional[DeadlinePolicy] = None,
+                 metrics: Optional[ServingMetrics] = None,
                  **mcts_kw):
         self.board_size = int(board_size)
         self.default_komi = float(komi)
@@ -83,11 +207,17 @@ class GoService:
         self.seed = seed
         self.queue_capacity = queue_capacity or 4 * self.slots
         self.pipeline_depth = int(pipeline_depth)
+        self.admission_limit = int(admission_limit) or self.queue_capacity
+        self.deadline_policy = deadline_policy or DeadlinePolicy(
+            slots=self.slots)
+        self.metrics = metrics or ServingMetrics()
         self.mcts_kw = mcts_kw
         self._buckets: Dict[float, SearchService] = {}
         self._pipes: Dict[float, DispatchPipeline] = {}  # komi -> pipeline
-        self._tickets: Dict[int, Tuple[float, int]] = {}  # ticket -> bucket
+        self._tickets: Dict[int, _Ticket] = {}
         self._done: Dict[int, MoveResult] = {}
+        self._shed_tickets: Dict[int, str] = {}    # ticket -> reason
+        self._shed_new: List[int] = []             # shed since last pop_shed
         self._next_ticket = 0
         self._rng = np.random.default_rng(seed)
         self._bucket(self.default_komi)       # compile the default bucket
@@ -122,6 +252,11 @@ class GoService:
         """Total time spent waiting on devices across all buckets."""
         return sum(b.host_blocked_s for b in self._buckets.values())
 
+    @property
+    def outstanding(self) -> int:
+        """Submitted but neither answered nor shed, across all buckets."""
+        return sum(b.outstanding for b in self._buckets.values())
+
     def shard_occupancy(self, komi: Optional[float] = None) -> np.ndarray:
         """Per-shard occupancy of one bucket's pool (default bucket)."""
         komi = self.default_komi if komi is None else float(komi)
@@ -145,7 +280,8 @@ class GoService:
     def submit(self, board, to_play: int = BLACK,
                komi: Optional[float] = None, sims: int = 0,
                key=None, c_uct: Optional[float] = None,
-               virtual_loss: Optional[float] = None) -> int:
+               virtual_loss: Optional[float] = None,
+               deadline_ms: Optional[float] = None) -> int:
         """Queue one best-move query; returns a ticket for :meth:`result`.
 
         Traced per-query knobs (no recompilation across values): ``sims``
@@ -155,42 +291,116 @@ class GoService:
         them).  ``komi`` is *static* — a new value opens a new bucket and
         compiles.  ``key`` fixes the search RNG for reproducible answers
         (default: drawn from the service chain).
+
+        SLO path: admission is queue-depth gated — past
+        ``admission_limit`` outstanding requests in the bucket the query
+        is shed with :class:`OverCapacityError` (counted
+        ``shed_overload``).  ``deadline_ms`` (relative, wall) runs the
+        :class:`DeadlinePolicy`: ``admit`` keeps the full budget,
+        ``downgrade`` cuts the traced ``sims`` (counted; visible on the
+        result), ``shed`` raises :class:`DeadlineExceededError` (counted
+        ``shed_deadline``).  With ``deadline_ms=None`` the submission is
+        bit-identical to the pre-SLO path.
         """
         komi = self.default_komi if komi is None else float(komi)
         svc = self._bucket(komi)
+        now = time.monotonic()
+        depth = svc.outstanding
+        if depth >= self.admission_limit:
+            self.metrics.bump("shed_overload")
+            raise OverCapacityError(
+                f"bucket komi={komi} over capacity: {depth} outstanding "
+                f">= admission limit {self.admission_limit}")
+        full = int(sims) if 0 < int(sims) <= self.max_sims else self.max_sims
+        deadline = None
+        granted, downgraded = full, False
+        if deadline_ms is not None:
+            remaining = float(deadline_ms) / 1e3
+            deadline = now + remaining
+            verdict, granted = self.deadline_policy.decide(
+                remaining, depth, full)
+            if verdict == "shed":
+                self.metrics.bump("shed_deadline")
+                floor_est = self.deadline_policy.estimate_s(
+                    self.deadline_policy.floor_sims, depth)
+                raise DeadlineExceededError(
+                    f"deadline {deadline_ms:.0f}ms unmeetable at queue "
+                    f"depth {depth} (~{floor_est * 1e3:.0f}ms needed at "
+                    "the floor budget)")
+            downgraded = verdict == "downgrade"
+            if downgraded:
+                self.metrics.bump("downgraded")
         if key is None:
             key = self._rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
         state = self._to_state(board, to_play, svc.engine)
-        inner = svc.submit_serve(state, key=key, sims=int(sims),
-                                 c_uct=c_uct, virtual_loss=virtual_loss)
+        inner = svc.submit_serve(state, key=key, sims=granted,
+                                 c_uct=c_uct, virtual_loss=virtual_loss,
+                                 deadline=deadline)
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._tickets[ticket] = (komi, inner)
+        self._tickets[ticket] = _Ticket(komi, inner, now, deadline,
+                                        granted, downgraded, depth)
+        self.metrics.bump("submitted")
         return ticket
 
     def flush(self) -> None:
         """Push every bucket's queued submissions to its device queues."""
         for svc in self._buckets.values():
             svc.flush()
+        self._mark_flushed(time.monotonic())
+
+    def _mark_flushed(self, now: float,
+                      komi: Optional[float] = None) -> None:
+        """Stamp queue-exit time on tickets that just left the host."""
+        for t in self._tickets.values():
+            if t.t_flush is None and (komi is None or t.komi == komi):
+                t.t_flush = now
+
+    def _shed_ticket(self, ticket: int, reason: str) -> None:
+        self._shed_tickets[ticket] = reason
+        self._shed_new.append(ticket)
+        self.metrics.bump("shed_deadline")
+
+    def pop_shed(self) -> Dict[int, str]:
+        """Drain tickets shed since the last call (``ticket -> reason``).
+
+        The HTTP front door's pump loop uses this to fail the matching
+        waiters; :meth:`result` reports the same tickets by raising
+        :class:`DeadlineExceededError`.
+        """
+        out = {t: self._shed_tickets[t] for t in self._shed_new}
+        self._shed_new.clear()
+        return out
 
     def poll(self) -> List[int]:
         """Pump every bucket's pipeline; returns newly done tickets.
 
-        Each call flushes queued queries, tops the bucket's in-flight
-        window up to ``pipeline_depth`` supersteps, and reconciles the
-        oldest one — at depth 1 exactly the old flush -> dispatch ->
-        poll superstep; deeper windows leave the device running while
-        the host unpacks answers.
+        Each call sheds expired host-buffered queries
+        (``SearchService.shed_expired`` — they never reach the device),
+        flushes the rest, tops the bucket's in-flight window up to
+        ``pipeline_depth`` supersteps, and reconciles the oldest one —
+        at depth 1 exactly the old flush -> dispatch -> poll superstep;
+        deeper windows leave the device running while the host unpacks
+        answers.  Completed requests land their queue/dispatch/total
+        latencies in :attr:`metrics` and recalibrate the deadline
+        policy.
         """
         done = []
-        inner_to_ticket = {(k, inn): t
-                           for t, (k, inn) in self._tickets.items()
-                           if t not in self._done}
+        inner_to_ticket = {(t.komi, t.inner): ticket
+                           for ticket, t in self._tickets.items()
+                           if ticket not in self._done
+                           and ticket not in self._shed_tickets}
         for komi, svc in self._buckets.items():
             if svc.outstanding == 0:
                 continue
+            now = time.monotonic()
+            for inner in svc.shed_expired(now):
+                ticket = inner_to_ticket.pop((komi, inner), None)
+                if ticket is not None:
+                    self._shed_ticket(ticket, "deadline")
             pipe = self._pipes[komi]
             pipe.pump()
+            self._mark_flushed(time.monotonic(), komi=komi)
             for rec in pipe.reconcile():
                 ticket = inner_to_ticket.get((komi, rec.ticket))
                 if ticket is None:
@@ -200,21 +410,56 @@ class GoService:
                 coord = (None if is_pass else
                          (rec.action // self.board_size,
                           rec.action % self.board_size))
+                t = self._tickets[ticket]
+                t_done = time.monotonic()
+                total = t_done - t.t_submit
+                queue = (t.t_flush - t.t_submit
+                         if t.t_flush is not None else None)
+                dispatch = (t_done - t.t_flush
+                            if t.t_flush is not None else None)
+                missed = t.deadline is not None and t_done > t.deadline
+                self.metrics.observe(queue, dispatch, total,
+                                     deadline_missed=missed)
+                self.deadline_policy.observe(total, t.sims_granted, t.depth)
                 self._done[ticket] = MoveResult(
                     ticket=ticket, action=rec.action, coord=coord,
-                    is_pass=is_pass, root_visits=rec.root_visits)
+                    is_pass=is_pass, root_visits=rec.root_visits,
+                    sims_granted=t.sims_granted, downgraded=t.downgraded,
+                    latency_s=total)
                 done.append(ticket)
         return done
 
     def result(self, ticket: int, wait: bool = True,
+               timeout_s: Optional[float] = None,
                max_polls: int = 10_000) -> Optional[MoveResult]:
-        """Fetch a ticket's move; blocks (dispatching) unless ``wait=False``."""
+        """Fetch a ticket's move; blocks (dispatching) unless ``wait=False``.
+
+        ``timeout_s`` bounds the blocking wait in wall time and raises
+        ``TimeoutError`` past it — without a timeout a lost ticket could
+        spin the poll loop for ``max_polls`` rounds before the fallback
+        ``RuntimeError``, which is the hang the HTTP server must never
+        inherit.  A ticket shed for its deadline raises
+        :class:`DeadlineExceededError`; an unknown one raises
+        ``KeyError``.
+        """
         if ticket not in self._tickets:
             raise KeyError(f"unknown ticket {ticket}")
+        t0 = time.monotonic()
         polls = 0
         while ticket not in self._done:
+            if ticket in self._shed_tickets:
+                reason = self._shed_tickets.pop(ticket)
+                del self._tickets[ticket]
+                raise DeadlineExceededError(
+                    f"ticket {ticket} was shed ({reason}) before dispatch")
             if not wait:
                 return None
+            if timeout_s is not None \
+                    and time.monotonic() - t0 > timeout_s:
+                raise TimeoutError(
+                    f"ticket {ticket} not done within {timeout_s:.3f}s "
+                    f"({polls} polls; the bucket may be overloaded — "
+                    "raise timeout_s or shed load)")
             if polls >= max_polls:
                 raise RuntimeError(f"ticket {ticket} not done after "
                                    f"{polls} polls")
@@ -228,15 +473,21 @@ class GoService:
     def best_move(self, board, to_play: int = BLACK,
                   komi: Optional[float] = None, sims: int = 0,
                   key=None, c_uct: Optional[float] = None,
-                  virtual_loss: Optional[float] = None) -> MoveResult:
+                  virtual_loss: Optional[float] = None,
+                  deadline_ms: Optional[float] = None,
+                  timeout_s: Optional[float] = None) -> MoveResult:
         """Blocking single query: board in, move out.
 
         ``sims`` / ``c_uct`` / ``virtual_loss`` are the traced per-query
-        knobs of :meth:`submit` (they never recompile the bucket).
+        knobs of :meth:`submit` (they never recompile the bucket);
+        ``deadline_ms`` engages the SLO path (downgrade or shed) and
+        ``timeout_s`` bounds the blocking wait.
         """
         return self.result(self.submit(board, to_play, komi, sims, key,
                                        c_uct=c_uct,
-                                       virtual_loss=virtual_loss))
+                                       virtual_loss=virtual_loss,
+                                       deadline_ms=deadline_ms),
+                           timeout_s=timeout_s)
 
     def best_move_batch(self, boards, to_play: int = BLACK,
                         komi: Optional[float] = None,

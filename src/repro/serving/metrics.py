@@ -1,0 +1,153 @@
+"""Latency observability for the serving tier: histograms + counters.
+
+The paper's thesis is that *throughput* hides the failure mode — the
+32-to-240-thread knee only shows in how long individual searches wait.
+This module is the user-visible half of that lesson: every request
+through :class:`~repro.serving.go_service.GoService` (and therefore the
+HTTP front door, :mod:`repro.serving.server`) is timestamped at
+submission, flush, and completion, and the deltas stream into
+log-bucketed histograms whose p50/p95/p99 are the serving tier's health
+metrics — `BENCH_load.json` plots them against offered load, mirroring
+the paper's threads-vs-performance figure with arrival rate on the
+x-axis.
+
+Everything here is pure host-side bookkeeping (numpy counters, no JAX),
+so recording a sample can never retrace or even touch the device.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class LatencyHistogram:
+    """Streaming log-bucketed latency histogram with percentile reads.
+
+    Buckets are geometric: edge ``i`` is ``lo_s * growth**i``, so the
+    relative resolution of any percentile is bounded by ``growth - 1``
+    (~7% at the default) regardless of how many samples stream through —
+    constant memory, O(1) record, O(buckets) percentile.  Samples below
+    ``lo_s`` clamp into the first bucket and samples above ``hi_s`` into
+    the last (the last bucket's width absorbs outliers; ``max_s`` is
+    kept exactly so the clamp is visible).  tests/test_server.py pins
+    the percentile math against ``numpy.percentile`` on a recorded
+    trace, within the bucket-resolution bound.
+    """
+
+    def __init__(self, lo_s: float = 1e-4, hi_s: float = 600.0,
+                 growth: float = 1.07):
+        if not (lo_s > 0 and hi_s > lo_s and growth > 1):
+            raise ValueError(
+                f"need 0 < lo_s < hi_s and growth > 1, got "
+                f"({lo_s}, {hi_s}, {growth})")
+        self.growth = growth
+        n = int(np.ceil(np.log(hi_s / lo_s) / np.log(growth))) + 1
+        self.edges = lo_s * growth ** np.arange(n + 1)   # n buckets
+        self.counts = np.zeros(n, np.int64)
+        self.count = 0
+        self.sum_s = 0.0
+        self.max_s = 0.0
+
+    def record(self, value_s: float) -> None:
+        """Add one latency sample (seconds)."""
+        v = float(value_s)
+        i = int(np.searchsorted(self.edges, v, side="right")) - 1
+        self.counts[min(max(i, 0), len(self.counts) - 1)] += 1
+        self.count += 1
+        self.sum_s += v
+        self.max_s = max(self.max_s, v)
+
+    def percentile(self, q: float) -> float:
+        """The ``q``-th percentile (seconds), interpolated in-bucket.
+
+        Matches ``numpy.percentile``'s linear interpolation up to the
+        geometric bucket resolution; 0.0 when no samples were recorded.
+        """
+        if self.count == 0:
+            return 0.0
+        # numpy's linear rule: rank q/100 * (n-1) into the sorted sample
+        target = q / 100.0 * (self.count - 1)
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            # samples in this bucket occupy sorted ranks [cum, cum+c)
+            if target < cum + c:
+                frac = (target - cum + 0.5) / c     # mid-rank within bucket
+                frac = min(max(frac, 0.0), 1.0)
+                lo, hi = self.edges[i], min(self.edges[i + 1], self.max_s)
+                hi = max(hi, lo)
+                return float(lo + frac * (hi - lo))
+            cum += c
+        return self.max_s
+
+    def snapshot(self) -> Dict[str, float]:
+        """Counters + p50/p95/p99 in milliseconds (the /metrics shape)."""
+        return {
+            "count": int(self.count),
+            "sum_ms": self.sum_s * 1e3,
+            "mean_ms": (self.sum_s / self.count * 1e3) if self.count else 0.0,
+            "max_ms": self.max_s * 1e3,
+            "p50_ms": self.percentile(50.0) * 1e3,
+            "p95_ms": self.percentile(95.0) * 1e3,
+            "p99_ms": self.percentile(99.0) * 1e3,
+        }
+
+
+class ServingMetrics:
+    """Per-service request ledger: counters plus latency histograms.
+
+    Stages of one request's life (all host timestamps, monotonic):
+
+    * ``queue`` — submit -> flush: time spent host-buffered before the
+      dispatch pipeline pushed it to the device queues (admission wait);
+    * ``dispatch`` — flush -> complete: device queueing + search;
+    * ``total`` — submit -> complete: what the caller experiences.
+
+    Counters: ``submitted`` / ``completed`` (answered), ``downgraded``
+    (admitted with a deadline-cut ``sims`` budget), ``shed_overload``
+    (rejected at admission, queue depth over the limit),
+    ``shed_deadline`` (dropped before flush, deadline unmeetable or
+    expired), ``deadline_miss`` (completed, but after its deadline —
+    requests already on the device are never killed).
+    """
+
+    COUNTERS = ("submitted", "completed", "downgraded",
+                "shed_overload", "shed_deadline", "deadline_miss")
+
+    def __init__(self):
+        self.counters = {name: 0 for name in self.COUNTERS}
+        self.hists = {"queue": LatencyHistogram(),
+                      "dispatch": LatencyHistogram(),
+                      "total": LatencyHistogram()}
+
+    def bump(self, counter: str, by: int = 1) -> None:
+        """Increment one named counter (must be in :attr:`COUNTERS`)."""
+        self.counters[counter] += by
+
+    def observe(self, queue_s: Optional[float], dispatch_s: Optional[float],
+                total_s: float, deadline_missed: bool = False) -> None:
+        """Record one completed request's stage latencies."""
+        self.counters["completed"] += 1
+        if deadline_missed:
+            self.counters["deadline_miss"] += 1
+        if queue_s is not None:
+            self.hists["queue"].record(queue_s)
+        if dispatch_s is not None:
+            self.hists["dispatch"].record(dispatch_s)
+        self.hists["total"].record(total_s)
+
+    @property
+    def shed(self) -> int:
+        """Total explicitly rejected requests (overload + deadline)."""
+        return (self.counters["shed_overload"]
+                + self.counters["shed_deadline"])
+
+    def snapshot(self) -> Dict[str, object]:
+        """The /metrics payload: counters + per-stage percentile blocks."""
+        out: Dict[str, object] = dict(self.counters)
+        out["shed"] = self.shed
+        for name, h in self.hists.items():
+            out[name] = h.snapshot()
+        return out

@@ -1,0 +1,325 @@
+"""Serving front door: deadlines, load shedding, metrics, HTTP surface.
+
+Pins the ISSUE 6 SLO contracts:
+
+* :class:`DeadlinePolicy` admit / downgrade / shed boundaries are exact
+  (fixed-cost policy, no calibration);
+* FIFO completion order survives mixed-deadline load;
+* ``/metrics`` percentile math matches numpy on a recorded trace (up to
+  the histogram's geometric bucket resolution);
+* the shed path leaves the slot pool consistent:
+  ``submitted == completed + in_flight + shed``;
+* with no deadline the HTTP path drains **bit-identical** results to a
+  direct ``GoService.best_move`` (serve purity contract over the wire);
+* the deadline/budget fields add no new jit traces (compile count
+  asserted after mixed SLO traffic);
+* ``GoService.result`` honours ``timeout_s`` instead of spinning.
+"""
+import asyncio
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.serving.go_service import (DeadlineExceededError, DeadlinePolicy,
+                                      GoService, OverCapacityError)
+from repro.serving.metrics import LatencyHistogram, ServingMetrics
+from repro.serving.server import GoMoveServer, http_json
+
+BOARD = 5
+N2 = BOARD * BOARD
+KOMI = 0.5
+SIMS = 8
+
+
+def _service(**kw):
+    base = dict(board_size=BOARD, komi=KOMI, max_sims=SIMS, lanes=2,
+                slots=4, max_nodes=64, seed=0)
+    base.update(kw)
+    return GoService(**base)
+
+
+@pytest.fixture(scope="module")
+def direct():
+    """One warmed GoService for the non-HTTP SLO tests."""
+    gs = _service()
+    gs.best_move([0] * N2, key=[0, 0])           # compile + warm
+    return gs
+
+
+@pytest.fixture(scope="module")
+def served():
+    """A second GoService behind a live GoMoveServer on a free port."""
+    gs = _service()
+    loop = asyncio.new_event_loop()
+    thread = threading.Thread(target=loop.run_forever, daemon=True)
+    thread.start()
+    srv = GoMoveServer(gs, poll_idle_s=0.001)
+    port = asyncio.run_coroutine_threadsafe(srv.start(), loop).result(30)
+
+    def call(method, path, payload=None, timeout_s=180.0):
+        return asyncio.run(http_json("127.0.0.1", port, method, path,
+                                     payload, timeout_s=timeout_s))
+
+    # warm the bucket through the full HTTP path
+    status, _ = call("POST", "/v1/best_move",
+                     {"board": [0] * N2, "key": [0, 0]})
+    assert status == 200
+    yield gs, call
+    asyncio.run_coroutine_threadsafe(srv.stop(), loop).result(30)
+    loop.call_soon_threadsafe(loop.stop)
+    thread.join(timeout=10)
+
+
+class TestDeadlinePolicy:
+    def test_admit_downgrade_shed_boundaries(self):
+        """Fixed-cost policy: the three verdict regions are exact."""
+        p = DeadlinePolicy(base_s=0.01, sim_cost_s=0.001, floor_sims=4,
+                           slots=4, calibrate=False)
+        # full budget fits: est(64, 0) = 0.01 + 0.064 = 0.074
+        assert p.decide(0.074, 0, 64) == ("admit", 64)
+        assert p.decide(10.0, 0, 64) == ("admit", 64)
+        # tighter: fit = (remaining - base) / per_sim
+        assert p.decide(0.050, 0, 64) == ("downgrade", 40)
+        # floor boundary: fit == floor admits the floor budget ...
+        assert p.decide(0.01 + 0.004, 0, 64) == ("downgrade", 4)
+        # ... one sim less sheds
+        assert p.decide(0.01 + 0.0039, 0, 64) == ("shed", 0)
+        assert p.decide(0.0, 0, 64) == ("shed", 0)
+        # no deadline always admits the full budget
+        assert p.decide(None, 1000, 64) == ("admit", 64)
+
+    def test_queue_depth_scales_cost(self):
+        """Depth adds waves: the same deadline downgrades harder."""
+        p = DeadlinePolicy(base_s=0.01, sim_cost_s=0.001, floor_sims=4,
+                           slots=4, calibrate=False)
+        assert p.estimate_s(64, 0) == pytest.approx(0.074)
+        assert p.estimate_s(64, 4) == pytest.approx(0.01 + 2 * 0.064)
+        assert p.decide(0.074, 4, 64) == ("downgrade", 32)
+
+    def test_downgrade_never_exceeds_full(self):
+        p = DeadlinePolicy(base_s=0.0, sim_cost_s=0.001, floor_sims=1,
+                           slots=4, calibrate=False)
+        verdict, granted = p.decide(1.0, 0, 16)
+        assert verdict == "admit" and granted == 16
+
+    def test_calibration_moves_the_boundary(self):
+        p = DeadlinePolicy(base_s=0.0, sim_cost_s=1e-3, floor_sims=1,
+                           slots=4, calibrate=True, ewma=1.0)
+        p.observe(latency_s=1.6, sims=16, depth=0)   # 0.1 s/sim observed
+        assert p.sim_cost_s == pytest.approx(0.1)
+        assert p.decide(0.2, 0, 16) == ("downgrade", 2)
+
+
+class TestMetricsMath:
+    def test_percentiles_match_numpy_on_recorded_trace(self):
+        """Histogram percentiles track numpy within bucket resolution."""
+        rng = np.random.default_rng(7)
+        trace = rng.lognormal(mean=-3.0, sigma=1.2, size=400)
+        h = LatencyHistogram(growth=1.07)
+        for v in trace:
+            h.record(v)
+        for q in (50.0, 90.0, 95.0, 99.0):
+            got = h.percentile(q)
+            want = float(np.percentile(trace, q))
+            assert got == pytest.approx(want, rel=0.08), q
+        snap = h.snapshot()
+        assert snap["count"] == 400
+        assert snap["p50_ms"] <= snap["p95_ms"] <= snap["p99_ms"]
+        assert snap["max_ms"] == pytest.approx(trace.max() * 1e3)
+
+    def test_empty_and_single_sample(self):
+        h = LatencyHistogram()
+        assert h.percentile(99.0) == 0.0
+        h.record(0.25)
+        assert h.percentile(50.0) == pytest.approx(0.25, rel=0.08)
+
+    def test_serving_metrics_ledger(self):
+        m = ServingMetrics()
+        m.bump("submitted")
+        m.bump("shed_overload")
+        m.bump("shed_deadline", 2)
+        m.observe(0.01, 0.04, 0.05, deadline_missed=True)
+        snap = m.snapshot()
+        assert snap["submitted"] == 1
+        assert snap["shed"] == 3
+        assert snap["completed"] == 1 and snap["deadline_miss"] == 1
+        assert snap["total"]["count"] == 1
+        with pytest.raises(KeyError):
+            m.bump("not_a_counter")
+
+
+class TestSLOPaths:
+    def test_fifo_preserved_under_mixed_deadline_load(self, direct):
+        """Mixed generous deadlines never reorder serve completions."""
+        deadlines = [None, 60_000.0, None, 30_000.0, 90_000.0, None]
+        tickets = [direct.submit([0] * N2, key=[i + 1, 0],
+                                 deadline_ms=d)
+                   for i, d in enumerate(deadlines)]
+        order = []
+        for _ in range(1000):
+            order.extend(direct.poll())
+            if len(order) == len(tickets):
+                break
+        assert order == tickets
+        for t in tickets:
+            res = direct.result(t, wait=False)
+            assert res is not None and not res.downgraded
+
+    def test_shed_path_leaves_pool_consistent(self, direct):
+        """An expired host-buffered query sheds; accounting balances."""
+        bucket = direct._bucket(KOMI)
+        shed0 = bucket.shed_total
+        policy0 = direct.deadline_policy
+        try:
+            # zero-cost policy admits any deadline; a ~0 one then expires
+            # while still host-buffered and sheds at the next poll
+            direct.deadline_policy = DeadlinePolicy(
+                base_s=0.0, sim_cost_s=0.0, floor_sims=1, calibrate=False)
+            t_dead = direct.submit([0] * N2, key=[99, 0],
+                                   deadline_ms=1e-6)
+        finally:
+            direct.deadline_policy = policy0
+        t_live = direct.submit([0] * N2, key=[100, 0])
+        while direct.result(t_live, wait=False) is None:
+            direct.poll()
+        assert direct.pop_shed() == {t_dead: "deadline"}
+        with pytest.raises(DeadlineExceededError):
+            direct.result(t_dead)
+        submitted, completed, in_flight = bucket.accounting()
+        shed = bucket.shed_total
+        assert shed == shed0 + 1
+        assert submitted == completed + in_flight + shed
+        assert in_flight == 0
+        # the pool still answers after the shed
+        res = direct.best_move([0] * N2, key=[101, 0])
+        assert 0 <= res.action <= N2
+
+    def test_over_capacity_sheds_explicitly(self, direct):
+        limit0 = direct.admission_limit
+        try:
+            direct.admission_limit = 2
+            t1 = direct.submit([0] * N2, key=[1, 1])
+            t2 = direct.submit([0] * N2, key=[2, 2])
+            shed_before = direct.metrics.counters["shed_overload"]
+            with pytest.raises(OverCapacityError):
+                direct.submit([0] * N2, key=[3, 3])
+            assert direct.metrics.counters["shed_overload"] \
+                == shed_before + 1
+        finally:
+            direct.admission_limit = limit0
+        for t in (t1, t2):
+            assert direct.result(t) is not None
+
+    def test_deadline_downgrade_cuts_traced_budget(self, direct):
+        """A tight-but-meetable deadline downgrades instead of shedding."""
+        policy0 = direct.deadline_policy
+        try:
+            direct.deadline_policy = DeadlinePolicy(
+                base_s=0.0, sim_cost_s=1.0, floor_sims=2, slots=4,
+                calibrate=False)          # 1 s/sim: SIMS sims never fit
+            res = direct.best_move([0] * N2, key=[5, 5],
+                                   deadline_ms=4000.0)
+            assert res.downgraded and res.sims_granted == 4
+            with pytest.raises(DeadlineExceededError):
+                direct.submit([0] * N2, key=[6, 6], deadline_ms=500.0)
+        finally:
+            direct.deadline_policy = policy0
+
+    def test_slo_traffic_adds_no_new_traces(self, direct):
+        """Deadline/budget plumbing must not retrace the dispatch."""
+        bucket = direct._bucket(KOMI)
+        assert bucket._dispatch._cache_size() == 1
+        assert bucket._push_serve._cache_size() == 1
+
+    def test_result_timeout_instead_of_spin(self, direct):
+        t = direct.submit([0] * N2, key=[7, 7])
+        with pytest.raises(TimeoutError):
+            direct.result(t, timeout_s=0.0)
+        assert direct.result(t) is not None      # still answerable after
+        with pytest.raises(KeyError):
+            direct.result(999_999)
+
+
+class TestHttpFrontDoor:
+    def test_healthz_and_metrics(self, served):
+        _, call = served
+        status, body = call("GET", "/healthz")
+        assert (status, body) == (200, {"ok": True})
+        status, body = call("GET", "/metrics")
+        assert status == 200
+        assert body["metrics"]["completed"] >= 1
+        assert body["buckets"] == [KOMI]
+        assert set(body["metrics"]["total"]) >= {"p50_ms", "p95_ms",
+                                                 "p99_ms", "count"}
+
+    def test_no_deadline_path_bit_identical_to_direct(self, served,
+                                                      direct):
+        """Serve purity survives the wire: action + visits bit-equal."""
+        _, call = served
+        rng = np.random.default_rng(3)
+        for i in range(3):
+            board = np.zeros(N2, np.int8)
+            board[rng.integers(0, N2)] = 1        # one black stone
+            key = [int(rng.integers(1, 2 ** 31)), i]
+            want = direct.best_move(board, key=key)
+            status, got = call("POST", "/v1/best_move",
+                               {"board": board.tolist(), "key": key})
+            assert status == 200
+            assert got["action"] == want.action
+            assert got["is_pass"] == want.is_pass
+            assert np.array_equal(
+                np.asarray(got["root_visits"], np.float32),
+                want.root_visits)
+            assert not got["downgraded"] and not got["deadline_missed"]
+
+    def test_submit_then_poll_result(self, served):
+        _, call = served
+        status, body = call("POST", "/v1/submit",
+                            {"board": [0] * N2, "key": [11, 12]})
+        assert status == 200
+        ticket = body["ticket"]
+        deadline = time.monotonic() + 60
+        while True:
+            status, body = call("GET", f"/v1/result/{ticket}")
+            assert status == 200
+            if body["done"]:
+                break
+            assert time.monotonic() < deadline, "result never landed"
+            time.sleep(0.02)
+        assert 0 <= body["action"] <= N2
+        # fetched once -> gone
+        status, body = call("GET", f"/v1/result/{ticket}")
+        assert status == 404
+
+    def test_over_capacity_is_503(self, served):
+        gs, call = served
+        limit0 = gs.admission_limit
+        try:
+            gs.admission_limit = -1               # every submit sheds
+            status, body = call("POST", "/v1/best_move",
+                                {"board": [0] * N2})
+            assert status == 503
+            assert body["error"] == "over_capacity"
+        finally:
+            gs.admission_limit = limit0
+
+    def test_unmeetable_deadline_is_504(self, served):
+        _, call = served
+        status, body = call("POST", "/v1/best_move",
+                            {"board": [0] * N2, "deadline_ms": 0.001})
+        assert status == 504
+        assert body["error"] == "deadline_shed"
+
+    def test_bad_requests_are_400(self, served):
+        _, call = served
+        status, body = call("POST", "/v1/best_move", {"not_board": 1})
+        assert status == 400
+        status, body = call("POST", "/v1/best_move",
+                            {"board": [0] * 7})   # wrong point count
+        assert status == 400
+        status, _ = call("GET", "/v1/result/not_an_int")
+        assert status == 400
+        status, _ = call("GET", "/nope")
+        assert status == 404
