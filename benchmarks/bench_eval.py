@@ -1,0 +1,193 @@
+"""Evaluation-lane benchmark -> BENCH_eval.json.
+
+Measures the PR 7 neural evaluation lane (core/evaluator.py) on the 5x5
+reference config:
+
+* **reference cell** — one guided pool (traced ``prior_weight = 1``)
+  against the same pool running unguided (``prior_weight = 0``, bit-
+  identical to the no-eval program): guided sims/sec, the overhead
+  ratio of running the net inside every superstep, and the compile
+  count (one dispatch serves both, asserted);
+* **batch sweep** — guided sims/sec and **eval batch occupancy**
+  (``SearchService.eval_occupancy``: the fraction of net-forward rows
+  doing useful work, since every slot contributes a fixed
+  ``lanes``-row stripe to the superstep's eval batch) against the eval
+  batch size, i.e. the slot count.  The acceptance gate: occupancy at
+  the default batch size must be >= 0.5 — the device-refill admission
+  keeps the batch mostly full, which is what makes superstep-batched
+  evaluation viable at all.
+
+    PYTHONPATH=src python benchmarks/bench_eval.py [--out BENCH_eval.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                    # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.config import MCTSConfig
+from repro.core.evaluator import EvalConfig, EvalService
+from repro.core.mcts import MCTS
+from repro.core.service import SearchService
+from repro.go import GoEngine
+
+BOARD = 5
+KOMI = 0.5
+MOVE_CAP = 30
+MAX_NODES = 128
+SIMS = 16
+LANES = 2
+DEFAULT_SLOTS = 8
+SLOT_SWEEP = (4, 8, 16)
+MIN_OCCUPANCY = 0.5
+SCHEMA = "bench_eval/v1"
+
+ECFG = EvalConfig(board_size=BOARD, d_model=16, num_layers=1, num_heads=2,
+                  d_ff=32)
+
+
+def _pool(engine: GoEngine, slots: int) -> SearchService:
+    cfg = MCTSConfig(board_size=BOARD, komi=KOMI, lanes=LANES,
+                     sims_per_move=SIMS, max_nodes=MAX_NODES)
+    player = MCTS(engine, cfg, evaluator=EvalService(ECFG))
+    return SearchService(engine, player, player, slots,
+                         max_moves=MOVE_CAP)
+
+
+def time_cell(svc: SearchService, games: int, seed: int,
+              prior_weight: float, repeats: int = 2) -> dict:
+    """One (slots, prior_weight) cell: seeded games, min-of-N wall."""
+
+    def _run(s):
+        svc.reset(seed=s, colour_cap=(games + 1) // 2, game_capacity=games,
+                  ring_capacity=games + svc.slots)
+        for _ in range(games):
+            svc.submit_game(prior_weight=prior_weight)
+        return svc.drain()
+
+    _run(seed + 1000)                            # warm / compile
+    wall = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        recs = _run(seed)
+        wall = min(wall, time.perf_counter() - t0)
+    moves = float(sum(r.moves for r in recs))
+    sims = moves * SIMS                          # both sides share SIMS
+    occ = svc.eval_occupancy()
+    return {
+        "slots": svc.slots, "lanes": LANES,
+        "eval_batch_rows": svc.slots * LANES,
+        "prior_weight": prior_weight,
+        "games": len(recs), "moves": moves, "wall_s": wall,
+        "sims": sims, "sims_per_sec": sims / wall,
+        "eval_occupancy": round(float(np.mean(occ)), 4),
+    }
+
+
+def run_reference(games: int, seed: int) -> dict:
+    """Guided vs unguided through ONE pool (and one compiled dispatch)."""
+    engine = GoEngine(BOARD, komi=KOMI)
+    svc = _pool(engine, DEFAULT_SLOTS)
+    guided = time_cell(svc, games, seed, prior_weight=1.0)
+    unguided = time_cell(svc, games, seed, prior_weight=0.0)
+    compiles = svc._dispatch._cache_size()
+    if compiles != 1:
+        raise RuntimeError(
+            f"eval-lane dispatch compiled {compiles}x; traced prior_weight "
+            "requires exactly 1 across guided and unguided runs")
+    return {
+        "slots": DEFAULT_SLOTS, "games": games,
+        "sims_per_move": SIMS, "move_cap": MOVE_CAP,
+        "dispatch_compiles": compiles,
+        "guided_sims_per_sec": guided["sims_per_sec"],
+        "unguided_sims_per_sec": unguided["sims_per_sec"],
+        "eval_overhead": (unguided["sims_per_sec"]
+                          / guided["sims_per_sec"]),
+        "eval_occupancy": guided["eval_occupancy"],
+    }
+
+
+def run_batch_sweep(seed: int, slot_counts=SLOT_SWEEP) -> dict:
+    """Guided throughput + eval batch occupancy vs eval batch size."""
+    engine = GoEngine(BOARD, komi=KOMI)
+    rows = []
+    for slots in slot_counts:
+        svc = _pool(engine, slots)
+        # 2x oversubscription: device-refill admission keeps the batch
+        # full until the workload tail, which is what occupancy measures
+        rows.append(time_cell(svc, 2 * slots, seed, prior_weight=1.0))
+    default = next(r for r in rows if r["slots"] == DEFAULT_SLOTS)
+    if default["eval_occupancy"] < MIN_OCCUPANCY:
+        raise RuntimeError(
+            f"eval batch occupancy {default['eval_occupancy']:.2f} < "
+            f"{MIN_OCCUPANCY} at the default batch size "
+            f"({DEFAULT_SLOTS} slots) — the superstep batcher is running "
+            "mostly-empty net forwards")
+    return {"default_slots": DEFAULT_SLOTS, "min_occupancy": MIN_OCCUPANCY,
+            "sweep": rows}
+
+
+def _payload(ref: dict, sweep: dict) -> dict:
+    return {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
+            "move_cap": MOVE_CAP, "max_nodes": MAX_NODES,
+            "eval_config": {"d_model": ECFG.d_model,
+                            "num_layers": ECFG.num_layers,
+                            "num_heads": ECFG.num_heads, "d_ff": ECFG.d_ff},
+            "reference": ref, "batch_sweep": sweep}
+
+
+def run() -> None:
+    """benchmarks.run entry: reference cell + sweep, default output."""
+    ref = run_reference(games=8, seed=0)
+    csv_row("eval_guided_throughput", 1.0 / ref["guided_sims_per_sec"],
+            f"sims/s={ref['guided_sims_per_sec']:.0f};"
+            f"overhead={ref['eval_overhead']:.2f};"
+            f"occ={ref['eval_occupancy']:.2f}")
+    sweep = run_batch_sweep(seed=0)
+    with open("BENCH_eval.json", "w") as f:
+        json.dump(_payload(ref, sweep), f, indent=2, sort_keys=True)
+
+
+def main() -> None:
+    """CLI entry point: reference cell + batch sweep, printed + JSON."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_eval.json")
+    ap.add_argument("--games", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    print(f"# evaluation lane ({BOARD}x{BOARD}, move cap {MOVE_CAP}, "
+          f"net d{ECFG.d_model}x{ECFG.num_layers})")
+    ref = run_reference(args.games, args.seed)
+    print(f"reference: guided {ref['guided_sims_per_sec']:.0f} sims/s vs "
+          f"unguided {ref['unguided_sims_per_sec']:.0f} sims/s "
+          f"(overhead {ref['eval_overhead']:.2f}x, "
+          f"occupancy {ref['eval_occupancy']:.2f}, "
+          f"{ref['dispatch_compiles']} compile)")
+    csv_row("eval_guided_throughput", 1.0 / ref["guided_sims_per_sec"],
+            f"sims/s={ref['guided_sims_per_sec']:.0f};"
+            f"overhead={ref['eval_overhead']:.2f};"
+            f"occ={ref['eval_occupancy']:.2f}")
+
+    sweep = run_batch_sweep(args.seed)
+    for row in sweep["sweep"]:
+        print(f"batch {row['eval_batch_rows']:3d} rows ({row['slots']} "
+              f"slots): {row['sims_per_sec']:.0f} sims/s, "
+              f"occupancy {row['eval_occupancy']:.2f}")
+
+    with open(args.out, "w") as f:
+        json.dump(_payload(ref, sweep), f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,8 @@ their first consumer.  CI runs ``bench_service.py`` on the smoke cell
 and ``bench_load.py --smoke`` on the serving tier, then:
 
     python benchmarks/check_regression.py BENCH_service.json \\
-        --load BENCH_load.json --baseline benchmarks/baselines/ci_cpu.json
+        --load BENCH_load.json --eval BENCH_eval.json \\
+        --baseline benchmarks/baselines/ci_cpu.json
 
 Metrics are **direction-aware**: throughput (``*_sims_per_sec``) fails
 when it drops below the band, latency (``load.*_ms``, gated on the
@@ -16,9 +17,10 @@ of them misses half the knee.  Runs on the good side of the band only
 warn (faster CI hardware is not a bug) with a hint to refresh the
 baseline via ``--update``, which rewrites it from every artifact passed.
 
-Either artifact may be omitted; its metrics report ``skip`` instead of
-failing, so the service gate and the load gate can run in separate CI
-jobs against the one combined baseline.
+Any artifact may be omitted; its metrics report ``skip`` instead of
+failing, so the service gate, the load gate, and the eval-lane gate
+(``--eval BENCH_eval.json``, PR 7) can run in separate CI jobs against
+the one combined baseline.
 
 Only single-device metrics are gated: the sharded sweep's faked devices
 share one physical CPU, so its wall clock measures host contention, not
@@ -62,6 +64,23 @@ METRICS = {
 LOAD_METRICS = {
     "load.p50_ms": lambda d: _load_point(d, 0)["p50_ms"],
     "load.p99_ms": lambda d: _load_point(d, 0)["p99_ms"],
+}
+
+def _sweep_default(d: dict) -> dict:
+    """The batch-sweep cell at the default (gated) eval batch size."""
+    slots = d["batch_sweep"]["default_slots"]
+    return next(r for r in d["batch_sweep"]["sweep"] if r["slots"] == slots)
+
+
+# gated evaluation-lane metrics over BENCH_eval.json (PR 7): guided
+# throughput is a throughput (fails downward); occupancy is taken from
+# the oversubscribed default sweep cell (the steady-state number the
+# bench hard-gates at >= 0.5 — the reference cell runs games == slots
+# and mostly measures the tail drain), so the band here only watches
+# for drift.
+EVAL_METRICS = {
+    "eval.guided_sims_per_sec": lambda d: d["reference"]["guided_sims_per_sec"],
+    "eval.occupancy": lambda d: _sweep_default(d)["eval_occupancy"],
 }
 
 
@@ -113,12 +132,18 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("bench", nargs="?", default=None, help="BENCH_service.json (optional)")
     ap.add_argument("--load", default=None, help="BENCH_load.json from this run (optional)")
+    ap.add_argument(
+        "--eval",
+        dest="eval_bench",
+        default=None,
+        help="BENCH_eval.json from this run (optional)",
+    )
     ap.add_argument("--baseline", default="benchmarks/baselines/ci_cpu.json")
     ap.add_argument("--tolerance", type=float, default=None, help="override the baseline's band")
     ap.add_argument("--update", action="store_true", help="rewrite the baseline from this run")
     args = ap.parse_args()
-    if args.bench is None and args.load is None:
-        ap.error("pass BENCH_service.json and/or --load BENCH_load.json")
+    if args.bench is None and args.load is None and args.eval_bench is None:
+        ap.error("pass BENCH_service.json, --load BENCH_load.json, and/or --eval BENCH_eval.json")
 
     current = {}
     source_schemas = []
@@ -132,6 +157,11 @@ def main() -> int:
             load_payload = json.load(f)
         current.update(extract(load_payload, LOAD_METRICS))
         source_schemas.append(load_payload.get("schema"))
+    if args.eval_bench is not None:
+        with open(args.eval_bench) as f:
+            eval_payload = json.load(f)
+        current.update(extract(eval_payload, EVAL_METRICS))
+        source_schemas.append(eval_payload.get("schema"))
 
     if args.update:
         try:

@@ -53,6 +53,7 @@ def main() -> None:
         ("fig_roofline", "Roofline table from the dry-run"),
         ("bench_arena", "Arena self-play throughput (BENCH_selfplay.json)"),
         ("bench_service", "Service dispatcher throughput (BENCH_service.json)"),
+        ("bench_eval", "Evaluation-lane throughput (BENCH_eval.json)"),
     ]
     print("name,us_per_call,derived")
     for mod_name, desc in figures:

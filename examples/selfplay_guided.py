@@ -1,0 +1,113 @@
+"""Guided self-play -> training records: the evaluation lane end to end.
+
+The full AlphaZero-shaped loop in miniature, on the PR 7 evaluation lane
+(core/evaluator.py): an :class:`EvalService` net guides batched MCTS
+self-play, every move emits a ``(state tokens, visit-count policy, game
+outcome)`` record, and the records feed ``training/step.py`` — the
+evaluator doubles as the trainable model, so ``make_train_step`` closes
+the loop without glue.  The net starts from its deterministic random
+init; the point is the dataflow, not the strength.
+
+Because jitted searches bake the evaluator params in as constants, the
+improved net only takes effect by *rebuilding* the player with
+``EvalService(cfg, params=...)`` — shown at the end.
+
+    PYTHONPATH=src python examples/selfplay_guided.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import MCTSConfig, TrainConfig
+from repro.core.evaluator import EvalConfig, EvalService
+from repro.core.mcts import MCTS
+from repro.go import GoEngine
+from repro.training.step import init_train_state, make_train_step
+
+BOARD = 5
+GAMES = 4          # parallel self-play games (one search_batch per move)
+SIMS = 32
+MAX_MOVES = 2 * BOARD * BOARD
+
+
+def selfplay_records(engine: GoEngine, mcts: MCTS, games: int, seed: int):
+    """Play ``games`` guided self-play games; return stacked records.
+
+    Records are shaped for ``EvalService.loss``: ``tokens i32[B, S]``,
+    ``legal bool[B, A]``, ``policy f32[B, A]`` (root visit distribution),
+    ``value f32[B]`` (final game outcome, black perspective, broadcast
+    over every position of that game).
+    """
+    ev = mcts.evaluator
+    step_play = jax.jit(jax.vmap(engine.play))
+    step_legal = jax.jit(jax.vmap(engine.legal_moves))
+    search = jax.jit(mcts.search_batch)
+
+    roots = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (games,) + x.shape),
+        engine.init_state())
+    rngs = jax.random.split(jax.random.PRNGKey(seed),
+                            MAX_MOVES * games).reshape(MAX_MOVES, games, 2)
+    toks, legals, pols, lives = [], [], [], []
+    for move in range(MAX_MOVES):
+        live = ~roots.done                         # bool[G]
+        if not bool(live.any()):
+            break
+        res = search(roots, rngs[move])
+        visits = res.root_visits                   # f32[G, A]
+        toks.append(ev.tokens(roots))
+        legals.append(step_legal(roots))
+        pols.append(visits / jnp.maximum(visits.sum(-1, keepdims=True), 1.0))
+        lives.append(live)
+        roots = step_play(roots, res.action)
+    outcome = jax.vmap(engine.result)(roots)       # f32[G] black perspective
+
+    live = jnp.concatenate(lives)                  # [M*G]
+    batch = {
+        "tokens": jnp.concatenate(toks)[live],
+        "legal": jnp.concatenate(legals)[live],
+        "policy": jnp.concatenate(pols)[live],
+        "value": jnp.tile(outcome, len(toks))[live].astype(jnp.float32),
+    }
+    return batch, outcome
+
+
+def main() -> None:
+    engine = GoEngine(BOARD, komi=0.5)
+    ecfg = EvalConfig(board_size=BOARD, d_model=16, num_layers=1,
+                      num_heads=2, d_ff=32)
+    evaluator = EvalService(ecfg)
+    cfg = MCTSConfig(board_size=BOARD, komi=0.5, lanes=4,
+                     sims_per_move=SIMS, max_nodes=4 * SIMS)
+    mcts = MCTS(engine, cfg, evaluator=evaluator)
+
+    t0 = time.time()
+    batch, outcome = selfplay_records(engine, mcts, GAMES, seed=0)
+    n = int(batch["tokens"].shape[0])
+    print(f"self-play: {GAMES} games, {n} records in {time.time() - t0:.1f}s "
+          f"(outcomes {[int(o) for o in outcome]})")
+
+    tcfg = TrainConfig(steps=30, lr=3e-3, warmup_steps=3, weight_decay=0.0,
+                       z_loss=0.0, remat=False)
+    tstate = init_train_state(evaluator, tcfg, jax.random.PRNGKey(1))
+    train_step = make_train_step(evaluator, tcfg)
+    first = last = None
+    for step in range(tcfg.steps):
+        tstate, metrics = train_step(tstate, batch)
+        loss = float(metrics["loss"])
+        first = loss if first is None else first
+        last = loss
+    print(f"training: loss {first:.3f} -> {last:.3f} over {tcfg.steps} steps "
+          f"(final ce {float(metrics['ce']):.3f})")
+
+    # Next generation: params are compile-time constants inside a jitted
+    # search, so the stronger net rides in via a *rebuilt* player.
+    improved = MCTS(engine, cfg,
+                    evaluator=EvalService(ecfg, params=tstate.params))
+    print(f"rebuilt guided player with trained params: "
+          f"{type(improved.evaluator).__name__} ready")
+
+
+if __name__ == "__main__":
+    main()

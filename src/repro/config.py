@@ -221,6 +221,7 @@ class MCTSConfig:
     max_nodes: int = 4096             # tree arena capacity
     c_uct: float = 0.9
     virtual_loss: float = 1.0
+    prior_weight: float = 1.0         # eval-lane UCT<->PUCT blend (traced)
     parallelism: str = "tree"         # tree | root | leaf
     root_trees: int = 1               # root parallelism degree (across devices)
     leaf_playouts: int = 1            # playouts per selected leaf

@@ -189,7 +189,8 @@ class Arena:
         return game_keys
 
     def play_games(self, games: int, seed: int = 0,
-                   game_keys: Optional[jax.Array] = None) -> List[GameResult]:
+                   game_keys: Optional[jax.Array] = None,
+                   prior_weight=None) -> List[GameResult]:
         """Play ``games`` full games, refilling finished slots from the
         pending queue until the queue drains.
 
@@ -203,9 +204,18 @@ class Arena:
         ``game_keys`` optionally fixes each game's root RNG key (u32[games,
         2], admission order) — used by the oracle-equivalence tests;
         otherwise keys come from a host-side chain of ``seed``.
+
+        ``prior_weight`` (scalar or (a_side, b_side) pair, device-refill
+        only) threads the evaluation-lane blend to every game — traced,
+        so a guided-vs-unguided match reuses the unmodified pool trace;
+        ``None`` means each player's configured default.
         """
         game_keys = self._check_keys(games, game_keys)
         if self.refill == "host":
+            if prior_weight is not None:
+                raise ValueError(
+                    "prior_weight= needs refill='device' (the host-queue "
+                    "baseline predates the evaluation lane)")
             return self._play_games_hostqueue(games, seed, game_keys)
         svc = self.service
         svc.reset(seed=seed, colour_cap=(games + 1) // 2,
@@ -213,7 +223,8 @@ class Arena:
                   ring_capacity=games + self.slots)
         tickets = [svc.submit_game(
             key=None if game_keys is None else game_keys[i],
-            lane=LANE_ARENA) for i in range(games)]
+            lane=LANE_ARENA, prior_weight=prior_weight)
+            for i in range(games)]
         recs = {r.ticket: r for r in svc.drain()}
         self.host_syncs = svc.host_syncs
         self.host_blocked_s = svc.host_blocked_s

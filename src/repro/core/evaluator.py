@@ -1,0 +1,269 @@
+"""EvalService: a jitted policy/value net batched over superstep leaves.
+
+The Xeon Phi paper's FUEGO is playout-guided; the modern tournament
+programs it benchmarks against graft a neural evaluation onto the same
+MCTS skeleton.  This module is that graft, built TPU-first: instead of an
+asynchronous evaluation queue (the GPU-era design, where leaf requests
+wait on a host-side batcher), the dispatch superstep *is* the batcher —
+every iteration of every slot's search selects its ``lanes`` leaves, and
+under the ``search_batch`` vmap those form one fixed-shape ``[G, lanes]``
+eval batch pushed through a small :class:`TransformerLM` as part of the
+same compiled program.  No queue, no staleness beyond the iteration, no
+host round-trip.
+
+Dataflow per search iteration (see docs/ARCHITECTURE.md "Evaluation
+lane" for the superstep picture):
+
+1. the lane scan selects ``L`` leaves (new children are allocated with a
+   *uniform* prior — calling the net per lane would serialise it);
+2. the leaves' board states are tokenised and one net forward yields
+   ``(prior [L, A], value [L])``;
+3. priors scatter into the trees' ``prior`` rows (overwriting the
+   allocation-time uniform) and values mix into the playout returns with
+   traced weight ``value_weight * prior_w`` — so the next iteration's
+   PUCT descends under net guidance.
+
+The blend weight ``prior_w`` stays traced end to end (kernels/uct_select)
+— one compiled dispatch serves guided and unguided slots, and ``w = 0``
+is bit-identical to the playout-only program.
+
+Two contracts worth reading twice:
+
+* **Params are compile-time constants.**  ``policy_value`` closes over
+  ``self.params``; a jitted search bakes them in.  After a training step
+  updates them, *rebuild* the :class:`repro.core.mcts.MCTS` player (and
+  any service above it) — mutating ``evaluator.params`` does not reach
+  an already-compiled dispatch.
+* **The evaluator is also the trainable model.**  It exposes
+  ``init(key)`` and ``loss(params, batch, z_loss)`` in the shape
+  ``training/step.py`` expects, so ``init_train_state(evaluator, ...)``
+  / ``make_train_step(evaluator, ...)`` close the self-play loop
+  (examples/selfplay_guided.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import AttnConfig, ModelConfig
+from repro.core.tree import normalize_prior
+from repro.go.board import GoState
+from repro.models.layers import ParamDef, init_params
+from repro.models.transformer import TransformerLM
+
+# Token vocabulary for board-plane tokens: cell tokens are board + 2
+# (white stone 1, empty 2, black stone 3); position 0 is a to-play
+# marker token (4 = black to move, 5 = white).
+TOK_WHITE, TOK_EMPTY, TOK_BLACK = 1, 2, 3
+TOK_BLACK_TO_PLAY, TOK_WHITE_TO_PLAY = 4, 5
+VOCAB = 8
+
+
+@dataclass(frozen=True)
+class EvalConfig:
+    """Static shape of one evaluation net (all fields bake into the trace).
+
+    ``num_layers`` should stay <= 2: the transformer applies
+    ``jax.checkpoint`` to deeper stacks, which is a training-memory
+    trade the inside-the-search forward never wants.  ``value_weight``
+    is the AlphaGo lambda — the *maximum* share of a backup taken from
+    the value head; the effective share is ``value_weight * prior_w``
+    with the traced per-slot blend weight, so it scales to zero exactly
+    when the slot is unguided.
+    """
+    board_size: int = 9
+    d_model: int = 32
+    num_layers: int = 2
+    num_heads: int = 2
+    d_ff: int = 64
+    value_weight: float = 0.5
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+
+    @classmethod
+    def parse(cls, spec: str, **overrides) -> "EvalConfig":
+        """Build from a ``k=v,k=v`` CLI spec (``--eval-config``).
+
+        Unknown keys raise; values are coerced by the field's default
+        type.  ``parse("d_model=64,ckpt_dir=/tmp/net", board_size=9)``.
+        """
+        kv = dict(overrides)
+        for part in filter(None, spec.split(",")):
+            if "=" not in part:
+                raise ValueError(f"eval-config entry {part!r} is not k=v")
+            k, v = part.split("=", 1)
+            kv[k] = v
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        out = {}
+        for k, v in kv.items():
+            if k not in fields:
+                raise ValueError(
+                    f"unknown eval-config key {k!r}; known: {sorted(fields)}")
+            d = fields[k].default
+            if isinstance(v, str) and not isinstance(d, str):
+                v = type(d)(v) if d is not None else v
+            out[k] = v
+        return cls(**out)
+
+
+def _model_config(cfg: EvalConfig) -> ModelConfig:
+    """The board-token transformer: tiny, encoder-style, deterministic.
+
+    ``causal=False`` — every board token attends to the whole position;
+    ``dtype=float32`` — search bit-identity tests and the ``np.save``
+    checkpoint format both want exact, platform-stable arithmetic;
+    ``tie_embeddings=True`` — the vocab head is never used for actions
+    (the point/pass/value heads below read the V-dim output), so tying
+    just drops the dead ``head`` matrix.
+    """
+    return ModelConfig(
+        name=f"eval{cfg.board_size}", family="dense",
+        num_layers=cfg.num_layers, d_model=cfg.d_model, d_ff=cfg.d_ff,
+        vocab_size=VOCAB,
+        attn=AttnConfig(num_heads=cfg.num_heads, num_kv_heads=cfg.num_heads,
+                        causal=False),
+        tie_embeddings=True,
+        max_seq_len=cfg.board_size * cfg.board_size + 1,
+        dtype="float32")
+
+
+class EvalService:
+    """Policy/value evaluation bound to one board size and one param set.
+
+    Construction loads params from ``cfg.ckpt_dir`` (latest step) when
+    given, else falls back to a deterministic random init from
+    ``cfg.seed`` — a service can always come up, guided by an untrained
+    net, before any training has run.
+
+    Interface consumed by the search (all jit/vmap-safe):
+
+    ``policy_value(states, legal)``
+        batched leaf evaluation: ``([L] states, bool[L, A]) ->
+        (prior f32[L, A], value f32[L])``.  Priors are exactly zero on
+        illegal actions and sum to 1 over legal ones
+        (:func:`repro.core.tree.normalize_prior`); values are tanh-
+        bounded black-perspective estimates.
+    ``prior_fn(state, legal)``
+        single-state adapter with the ``MCTS.prior_fn`` signature — the
+        root-init path.
+
+    Interface consumed by training (``training/step.py``):
+
+    ``init(key)`` / ``loss(params, batch, z_loss)`` with batches of
+    ``{tokens i32[B, S], legal bool[B, A], policy f32[B, A], value
+    f32[B]}`` — policy cross-entropy over legal moves plus value MSE.
+    """
+
+    def __init__(self, cfg: EvalConfig, params=None):
+        self.cfg = cfg
+        self.n2 = cfg.board_size * cfg.board_size
+        self.num_actions = self.n2 + 1          # + pass (last index)
+        self.value_weight = float(cfg.value_weight)
+        self.model = TransformerLM(_model_config(cfg))
+        if params is not None:
+            self.params = params
+        else:
+            self.params = self._load_or_init()
+
+    # ------------------------------------------------------------- params
+
+    def _head_defs(self):
+        """Action/value heads as V-dim linear probes over the LM output.
+
+        The transformer's (tied) output is already a ``[.., S, V]``
+        projection; three learned V-vectors read it out — ``point`` at
+        every board position, ``pass`` and ``value`` at the to-play
+        marker token.  Keeping the heads on the V axis means the
+        evaluator reuses the LM forward unchanged.
+        """
+        return {
+            "point": ParamDef((VOCAB,), (None,)),
+            "pass": ParamDef((VOCAB,), (None,)),
+            "value": ParamDef((VOCAB,), (None,)),
+        }
+
+    def init(self, key: jax.Array):
+        """Full param tree {net, heads} (the ``training/step.py`` hook)."""
+        knet, khead = jax.random.split(key)
+        return {"net": self.model.init(knet),
+                "heads": init_params(self._head_defs(), khead, jnp.float32)}
+
+    def _load_or_init(self):
+        from repro.ckpt.checkpoint import latest_step, restore_checkpoint
+        template = self.init(jax.random.PRNGKey(self.cfg.seed))
+        if self.cfg.ckpt_dir is not None \
+                and latest_step(self.cfg.ckpt_dir) is not None:
+            tree, _, _ = restore_checkpoint(self.cfg.ckpt_dir, template)
+            return tree
+        return template
+
+    # ------------------------------------------------------------ encoding
+
+    def tokens(self, states: GoState) -> jax.Array:
+        """Board-plane tokens ``i32[..., n2 + 1]`` for a batch of states.
+
+        Position 0 carries the side to move; positions ``1..n2`` the
+        board cells.  Works under any leading batch shape (and vmap).
+        """
+        board = states.board.astype(jnp.int32) + 2            # [..., n2]
+        to_play = jnp.where(states.to_play > 0, TOK_BLACK_TO_PLAY,
+                            TOK_WHITE_TO_PLAY).astype(jnp.int32)
+        return jnp.concatenate(
+            [to_play[..., None], board], axis=-1)
+
+    # ----------------------------------------------------------- inference
+
+    def _heads(self, params, tokens):
+        """tokens [B, S] -> (action logits [B, A], value [B])."""
+        feats, _ = self.model.forward(params["net"], tokens)   # [B, S, V]
+        h = params["heads"]
+        point = feats[..., 1:, :] @ h["point"]                 # [B, n2]
+        pas = feats[..., 0, :] @ h["pass"]                     # [B]
+        logits = jnp.concatenate([point, pas[..., None]], axis=-1)
+        value = jnp.tanh(feats[..., 0, :] @ h["value"])        # [B]
+        return logits, value
+
+    def policy_value(self, states: GoState, legal: jax.Array):
+        """Batched leaf evaluation (the superstep eval batch).
+
+        ``states`` batched over a leading ``[L]`` axis, ``legal``
+        ``bool[L, A]`` -> ``(prior f32[L, A], value f32[L])``.  Inside
+        ``MCTS._simulate`` this is one net forward per iteration; the
+        ``search_batch`` vmap lifts it to the ``[G, L]`` superstep
+        batch.
+        """
+        logits, value = self._heads(self.params, self.tokens(states))
+        masked = jnp.where(legal, logits, -1e9)
+        prior = normalize_prior(jax.nn.softmax(masked, axis=-1), legal)
+        return prior, value
+
+    def prior_fn(self, state: GoState, legal: jax.Array) -> jax.Array:
+        """Single-state policy prior (the ``MCTS.prior_fn`` root hook)."""
+        prior, _ = self.policy_value(
+            jax.tree.map(lambda x: x[None], state), legal[None])
+        return prior[0]
+
+    # ------------------------------------------------------------ training
+
+    def loss(self, params, batch, z_loss: float = 0.0):
+        """AlphaGo-style joint loss over self-play records.
+
+        ``batch``: ``tokens i32[B, S]``, ``legal bool[B, A]``,
+        ``policy f32[B, A]`` (visit-count distribution), ``value f32[B]``
+        (game outcome, black perspective).  Returns ``(scalar, metrics)``
+        in the ``make_train_step`` shape; ``z_loss`` penalises the
+        squared legal-move logsumexp like the LM's z-loss.
+        """
+        logits, value = self._heads(params, batch["tokens"])
+        legal = batch["legal"]
+        masked = jnp.where(legal, logits, -1e9)
+        lse = jax.nn.logsumexp(masked, axis=-1)
+        logp = masked - lse[..., None]
+        ce = -(batch["policy"] * jnp.where(legal, logp, 0.0)).sum(-1).mean()
+        mse = jnp.square(value - batch["value"]).mean()
+        total = ce + mse + z_loss * jnp.square(lse).mean()
+        return total, {"ce": ce, "value_mse": mse, "aux": jnp.float32(0.0)}

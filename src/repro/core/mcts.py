@@ -50,12 +50,21 @@ class SearchParams(NamedTuple):
     Passed to :meth:`MCTS.search_batch` as ``f32[G]`` arrays (one value per
     game; inside a search the scalar broadcasts over every lane and tree
     level), or left ``None`` to use this player's static ``MCTSConfig``
-    values.  Both fields are *traced*: changing them never recompiles, and
+    values.  All fields are *traced*: changing them never recompiles, and
     passing arrays equal to the config constants is bit-identical to
     ``params=None`` (pinned in tests/test_multiplex.py).
+
+    ``prior_w`` is the evaluation-lane UCT<->PUCT blend weight (PR 7).
+    Its *presence* selects the blended scoring program (one compiled
+    dispatch then serves guided ``w > 0`` and unguided ``w = 0`` slots);
+    its *values* are traced.  ``None`` keeps the seed's static scoring
+    path — except under an ``evaluator``, where it defaults to the
+    config's ``prior_weight``.  ``w = 0`` rows are bit-identical to the
+    static no-eval search (tests/test_evaluator.py pins this).
     """
     c_uct: jax.Array           # f32[G] exploration constant
     vl_weight: jax.Array       # f32[G] virtual-loss weight in the Q term
+    prior_w: Optional[jax.Array] = None  # f32[G] eval-lane prior blend
 
 
 class MCTS:
@@ -69,7 +78,8 @@ class MCTS:
     ==================  ======================================================
     ``search_batch``    one full move search per game over a leading game
                         axis, with a traced per-game ``sims`` budget and
-                        traced per-game ``SearchParams`` (c_uct, vl_weight)
+                        traced per-game ``SearchParams`` (c_uct, vl_weight,
+                        prior_w)
     ``init_tree_batch`` batch of per-game tree arenas under this player's
                         engine / capacity / priors
     ==================  ======================================================
@@ -77,16 +87,41 @@ class MCTS:
     Recompile contract: the config fixes the compiled search *shape*
     (lanes, iteration bound, tree capacity, board); ``sims`` and
     ``SearchParams`` are data.  One MCTS player therefore serves
-    arbitrarily many (c_uct, virtual_loss, sims) configurations with a
-    single trace — the SearchService multiplexing contract
-    (docs/ARCHITECTURE.md).
+    arbitrarily many (c_uct, virtual_loss, sims, prior_weight)
+    configurations with a single trace — the SearchService multiplexing
+    contract (docs/ARCHITECTURE.md).
+
+    Evaluation lane (PR 7): pass ``evaluator=`` (an
+    :class:`repro.core.evaluator.EvalService`) to run every iteration's
+    selected leaves through a jitted policy/value net.  Roots and leaves
+    then carry net priors, edge scoring blends UCT with PUCT under the
+    traced ``prior_w`` weight, and net values mix into playout returns.
+    The evaluator's params are baked into the compiled search as
+    constants — rebuild the player (and any service above it) after a
+    training step updates them.
     """
 
     def __init__(self, engine: GoEngine, cfg: MCTSConfig,
                  prior_fn=None, value_fn=None, use_puct: bool = False,
-                 max_depth: int = 64):
+                 max_depth: int = 64, evaluator=None):
         self.engine = engine
         self.cfg = cfg
+        self.evaluator = evaluator    # optional EvalService (core/evaluator.py)
+        if evaluator is not None:
+            if value_fn is not None:
+                raise ValueError(
+                    "evaluator and value_fn are mutually exclusive: the "
+                    "evaluator's value head already mixes into playout "
+                    "returns (weight = value_weight * prior_w)")
+            if prior_fn is None:
+                prior_fn = evaluator.prior_fn
+            # children get a uniform prior at allocation; the batched
+            # leaf evaluation of the same iteration overwrites it (the
+            # scatter in _simulate) — per-node prior_fn calls inside the
+            # sequential lane scan would serialise the net
+            self._expand_prior_fn = None
+        else:
+            self._expand_prior_fn = prior_fn
         self.prior_fn = prior_fn      # optional policy hook: state, legal -> prior
         self.value_fn = value_fn      # optional value hook replacing playouts
         self.use_puct = use_puct
@@ -114,7 +149,7 @@ class MCTS:
         static config values (bit-identical when the values agree).
         """
         from repro.kernels.uct_select.ops import uct_scores
-        c, vlw = self._resolve_params(params)
+        c, vlw, pw = self._resolve_params(params)
         kids = t.children[node]
         has_child = kids != UNVISITED
         cidx = jnp.maximum(kids, 0)
@@ -123,16 +158,25 @@ class MCTS:
             t.visit[cidx][None], t.value[cidx][None], t.vloss[cidx][None],
             t.prior[node][None], t.legal[node][None], has_child[None],
             parent_n[None], player[None],
-            c_uct=c, vl_weight=vlw,
+            c_uct=c, vl_weight=vlw, prior_w=pw,
             use_puct=self.use_puct)[0]
         # random tie-break (the asynchronous-thread nondeterminism analogue)
         return score + jax.random.uniform(rng, score.shape) * 1e-3
 
     def _resolve_params(self, params: Optional[SearchParams]):
-        """The traced (c_uct, vl_weight) pair, defaulting to the config."""
+        """The traced (c_uct, vl_weight, prior_w) triple.
+
+        Defaults come from the config; ``prior_w`` resolves to ``None``
+        (static scoring program, the seed path) unless an evaluator is
+        bound or the caller threads an explicit blend weight.
+        """
         if params is None:
-            return self.cfg.c_uct, self.cfg.virtual_loss
-        return params.c_uct, params.vl_weight
+            pw = self.cfg.prior_weight if self.evaluator is not None else None
+            return self.cfg.c_uct, self.cfg.virtual_loss, pw
+        pw = params.prior_w
+        if pw is None and self.evaluator is not None:
+            pw = self.cfg.prior_weight
+        return params.c_uct, params.vl_weight, pw
 
     def _select_lane(self, t: Tree, rng,
                      params: Optional[SearchParams] = None):
@@ -188,7 +232,7 @@ class MCTS:
 
         def do_expand(t):
             t2, idx = tree_lib.allocate(self.engine, t, node, act,
-                                        self.prior_fn)
+                                        self._expand_prior_fn)
             return t2, idx
 
         t, new_idx = jax.lax.cond(
@@ -212,6 +256,16 @@ class MCTS:
         The traced ``params`` scalars broadcast over every lane: each of
         the ``lanes`` sequential selects scores edges under the same
         per-search (c_uct, vl_weight) pair.
+
+        Under an ``evaluator`` the iteration also forms the evaluation
+        batch: the ``lanes`` selected leaf states go through the policy/
+        value net as one fixed-shape ``[L]`` forward (``[G, L]`` after the
+        ``search_batch`` vmap — the superstep eval batch), the policy
+        head's priors are scattered back over the leaves' prior rows, and
+        the value head mixes into the playout returns with traced weight
+        ``value_weight * prior_w`` (AlphaGo's lambda; terminal leaves keep
+        their exact game result).  ``prior_w = 0`` leaves the returns
+        bit-identical to the playout-only path.
         """
         L, P = self.cfg.lanes, max(1, self.cfg.leaf_playouts)
         keys = jax.random.split(rng, L + 1)
@@ -235,6 +289,20 @@ class MCTS:
             )(leaf_states, pkeys)                                 # [L, P]
         val_sum = vals.sum(axis=1)                                # black persp.
 
+        prior = t.prior
+        if self.evaluator is not None:
+            # the superstep eval batch: one net forward over all L leaves
+            net_prior, net_val = self.evaluator.policy_value(
+                leaf_states, t.legal[leaves])
+            _, _, pw = self._resolve_params(params)
+            mix = jnp.asarray(pw, jnp.float32) * self.evaluator.value_weight
+            # terminal leaves keep the exact game result; elsewhere blend
+            # net value (already a sum-equivalent: x P playouts' worth)
+            mix = jnp.where(t.terminal[leaves], 0.0, mix)          # [L]
+            val_sum = (1.0 - mix) * val_sum + mix * (net_val * P)
+            # duplicate leaf indices write identical rows (same state)
+            prior = prior.at[leaves].set(net_prior)
+
         # exact scatter-add backup over all lanes at once
         flat = paths.reshape(-1)
         ok = flat != UNVISITED
@@ -245,6 +313,7 @@ class MCTS:
             visit=t.visit.at[safe].add(w * P),
             value=t.value.at[safe].add(jnp.where(ok, vrep, 0.0)),
             vloss=jnp.zeros_like(t.vloss),   # FUEGO: remove at backup
+            prior=prior,
         )
         return t
 
@@ -333,8 +402,13 @@ class MCTS:
           budget: ``<= 0`` selects the configured ``sims_per_move``;
           positive values are capped by it) and ``params`` (optional
           :class:`SearchParams` of ``f32[G]`` per-game ``c_uct`` /
-          ``vl_weight``).  Changing their *values* never recompiles, and
-          passing the configured constants is bit-identical to ``None``.
+          ``vl_weight`` / ``prior_w``).  Changing their *values* never
+          recompiles, and passing the configured constants is
+          bit-identical to ``None``.  The one structural exception is
+          ``prior_w``: ``None`` vs array selects the scoring *program*
+          (static vs blended — a pytree-structure change, so the two
+          programs are separate jit cache entries), while its values —
+          any per-game mix of guided/unguided weights — stay traced.
         """
         sims = None if sims is None else jnp.asarray(sims, jnp.int32)
         if params is None:
@@ -342,7 +416,9 @@ class MCTS:
                 return jax.vmap(self._search)(roots, rngs)
             return jax.vmap(self._search)(roots, rngs, sims)
         params = SearchParams(jnp.asarray(params.c_uct, jnp.float32),
-                              jnp.asarray(params.vl_weight, jnp.float32))
+                              jnp.asarray(params.vl_weight, jnp.float32),
+                              None if params.prior_w is None
+                              else jnp.asarray(params.prior_w, jnp.float32))
         if sims is None:
             return jax.vmap(
                 lambda r, k, p: self._search(r, k, None, p))(

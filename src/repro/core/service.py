@@ -107,11 +107,14 @@ LANE_NAMES = {LANE_ARENA: "arena", LANE_SERVE: "serve",
 class SearchRequest(NamedTuple):
     """One pending request (device pytree; leading axis = queue/chunk).
 
-    ``sims`` / ``c_uct`` / ``vl`` are **per-side pairs**: column 0
-    configures searches run by player A (the serve-lane player), column 1
-    those run by player B.  All three are traced through the dispatch —
-    a pool multiplexes arbitrarily many (c_uct, virtual_loss, sims)
-    configurations with one compiled program.
+    ``sims`` / ``c_uct`` / ``vl`` / ``pw`` are **per-side pairs**: column
+    0 configures searches run by player A (the serve-lane player), column
+    1 those run by player B.  All four are traced through the dispatch —
+    a pool multiplexes arbitrarily many (c_uct, virtual_loss, sims,
+    prior_weight) configurations with one compiled program.  ``pw`` is
+    the evaluation-lane blend weight; it only takes effect on sides
+    whose player carries an evaluator (elsewhere that side's scoring
+    keeps the static no-eval program).
     """
     state: GoState        # root position (games start from the empty board)
     key: jax.Array        # u32[2] request RNG key
@@ -119,6 +122,7 @@ class SearchRequest(NamedTuple):
     sims: jax.Array       # i32[2] playout budget/side; <=0 = configured one
     c_uct: jax.Array      # f32[2] UCT exploration constant per side
     vl: jax.Array         # f32[2] virtual-loss weight per side
+    pw: jax.Array         # f32[2] eval-lane prior blend weight per side
     ticket: jax.Array     # i32 service-assigned id
 
 
@@ -161,6 +165,7 @@ class _Pending(NamedTuple):
     sims: tuple           # (A-side, B-side) playout budgets
     c_uct: tuple          # (A-side, B-side) exploration constants
     vl: tuple             # (A-side, B-side) virtual-loss weights
+    pw: tuple             # (A-side, B-side) eval-lane prior blend weights
     ticket: int
     shard: int
     deadline: Optional[float] = None
@@ -176,6 +181,7 @@ class _Slots(NamedTuple):
     sims: jax.Array       # i32[S,2] per-request playout budget per side
     c_uct: jax.Array      # f32[S,2] per-request c_uct per side (traced)
     vl: jax.Array         # f32[S,2] per-request vl weight per side (traced)
+    pw: jax.Array         # f32[S,2] per-request prior blend per side (traced)
     a_black: jax.Array    # bool[S] player A owns Black (game lanes)
 
 
@@ -187,6 +193,7 @@ class _Queue(NamedTuple):
     sims: jax.Array       # i32[Q,2]
     c_uct: jax.Array      # f32[Q,2]
     vl: jax.Array         # f32[Q,2]
+    pw: jax.Array         # f32[Q,2]
     ticket: jax.Array     # i32[Q]
     size: jax.Array       # i32: total ever enqueued
     head: jax.Array       # i32: total ever admitted (next to admit)
@@ -230,6 +237,7 @@ class PoolState(NamedTuple):
     parity: jax.Array         # i32 global move parity (0 => Black to move)
     occ_sum: jax.Array        # i32 sum over steps of occupied slots
     occ_steps: jax.Array      # i32 dispatch steps run (occupancy denominator)
+    eval_sum: jax.Array       # i32 sum over steps of live eval-guided slots
     hop_idx: jax.Array        # i32 rebalance hop-schedule cursor
 
 
@@ -286,6 +294,7 @@ def _queue_push(q: _Queue, req: SearchRequest, n: jax.Array) -> _Queue:
         sims=put(q.sims, req.sims),
         c_uct=put(q.c_uct, req.c_uct),
         vl=put(q.vl, req.vl),
+        pw=put(q.pw, req.pw),
         ticket=put(q.ticket, req.ticket),
         size=q.size + n,
     )
@@ -301,13 +310,16 @@ class SearchService:
     compiled dispatch.
 
     Traced-vs-static contract: ``slots``, ``superstep``, the mesh shape,
-    and the players' ``MCTSConfig`` shapes are **static** (changing them
-    retraces); every per-request knob — ``sims``, ``c_uct``,
-    ``virtual_loss``, each an (A-side, B-side) pair — is **traced**, so
-    one pool multiplexes arbitrarily many tournament configurations with
-    exactly one compiled dispatch (pinned by the compile-count tests in
-    tests/test_multiplex.py).  Submitting the players' configured values
-    (the default) is bit-identical to the PR 3 static path.
+    the players' ``MCTSConfig`` shapes, and whether a player carries an
+    evaluator are **static** (changing them retraces); every per-request
+    knob — ``sims``, ``c_uct``, ``virtual_loss``, ``prior_weight``, each
+    an (A-side, B-side) pair — is **traced**, so one pool multiplexes
+    arbitrarily many tournament configurations with exactly one compiled
+    dispatch (pinned by the compile-count tests in tests/test_multiplex.py
+    and tests/test_evaluator.py).  Submitting the players' configured
+    values (the default) is bit-identical to the PR 3 static path, and
+    ``prior_weight=0`` slots of a guided pool are bit-identical to an
+    unguided pool's.
 
     ``mesh`` (a one-axis device mesh, see ``compat.make_service_mesh``)
     shards the pool: each of the axis's ``n_shard`` devices owns
@@ -469,7 +481,7 @@ class SearchService:
         bc = lambda n: (lambda x: jnp.broadcast_to(x, (n,) + jnp.shape(x)))
         # dummy slots still search every step; give them the players'
         # configured knobs so their (discarded) results stay finite
-        cfg_cu, cfg_vl = self._default_params()
+        cfg_cu, cfg_vl, cfg_pw = self._default_params()
         slots = _Slots(
             states=jax.tree.map(bc(S), self._init_state),
             keys=jnp.asarray(slot_keys),
@@ -479,6 +491,7 @@ class SearchService:
             sims=jnp.zeros((S, 2), jnp.int32),
             c_uct=jnp.broadcast_to(jnp.asarray(cfg_cu, jnp.float32), (S, 2)),
             vl=jnp.broadcast_to(jnp.asarray(cfg_vl, jnp.float32), (S, 2)),
+            pw=jnp.broadcast_to(jnp.asarray(cfg_pw, jnp.float32), (S, 2)),
             a_black=jnp.arange(S) < S // 2,
         )
 
@@ -490,6 +503,7 @@ class SearchService:
                 sims=jnp.zeros((n, 2), jnp.int32),
                 c_uct=jnp.zeros((n, 2), jnp.float32),
                 vl=jnp.zeros((n, 2), jnp.float32),
+                pw=jnp.zeros((n, 2), jnp.float32),
                 ticket=jnp.full((n,), -1, jnp.int32),
                 size=jnp.int32(0),
                 head=jnp.int32(0),
@@ -514,7 +528,7 @@ class SearchService:
             colour_count=jnp.zeros((2,), jnp.int32),
             colour_cap=jnp.int32(colour_cap), parity=jnp.int32(0),
             occ_sum=jnp.int32(0), occ_steps=jnp.int32(0),
-            hop_idx=jnp.int32(0))
+            eval_sum=jnp.int32(0), hop_idx=jnp.int32(0))
 
     # ------------------------------------------------------------ submission
 
@@ -524,10 +538,20 @@ class SearchService:
         return np.asarray(key, np.uint32).reshape(2)
 
     def _default_params(self):
-        """The players' static (c_uct, vl) pairs — per-request defaults."""
+        """The players' static (c_uct, vl, pw) pairs — per-request defaults.
+
+        The prior-blend default is a player's configured ``prior_weight``
+        only when that player carries an evaluator; an unguided player
+        defaults to 0 so its slots count (and score) as unguided however
+        the config field is set.
+        """
         return ((self.player_a.cfg.c_uct, self.player_b.cfg.c_uct),
                 (self.player_a.cfg.virtual_loss,
-                 self.player_b.cfg.virtual_loss))
+                 self.player_b.cfg.virtual_loss),
+                (self.player_a.cfg.prior_weight
+                 if self.player_a.evaluator is not None else 0.0,
+                 self.player_b.cfg.prior_weight
+                 if self.player_b.evaluator is not None else 0.0))
 
     @staticmethod
     def _pair(value, default, cast):
@@ -540,33 +564,39 @@ class SearchService:
         return (cast(a), cast(b))
 
     def submit_game(self, key=None, lane: int = LANE_ARENA, sims=0,
-                    c_uct=None, virtual_loss=None) -> int:
+                    c_uct=None, virtual_loss=None,
+                    prior_weight=None) -> int:
         """Queue one full self-play game (A vs B); returns its ticket.
 
         Colour is assigned at admission by the slot-pool cell, capped to
         the +-1 balance by ``colour_cap`` — exactly the PR 1 host queue.
 
-        ``sims`` / ``c_uct`` / ``virtual_loss`` configure this game's two
-        searches and are **traced** through the dispatch (no recompile
-        across values — the tournament-multiplexing contract).  Each
-        accepts a scalar (both sides) or an ``(a_side, b_side)`` pair;
-        ``None`` (and ``sims <= 0``) means the players' configured
-        values, which is bit-identical to the pre-traced path.
+        ``sims`` / ``c_uct`` / ``virtual_loss`` / ``prior_weight``
+        configure this game's two searches and are **traced** through
+        the dispatch (no recompile across values — the tournament-
+        multiplexing contract).  Each accepts a scalar (both sides) or
+        an ``(a_side, b_side)`` pair; ``None`` (and ``sims <= 0``) means
+        the players' configured values, which is bit-identical to the
+        pre-traced path.  ``prior_weight`` is the evaluation-lane blend:
+        it only affects sides whose player has an evaluator, and ``0``
+        makes that side's search bit-identical to the unguided program.
         """
         if lane not in GAME_LANES:
             raise ValueError(f"game lane must be one of {GAME_LANES}")
         return self._submit(self._pending_games, self._init_state,
-                            key, lane, sims, c_uct, virtual_loss)
+                            key, lane, sims, c_uct, virtual_loss,
+                            prior_weight)
 
     def submit_serve(self, state: GoState, key=None, sims=0,
-                     c_uct=None, virtual_loss=None,
+                     c_uct=None, virtual_loss=None, prior_weight=None,
                      deadline: Optional[float] = None) -> int:
         """Queue one external best-move query for ``state``; returns its
         ticket.  The single search always runs under player A with the
         request key, so the result is a pure function of
-        ``(state, key, sims, c_uct, virtual_loss)`` — placement- and
-        batch-mate-independent.  ``c_uct`` / ``virtual_loss`` are traced
-        per-query strength knobs defaulting to player A's config.
+        ``(state, key, sims, c_uct, virtual_loss, prior_weight)`` —
+        placement- and batch-mate-independent.  ``c_uct`` /
+        ``virtual_loss`` / ``prior_weight`` are traced per-query
+        strength knobs defaulting to player A's config.
 
         ``deadline`` (absolute ``time.monotonic`` seconds, ``None`` = no
         SLO) is host-only metadata consumed by :meth:`shed_expired`: a
@@ -576,20 +606,21 @@ class SearchService:
         """
         return self._submit(self._pending_serve, state, key,
                             LANE_SERVE, sims, c_uct, virtual_loss,
-                            deadline=deadline)
+                            prior_weight, deadline=deadline)
 
     def _submit(self, pending: List[_Pending], state: GoState, key,
-                lane: int, sims, c_uct, virtual_loss,
+                lane: int, sims, c_uct, virtual_loss, prior_weight=None,
                 deadline: Optional[float] = None) -> int:
         cls = CLS_SERVE if lane == LANE_SERVE else CLS_GAME
         cap = (self.serve_capacity if cls == CLS_SERVE
                else self.game_capacity)
-        cfg_cu, cfg_vl = self._default_params()
+        cfg_cu, cfg_vl, cfg_pw = self._default_params()
         sims = self._pair(sims, (0, 0), int)
         cu = self._pair(c_uct, cfg_cu, float)
         vl = self._pair(virtual_loss, cfg_vl, float)
+        pw = self._pair(prior_weight, cfg_pw, float)
         shard = self._placement.choose(cls, cap,
-                                       config_key=(sims, cu, vl))
+                                       config_key=(sims, cu, vl, pw))
         if shard is None:
             raise RuntimeError(
                 f"{LANE_NAMES[lane]} queue full ({cap} in flight per "
@@ -598,7 +629,7 @@ class SearchService:
         self._next_ticket += 1
         pending.append(_Pending(state=state, key=self._draw_key(key),
                                 lane=lane, sims=sims, c_uct=cu, vl=vl,
-                                ticket=ticket, shard=shard,
+                                pw=pw, ticket=ticket, shard=shard,
                                 deadline=deadline))
         self._assigned[ticket] = (cls, shard)
         self._submitted[lane] += 1
@@ -638,6 +669,8 @@ class SearchService:
             c_uct=jnp.asarray([r.c_uct for r in rows] + [(0., 0.)] * pad,
                               jnp.float32),
             vl=jnp.asarray([r.vl for r in rows] + [(0., 0.)] * pad,
+                           jnp.float32),
+            pw=jnp.asarray([r.pw for r in rows] + [(0., 0.)] * pad,
                            jnp.float32),
             ticket=jnp.asarray([r.ticket for r in rows] + [-1] * pad,
                                jnp.int32),
@@ -776,7 +809,7 @@ class SearchService:
         chunk = SearchRequest(
             state=jax.tree.map(lambda x: x[idx], gq.states),
             key=gq.keys[idx], lane=gq.lane[idx], sims=gq.sims[idx],
-            c_uct=gq.c_uct[idx], vl=gq.vl[idx],
+            c_uct=gq.c_uct[idx], vl=gq.vl[idx], pw=gq.pw[idx],
             ticket=gq.ticket[idx])
         got = jax.tree.map(lambda x: lax.ppermute(x, self._axis, to_next),
                            chunk)
@@ -832,6 +865,7 @@ class SearchService:
             sims=merge(sl.sims, sq.sims, gq.sims),
             c_uct=merge(sl.c_uct, sq.c_uct, gq.c_uct),
             vl=merge(sl.vl, sq.vl, gq.vl),
+            pw=merge(sl.pw, sq.pw, gq.pw),
             a_black=jnp.where(adm_s, True,
                               jnp.where(adm_g, cellA, sl.a_black)),
         )
@@ -848,8 +882,13 @@ class SearchService:
 
         After the involution gather the head half is always the slots
         player A moves in, so A's search reads the requests' side-0
-        (sims, c_uct, vl) columns and B's the side-1 columns — the traced
-        per-slot knobs that let one compiled dispatch host mixed configs.
+        (sims, c_uct, vl, pw) columns and B's the side-1 columns — the
+        traced per-slot knobs that let one compiled dispatch host mixed
+        configs.  A side's ``pw`` column reaches its search only when
+        that player carries an evaluator (a static Python check: the
+        guided and unguided players compile different scoring programs,
+        but within a guided player the blend weight — and so any
+        guided/unguided slot mix — is pure data).
         """
         sl = pool.slots
         S = sl.ticket.shape[0]
@@ -864,18 +903,23 @@ class SearchService:
         sims_p = sl.sims[idx]
         cu_p = sl.c_uct[idx]
         vl_p = sl.vl[idx]
+        pw_p = sl.pw[idx]
         is_serve = (sl.lane == LANE_SERVE) & (sl.ticket >= 0)
         # serve contract: the query key drives its (single) search directly
         ka = jnp.where(is_serve[idx][:, None], keys_p, ka)
 
+        a_eval = self.player_a.evaluator is not None
+        b_eval = self.player_b.evaluator is not None
         head = jax.tree.map(lambda x: x[:h], st)
         tail = jax.tree.map(lambda x: x[h:], st)
         res_a = self.player_a.search_batch(
             head, ka[:h], sims_p[:h, 0],
-            params=SearchParams(cu_p[:h, 0], vl_p[:h, 0]))
+            params=SearchParams(cu_p[:h, 0], vl_p[:h, 0],
+                                pw_p[:h, 0] if a_eval else None))
         res_b = self.player_b.search_batch(
             tail, kb[h:], sims_p[h:, 1],
-            params=SearchParams(cu_p[h:, 1], vl_p[h:, 1]))
+            params=SearchParams(cu_p[h:, 1], vl_p[h:, 1],
+                                pw_p[h:, 1] if b_eval else None))
         actions = jnp.concatenate([res_a.action, res_b.action])
         nodes = jnp.concatenate([res_a.tree.size, res_b.tree.size])
         visits = jnp.concatenate([res_a.root_visits, res_b.root_visits])
@@ -896,18 +940,29 @@ class SearchService:
         finished = is_serve | game_done
         winner = jax.vmap(self.engine.result)(new_st)
 
+        # eval-batch occupancy: live slots whose *searching* side this
+        # step was guided (pw > 0 under a player with an evaluator) —
+        # the useful fraction of the superstep's net-forward rows
+        live_p = live[idx]
+        guided_a = (live_p[:h] & (pw_p[:h, 0] > 0)) if a_eval \
+            else jnp.zeros((h,), jnp.bool_)
+        guided_b = (live_p[h:] & (pw_p[h:, 1] > 0)) if b_eval \
+            else jnp.zeros((h,), jnp.bool_)
+
         ring = self._append_ring(pool.ring, finished, sl, actions, winner,
                                  moves_new, nodes, visits, pool.occ_steps)
         slots = _Slots(
             states=new_st, keys=new_keys,
             ticket=jnp.where(finished, -1, sl.ticket),
             lane=sl.lane, moves=moves_new, sims=sl.sims,
-            c_uct=sl.c_uct, vl=sl.vl,
+            c_uct=sl.c_uct, vl=sl.vl, pw=sl.pw,
             a_black=sl.a_black)
         return pool._replace(slots=slots, ring=ring,
                              parity=pool.parity + 1,
                              occ_sum=pool.occ_sum + live.sum(),
-                             occ_steps=pool.occ_steps + 1)
+                             occ_steps=pool.occ_steps + 1,
+                             eval_sum=(pool.eval_sum + guided_a.sum()
+                                       + guided_b.sum()))
 
     def _append_ring(self, ring: _Ring, finished, sl: _Slots, actions,
                      winner, moves, nodes, visits, step) -> _Ring:
@@ -1106,6 +1161,24 @@ class SearchService:
         occ = np.atleast_1d(np.asarray(occ)).astype(np.float64)
         steps = np.atleast_1d(np.asarray(steps)).astype(np.float64)
         return occ / np.maximum(steps * self._shard_slots, 1.0)
+
+    def eval_occupancy(self) -> np.ndarray:
+        """Mean fraction of slots doing *guided* search per shard.
+
+        The evaluation-lane analogue of :meth:`shard_occupancy`: of all
+        slot-steps since reset(), the fraction whose searching side was
+        live and eval-guided (``prior_weight > 0`` under a player with
+        an evaluator).  Because every slot's search contributes a fixed
+        ``lanes``-row stripe to the superstep's net-forward batch, this
+        is exactly the useful fraction of eval-batch rows — the
+        benchmark's occupancy column (benchmarks/bench_eval.py gates on
+        it staying >= 0.5 at the default pool size).
+        """
+        ev, steps = jax.device_get((self._pool.eval_sum,
+                                    self._pool.occ_steps))
+        ev = np.atleast_1d(np.asarray(ev)).astype(np.float64)
+        steps = np.atleast_1d(np.asarray(steps)).astype(np.float64)
+        return ev / np.maximum(steps * self._shard_slots, 1.0)
 
     def shed_expired(self, now: Optional[float] = None) -> List[int]:
         """Drop expired host-pending serve requests before they flush.

@@ -50,7 +50,8 @@ from repro.go.board import GoEngine
 
 # MCTSConfig fields that may differ between multiplexed configs: they are
 # traced through the dispatch (seed is host-side bookkeeping only).
-TRACED_FIELDS = ("c_uct", "virtual_loss", "sims_per_move", "seed")
+TRACED_FIELDS = ("c_uct", "virtual_loss", "sims_per_move", "prior_weight",
+                 "seed")
 
 
 def trace_compatible(configs: Sequence[MCTSConfig]) -> bool:
@@ -128,8 +129,9 @@ class Tournament:
 
     Static-vs-traced contract: the slot count, superstep, mesh shape, and
     the configs' shared search shape compile **once**; each game's
-    ``(c_uct, virtual_loss, sims)`` ride through the dispatch as traced
-    per-slot values, so a tournament over N trace-compatible configs
+    ``(c_uct, virtual_loss, sims, prior_weight)`` ride through the
+    dispatch as traced per-slot values, so a tournament over N
+    trace-compatible configs
     costs exactly one compilation regardless of N (pinned in
     tests/test_multiplex.py).  ``multiplex=None`` auto-detects
     compatibility; ``False`` forces the legacy per-pair pools.
@@ -243,7 +245,9 @@ class Tournament:
                     sims=(cfgs[a].sims_per_move, cfgs[b].sims_per_move),
                     c_uct=(cfgs[a].c_uct, cfgs[b].c_uct),
                     virtual_loss=(cfgs[a].virtual_loss,
-                                  cfgs[b].virtual_loss))
+                                  cfgs[b].virtual_loss),
+                    prior_weight=(cfgs[a].prior_weight,
+                                  cfgs[b].prior_weight))
                 meta[t] = (i, j, a)
         recs = svc.drain()
         self.host_syncs += svc.host_syncs

@@ -42,11 +42,20 @@ def _tile_state(state: GoState, n: int) -> GoState:
 
 def init_tree(engine: GoEngine, root: GoState, max_nodes: int,
               root_prior: jax.Array | None = None) -> Tree:
-    """Arena with the root installed at slot 0."""
+    """Arena with the root installed at slot 0.
+
+    A caller-supplied ``root_prior`` (the ``MCTS.prior_fn`` root path) is
+    normalised over the root's *legal* moves before it is stored — the
+    selection kernels assume priors are a distribution over legal actions,
+    and a policy net emits mass on illegal points (see
+    :func:`normalize_prior`).
+    """
     n, a = max_nodes, engine.num_actions
     legal0 = engine.legal_moves(root)
     if root_prior is None:
         root_prior = uniform_prior(legal0)
+    else:
+        root_prior = normalize_prior(root_prior, legal0)
     states = _tile_state(root, n)
     return Tree(
         visit=jnp.zeros((n,), jnp.float32).at[0].set(1.0),
@@ -83,6 +92,22 @@ def uniform_prior(legal: jax.Array) -> jax.Array:
     return m / jnp.maximum(m.sum(-1, keepdims=True), 1.0)
 
 
+def normalize_prior(prior: jax.Array, legal: jax.Array) -> jax.Array:
+    """Mask ``prior`` to the legal moves and renormalise to sum 1.
+
+    The contract every stored tree prior satisfies (root install and
+    child allocation both route through here): zero mass on illegal
+    actions, unit mass over legal ones, with a uniform fallback when the
+    raw prior leaves (numerically) nothing on any legal move — a policy
+    head that concentrated all its mass on illegal points must not
+    produce a zero/NaN prior row.
+    """
+    p = jnp.where(legal, prior.astype(jnp.float32), 0.0)
+    s = p.sum(-1, keepdims=True)
+    return jnp.where(s > 1e-12, p / jnp.maximum(s, 1e-12),
+                     uniform_prior(legal))
+
+
 def node_state(tree: Tree, idx) -> GoState:
     return jax.tree.map(lambda x: x[idx], tree.states)
 
@@ -105,7 +130,8 @@ def allocate(engine: GoEngine, tree: Tree, parent, action,
     parent_state = node_state(tree, parent)
     child_state = engine.play(parent_state, action)
     legal = engine.legal_moves(child_state)
-    prior = prior_fn(child_state, legal) if prior_fn else uniform_prior(legal)
+    prior = normalize_prior(prior_fn(child_state, legal), legal) \
+        if prior_fn else uniform_prior(legal)
 
     def do_alloc(t: Tree) -> Tree:
         return t._replace(

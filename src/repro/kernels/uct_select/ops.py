@@ -4,10 +4,13 @@ Pads the action axis to a 128-lane multiple and the batch axis to the row
 tile, calls the kernel, and slices back.  ``repro.core.mcts`` routes its
 edge scoring through here so the kernel and the search share one call site.
 
-``c_uct`` / ``vl_weight`` are **traced** operands (Python float or per-row
-``[B]`` array, broadcast to a ``[B, 1]`` column for the kernel) — never
-static arguments — so scoring N distinct search configurations compiles
-exactly once.  Only ``use_puct`` and ``interpret`` select a program.
+``c_uct`` / ``vl_weight`` / ``prior_w`` are **traced** operands (Python
+float or per-row ``[B]`` array, broadcast to a ``[B, 1]`` column for the
+kernel) — never static arguments — so scoring N distinct search
+configurations compiles exactly once.  Only ``use_puct``, ``interpret``,
+and the *presence* of ``prior_w`` (the evaluation-lane blend: the guided
+and unguided programs differ in arithmetic, not in its weight values)
+select a program.
 """
 from __future__ import annotations
 
@@ -29,12 +32,17 @@ def _pad2(x, b_to, a_to):
 @functools.partial(jax.jit, static_argnames=("use_puct", "interpret"))
 def uct_scores(child_visit, child_value, child_vloss, prior, legal,
                has_child, parent_n, player, *, c_uct=0.9, vl_weight=1.0,
-               use_puct: bool = False, interpret: bool = False):
+               prior_w=None, use_puct: bool = False,
+               interpret: bool = False):
     """Batched edge scores [B, A]; see ref.py for semantics.
 
     ``c_uct`` / ``vl_weight`` accept a scalar (one configuration for the
     whole batch) or an ``[B]`` array (one per row); both are traced, so
-    changing their values never recompiles.
+    changing their values never recompiles.  ``prior_w`` (same shapes,
+    also traced) selects the blended UCT/PUCT scoring: ``0`` rows score
+    exactly like the static UCT program, ``1`` rows exactly like PUCT,
+    and any mix shares one compiled program — ``use_puct`` is ignored
+    when it is given.
     """
     use_pallas = interpret or jax.default_backend() == "tpu"
     legal = legal.astype(jnp.float32)
@@ -43,7 +51,7 @@ def uct_scores(child_visit, child_value, child_vloss, prior, legal,
         return uct_scores_ref(child_visit, child_value, child_vloss, prior,
                               legal, has_child, parent_n, player,
                               c_uct=c_uct, vl_weight=vl_weight,
-                              use_puct=use_puct)
+                              prior_w=prior_w, use_puct=use_puct)
     b, a = child_visit.shape
     bp = -(-b // ROWS) * ROWS
     ap = -(-a // LANE) * LANE
@@ -54,6 +62,14 @@ def uct_scores(child_visit, child_value, child_vloss, prior, legal,
     pidx = jnp.pad(player.astype(jnp.float32), (0, bp - b))[:, None]
     cols = [jnp.pad(per_row(x, b)[:, 0], (0, bp - b))[:, None]
             for x in (c_uct, vl_weight)]
-    out = uct_scores_pallas(*args2, pn, pidx, *cols, use_puct=use_puct,
-                            interpret=interpret)
+    if prior_w is not None:
+        # prefold the per-row legal count (the uniform-prior denominator)
+        # so the kernel's blend matches the oracle's reduction exactly
+        n_legal = jnp.pad(legal.sum(-1), (0, bp - b))[:, None]
+        pw = jnp.pad(per_row(prior_w, b)[:, 0], (0, bp - b))[:, None]
+        out = uct_scores_pallas(*args2, pn, pidx, *cols, pw, n_legal,
+                                use_puct=False, interpret=interpret)
+    else:
+        out = uct_scores_pallas(*args2, pn, pidx, *cols,
+                                use_puct=use_puct, interpret=interpret)
     return out[:b, :a]

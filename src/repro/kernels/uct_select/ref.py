@@ -18,6 +18,18 @@ Semantics (matches ``repro.core.mcts.MCTS._edge_scores`` exactly):
   puct : u = c * prior * sqrt(parent_n) / (1 + n + vloss)
          score = has_child ? q + u : c * prior * sqrt(parent_n)
   illegal edges score -BIG.
+
+``prior_w`` (the evaluation-lane blend, PR 7) replaces the *static*
+``use_puct`` branch with a traced per-row weight ``w``::
+
+  score = (1 - w) * uct_score(uniform(legal)) + w * puct_score(prior)
+
+The UCT half recomputes the uniform prior from the legal mask rather than
+reading the stored (neural) prior, so ``w = 0`` is bit-identical to the
+static UCT path over a uniform-prior tree whatever the evaluation lane
+scattered into ``prior`` — both halves are always computed and the blend
+is pure traced arithmetic, which is what lets one compiled dispatch serve
+guided (``w > 0``) and unguided (``w = 0``) slots in the same pool.
 """
 import jax.numpy as jnp
 
@@ -32,17 +44,31 @@ def per_row(x, b: int) -> jnp.ndarray:
 
 def uct_scores_ref(child_visit, child_value, child_vloss, prior, legal,
                    has_child, parent_n, player, *, c_uct, vl_weight,
-                   use_puct: bool):
+                   use_puct: bool, prior_w=None):
     """All inputs [B, A] except parent_n, player [B]; returns scores [B, A].
 
     ``c_uct`` / ``vl_weight`` are traced: float or [B] (broadcast per row).
+    ``prior_w`` (float or [B], also traced) switches to the blended
+    UCT/PUCT scoring described in the module docstring; ``use_puct`` is
+    ignored when it is given.
     """
     b = child_visit.shape[0]
     c = per_row(c_uct, b)
     vlw = per_row(vl_weight, b)
     n_eff = jnp.maximum(child_visit + child_vloss, 1.0)
     q = (player[:, None] * child_value - child_vloss * vlw) / n_eff
-    if use_puct:
+    if prior_w is not None:
+        w = per_row(prior_w, b)
+        m = legal.astype(jnp.float32)
+        uniform = m / jnp.maximum(m.sum(-1, keepdims=True), 1.0)
+        pn = jnp.maximum(parent_n, 2.0)[:, None]
+        u_uct = c * jnp.sqrt(jnp.log(pn) / n_eff)
+        s_uct = jnp.where(has_child, q + u_uct, FPU + uniform)
+        root_term = jnp.sqrt(parent_n)[:, None]
+        u_puct = c * prior * root_term / (1.0 + child_visit + child_vloss)
+        s_puct = jnp.where(has_child, q + u_puct, c * prior * root_term)
+        score = (1.0 - w) * s_uct + w * s_puct
+    elif use_puct:
         root_term = jnp.sqrt(parent_n)[:, None]
         u = c * prior * root_term / (1.0 + child_visit + child_vloss)
         score = jnp.where(has_child, q + u, c * prior * root_term)

@@ -5,6 +5,9 @@ tickets and answered through the SearchService dispatcher's slot pool.
 ``--pipeline-depth K`` streams the serve loop — up to K supersteps stay
 in flight while the host queues fresh queries and unpacks answers
 (``host blocked`` in the report is the time that overlap removes).
+``--eval-config`` serves through the neural evaluation lane
+(core/evaluator.py); ``--prior-weight`` then blends UCT toward PUCT per
+query without retracing.
 
     PYTHONPATH=src python -m repro.launch.serve_go --board 5 --sims 32 \
         --queries 8 --prefix-moves 6 --pipeline-depth 4
@@ -52,6 +55,14 @@ def main() -> None:
                          "any value reuses the compiled bucket)")
     ap.add_argument("--virtual-loss", type=float, default=None,
                     help="per-query virtual-loss weight (traced)")
+    ap.add_argument("--eval-config", default=None, metavar="SPEC",
+                    help="serve through the neural evaluation lane: a "
+                         "k=v,k=v EvalConfig spec, e.g. "
+                         "'d_model=64,ckpt_dir=/tmp/net' (board_size is "
+                         "taken from --board); empty string = defaults")
+    ap.add_argument("--prior-weight", type=float, default=None,
+                    help="per-query UCT<->PUCT blend weight (traced; "
+                         "needs --eval-config; 0 = unguided)")
     ap.add_argument("--shards", type=int, default=1,
                     help="shard the serving pool over this many devices")
     ap.add_argument("--placement", default="round_robin",
@@ -66,12 +77,18 @@ def main() -> None:
         from repro.compat import make_service_mesh
         mesh = make_service_mesh(args.shards)
 
+    mcts_kw = {}
+    if args.eval_config is not None:
+        from repro.core.evaluator import EvalConfig, EvalService
+        cfg = EvalConfig.parse(args.eval_config, board_size=args.board)
+        mcts_kw["evaluator"] = EvalService(cfg)
+
     engine = GoEngine(args.board, args.komi)
     rng = np.random.default_rng(args.seed)
     svc = GoService(board_size=args.board, komi=args.komi,
                     max_sims=args.sims, lanes=args.lanes, slots=args.slots,
                     seed=args.seed, mesh=mesh, placement=args.placement,
-                    pipeline_depth=args.pipeline_depth)
+                    pipeline_depth=args.pipeline_depth, **mcts_kw)
 
     boards = [random_position(engine, rng, args.prefix_moves)
               for _ in range(args.queries)]
@@ -81,7 +98,8 @@ def main() -> None:
     # supersteps in flight (and stall-guard with max_polls)
     t0 = time.time()
     tickets = [svc.submit(b, to_play=tp, c_uct=args.c_uct,
-                          virtual_loss=args.virtual_loss)
+                          virtual_loss=args.virtual_loss,
+                          prior_weight=args.prior_weight)
                for b, tp in boards]
     svc.flush()
     results = [svc.result(t) for t in tickets]

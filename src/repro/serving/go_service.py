@@ -183,6 +183,12 @@ class GoService:
     downgrading rides the traced ``sims`` budget, so SLO enforcement
     adds **zero** new jit traces (tests/test_server.py asserts the
     compile count).
+
+    Extra keyword arguments flow to :class:`~repro.core.mcts.MCTS` — in
+    particular ``evaluator=EvalService(...)`` puts every bucket on the
+    neural evaluation lane, after which the per-query ``prior_weight``
+    knob blends UCT toward PUCT per request without a new trace
+    (``prior_weight=0`` stays bit-identical to the unguided service).
     """
 
     def __init__(self, board_size: int = 9, komi: float = 6.0,
@@ -281,6 +287,7 @@ class GoService:
                komi: Optional[float] = None, sims: int = 0,
                key=None, c_uct: Optional[float] = None,
                virtual_loss: Optional[float] = None,
+               prior_weight: Optional[float] = None,
                deadline_ms: Optional[float] = None) -> int:
         """Queue one best-move query; returns a ticket for :meth:`result`.
 
@@ -288,9 +295,13 @@ class GoService:
         caps the playout budget (0 / > max_sims both mean ``max_sims``);
         ``c_uct`` / ``virtual_loss`` override the bucket's UCT constants
         (``None`` keeps the bucket defaults, bit-identical to omitting
-        them).  ``komi`` is *static* — a new value opens a new bucket and
-        compiles.  ``key`` fixes the search RNG for reproducible answers
-        (default: drawn from the service chain).
+        them); ``prior_weight`` sets the eval-lane UCT<->PUCT blend when
+        the service was built with ``evaluator=`` (an
+        :class:`repro.core.evaluator.EvalService` in ``mcts_kw``) — it is
+        silently inert otherwise.  ``komi`` is *static* — a new value
+        opens a new bucket and compiles.  ``key`` fixes the search RNG
+        for reproducible answers (default: drawn from the service
+        chain).
 
         SLO path: admission is queue-depth gated — past
         ``admission_limit`` outstanding requests in the bucket the query
@@ -335,6 +346,7 @@ class GoService:
         state = self._to_state(board, to_play, svc.engine)
         inner = svc.submit_serve(state, key=key, sims=granted,
                                  c_uct=c_uct, virtual_loss=virtual_loss,
+                                 prior_weight=prior_weight,
                                  deadline=deadline)
         ticket = self._next_ticket
         self._next_ticket += 1
@@ -474,25 +486,29 @@ class GoService:
                   komi: Optional[float] = None, sims: int = 0,
                   key=None, c_uct: Optional[float] = None,
                   virtual_loss: Optional[float] = None,
+                  prior_weight: Optional[float] = None,
                   deadline_ms: Optional[float] = None,
                   timeout_s: Optional[float] = None) -> MoveResult:
         """Blocking single query: board in, move out.
 
-        ``sims`` / ``c_uct`` / ``virtual_loss`` are the traced per-query
-        knobs of :meth:`submit` (they never recompile the bucket);
-        ``deadline_ms`` engages the SLO path (downgrade or shed) and
-        ``timeout_s`` bounds the blocking wait.
+        ``sims`` / ``c_uct`` / ``virtual_loss`` / ``prior_weight`` are
+        the traced per-query knobs of :meth:`submit` (they never
+        recompile the bucket); ``deadline_ms`` engages the SLO path
+        (downgrade or shed) and ``timeout_s`` bounds the blocking wait.
         """
         return self.result(self.submit(board, to_play, komi, sims, key,
                                        c_uct=c_uct,
                                        virtual_loss=virtual_loss,
+                                       prior_weight=prior_weight,
                                        deadline_ms=deadline_ms),
                            timeout_s=timeout_s)
 
     def best_move_batch(self, boards, to_play: int = BLACK,
-                        komi: Optional[float] = None,
-                        sims: int = 0) -> List[MoveResult]:
+                        komi: Optional[float] = None, sims: int = 0,
+                        prior_weight: Optional[float] = None,
+                        ) -> List[MoveResult]:
         """Queue a batch of queries, then poll them all (one pool pass)."""
-        tickets = [self.submit(b, to_play, komi, sims) for b in boards]
+        tickets = [self.submit(b, to_play, komi, sims,
+                               prior_weight=prior_weight) for b in boards]
         self.flush()
         return [self.result(t) for t in tickets]

@@ -1,0 +1,117 @@
+"""Regenerate tests/fixtures/eval9: a heuristic-distilled 9x9 eval net.
+
+The win-rate sanity test (tests/test_evaluator.py, slow tier) needs a
+checkpoint that is *deterministically better than uniform* without
+shipping a real training run.  This script distils a classical Go
+heuristic into the tiny EvalService transformer:
+
+* policy target: softmax over legal moves of ``center preference +
+  stone adjacency``, with pass strongly discouraged — enough signal
+  that PUCT at small budgets clearly outplays uniform priors;
+* value target: ``tanh((Tromp-Taylor score - komi) / 6)`` — current
+  area lead as a black-perspective outcome estimate.
+
+Positions are random-playout boards (uniform legal moves), so the net
+sees the whole phase range.  The checkpoint directory
+``tests/fixtures/eval9/`` is committed; rerun this script only to
+refresh it:
+
+    PYTHONPATH=src python tests/fixtures/distill_eval9.py
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import save_checkpoint
+from repro.config import TrainConfig
+from repro.core.evaluator import EvalConfig, EvalService
+from repro.core.tree import normalize_prior
+from repro.go import GoEngine
+from repro.training.step import init_train_state, make_train_step
+
+# keep in sync with FIXTURE_ECFG in tests/test_evaluator.py
+ECFG = EvalConfig(board_size=9, d_model=16, num_layers=1, num_heads=2,
+                  d_ff=32)
+N_POSITIONS = 512
+STEPS = 400
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "eval9")
+
+
+def heuristic_targets(engine: GoEngine, board: np.ndarray,
+                      legal: np.ndarray):
+    """(policy over A, value) targets for one position."""
+    n = engine.size
+    r, c = np.divmod(np.arange(n * n), n)
+    center = (n - 1) / 2.0
+    cheb = np.maximum(np.abs(r - center), np.abs(c - center))
+    logits = 1.0 - 0.35 * cheb                      # center preference
+    grid = board.reshape(n, n)
+    occ = grid != 0
+    near = np.zeros((n, n), bool)
+    near[1:, :] |= occ[:-1, :]
+    near[:-1, :] |= occ[1:, :]
+    near[:, 1:] |= occ[:, :-1]
+    near[:, :-1] |= occ[:, 1:]
+    logits = logits + 0.8 * near.reshape(-1)        # contact moves
+    logits = np.concatenate([logits, [-4.0]])       # pass: last resort
+    masked = np.where(legal, logits, -1e9)
+    e = np.exp(masked - masked.max())
+    return e / e.sum(), float(np.tanh(
+        (float(engine.score(jnp.asarray(board))) - engine.komi) / 6.0))
+
+
+def make_batch(engine: GoEngine, evaluator: EvalService, n_pos: int,
+               seed: int):
+    rng = np.random.default_rng(seed)
+    toks, legals, pols, vals = [], [], [], []
+    for i in range(n_pos):
+        st = engine.init_state()
+        for _ in range(int(rng.integers(0, 50))):
+            legal = np.asarray(engine.jit_legal(st))[: engine.n2]
+            if not legal.any():
+                break
+            st = engine.jit_play(st, jnp.int32(rng.choice(
+                np.where(legal)[0])))
+        legal = np.asarray(engine.jit_legal(st))
+        board = np.asarray(st.board)
+        pol, val = heuristic_targets(engine, board, legal)
+        toks.append(np.asarray(evaluator.tokens(st)))
+        legals.append(legal)
+        pols.append(pol)
+        vals.append(val)
+    return {"tokens": jnp.asarray(np.stack(toks), jnp.int32),
+            "legal": jnp.asarray(np.stack(legals)),
+            "policy": jnp.asarray(np.stack(pols), jnp.float32),
+            "value": jnp.asarray(np.asarray(vals), jnp.float32)}
+
+
+def main() -> None:
+    engine = GoEngine(ECFG.board_size, komi=6.0)
+    evaluator = EvalService(ECFG)
+    batch = make_batch(engine, evaluator, N_POSITIONS, seed=0)
+
+    tcfg = TrainConfig(steps=STEPS, lr=5e-3, warmup_steps=20,
+                       weight_decay=0.0, z_loss=0.0, remat=False)
+    state = init_train_state(evaluator, tcfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(evaluator, tcfg))
+    for i in range(STEPS):
+        state, metrics = step(state, batch)
+        if i % 100 == 0 or i == STEPS - 1:
+            print(f"step {i:4d}: loss {float(metrics['loss']):.4f} "
+                  f"ce {float(metrics['ce']):.4f}")
+    # sanity: the distilled prior must prefer the center opening move
+    st = engine.init_state()
+    trained = EvalService(ECFG, params=state.params)
+    prior = np.asarray(trained.prior_fn(st, engine.legal_moves(st)))
+    print(f"center mass {prior[40]:.3f} vs corner {prior[0]:.3f} "
+          f"vs pass {prior[-1]:.5f}")
+    assert prior[40] > prior[0] and prior[40] > prior[-1]
+    path = save_checkpoint(OUT, 1, state.params,
+                           extra={"distilled": "center+contact heuristic"})
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

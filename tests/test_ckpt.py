@@ -1,0 +1,112 @@
+"""Checkpoint round-trips for *model* param trees (PR 7 satellite).
+
+tests/test_substrate.py covers the generic pytree plumbing; this file
+pins the contracts the evaluation lane leans on: a full
+``EvalService.init`` tree (nested dicts, mixed shapes, tied embeddings)
+survives save -> restore bit-for-bit, and ``AsyncCheckpointer`` keeps its
+flush ordering — snapshot-at-save semantics, one write in flight,
+errors surfaced on the next ``wait()``.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import (AsyncCheckpointer, latest_step,
+                                   restore_checkpoint, save_checkpoint)
+from repro.core.evaluator import EvalConfig, EvalService
+
+ECFG = EvalConfig(board_size=5, d_model=16, num_layers=1, num_heads=2,
+                  d_ff=32)
+
+
+@pytest.fixture(scope="module")
+def tree():
+    return EvalService(ECFG).params
+
+
+def _assert_trees_equal(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert [p for p, _ in la] == [p for p, _ in lb]
+    for (path, x), (_, y) in zip(la, lb):
+        assert x.dtype == y.dtype, path
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=str(path))
+
+
+class TestModelTreeRoundTrip:
+    def test_save_restore_bit_identical(self, tree, tmp_path):
+        save_checkpoint(str(tmp_path), 5, tree, extra={"gen": 1})
+        got, step, extra = restore_checkpoint(str(tmp_path), tree)
+        assert (step, extra) == (5, {"gen": 1})
+        _assert_trees_equal(tree, got)
+
+    def test_restore_picks_latest_and_explicit_step(self, tree, tmp_path):
+        save_checkpoint(str(tmp_path), 1, tree)
+        bumped = jax.tree.map(lambda x: x + 1.0, tree)
+        save_checkpoint(str(tmp_path), 2, bumped)
+        assert latest_step(str(tmp_path)) == 2
+        got, step, _ = restore_checkpoint(str(tmp_path), tree)
+        assert step == 2
+        _assert_trees_equal(bumped, got)
+        old, step, _ = restore_checkpoint(str(tmp_path), tree, step=1)
+        assert step == 1
+        _assert_trees_equal(tree, old)
+
+    def test_loads_into_fresh_eval_service(self, tree, tmp_path):
+        """The EvalService ckpt_dir path end to end: trained params in,
+        identical service out."""
+        bumped = jax.tree.map(lambda x: x * 2.0 + 1.0, tree)
+        save_checkpoint(str(tmp_path), 7, bumped)
+        import dataclasses
+        svc = EvalService(dataclasses.replace(ECFG,
+                                              ckpt_dir=str(tmp_path)))
+        _assert_trees_equal(bumped, svc.params)
+
+
+class TestAsyncFlushOrdering:
+    def test_snapshot_at_save_not_at_write(self, tmp_path):
+        """save() snapshots device arrays immediately; mutating the live
+        tree afterwards must not leak into the in-flight write."""
+        live = {"w": jnp.arange(8.0)}
+        ck = AsyncCheckpointer(str(tmp_path))
+        ck.save(1, live)
+        live["w"] = live["w"] * 0.0          # "training step" after save
+        ck.wait()
+        got, _, _ = restore_checkpoint(str(tmp_path), live)
+        np.testing.assert_array_equal(np.asarray(got["w"]),
+                                      np.arange(8.0))
+
+    def test_one_in_flight_back_to_back_saves(self, tree, tmp_path):
+        """A second save() drains the first before snapshotting — every
+        step lands, in order, even with zero explicit wait()s between."""
+        ck = AsyncCheckpointer(str(tmp_path), keep=5)
+        trees = [jax.tree.map(lambda x, s=s: x + float(s), tree)
+                 for s in range(3)]
+        for s, t in enumerate(trees):
+            ck.save(s, t)
+        ck.wait()
+        for s in range(3):
+            got, _, _ = restore_checkpoint(str(tmp_path), tree, step=s)
+            _assert_trees_equal(trees[s], got)
+
+    def test_gc_keeps_newest(self, tree, tmp_path):
+        ck = AsyncCheckpointer(str(tmp_path), keep=2)
+        for s in range(4):
+            ck.save(s, tree)
+        ck.wait()
+        kept = sorted(d for d in os.listdir(tmp_path)
+                      if d.startswith("step_"))
+        assert kept == ["step_00000002", "step_00000003"]
+
+    def test_write_error_surfaces_on_wait(self, tree, tmp_path):
+        blocker = tmp_path / "not_a_dir"
+        blocker.write_text("occupied")
+        ck = AsyncCheckpointer(str(blocker))
+        ck.save(1, tree)
+        with pytest.raises(BaseException):
+            ck.wait()
+        ck.wait()                            # error cleared, not sticky

@@ -1,0 +1,346 @@
+"""Evaluation-lane tests: the PR 7 neural policy/value graft.
+
+Four invariant groups:
+
+* **prior hygiene** — every stored tree prior is a distribution over
+  legal moves (illegal mass zeroed, unit sum, uniform fallback), on the
+  root-install path under vmapped batch init and on the net output;
+* **w = 0 bit-identity** — a guided player with traced ``prior_w = 0``
+  reproduces the unguided program bit for bit (action, visit counts,
+  values), standalone and through a SearchService pool;
+* **one trace** — any mix of guided/unguided slots (prior_w 0 / 0.5 / 1)
+  shares a single compiled dispatch, under ``mesh=None`` and under 8
+  faked devices (CI's test-multidevice job);
+* **plumbing** — EvalService inference/training contracts, checkpoint
+  loading, eval-batch occupancy accounting.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MCTSConfig
+from repro.core.evaluator import EvalConfig, EvalService
+from repro.core.mcts import MCTS, SearchParams
+from repro.core.service import SearchService
+from repro.core.tree import normalize_prior, uniform_prior
+
+CFG = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+CAP = 12
+ECFG = EvalConfig(board_size=5, d_model=16, num_layers=1, num_heads=2,
+                  d_ff=32)
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@pytest.fixture(scope="module")
+def evaluator():
+    return EvalService(ECFG)
+
+
+@pytest.fixture(scope="module")
+def guided(engine5, evaluator):
+    return MCTS(engine5, CFG, evaluator=evaluator)
+
+
+@pytest.fixture(scope="module")
+def plain(engine5):
+    return MCTS(engine5, CFG)
+
+
+@pytest.fixture(scope="module")
+def roots2(engine5):
+    st = engine5.init_state()
+    for mv in (3, 7, 12):
+        st = engine5.jit_play(st, jnp.int32(mv))
+    return jax.tree.map(lambda a, b: jnp.stack([a, b]),
+                        engine5.init_state(), st)
+
+
+@pytest.fixture(scope="module")
+def keys2():
+    return np.asarray(jax.random.split(jax.random.PRNGKey(13), 2))
+
+
+def _params(prior_w, g=2):
+    return SearchParams(jnp.full((g,), CFG.c_uct),
+                        jnp.full((g,), CFG.virtual_loss),
+                        jnp.asarray(prior_w, jnp.float32))
+
+
+# --------------------------------------------------------------- priors
+
+
+class TestPriorHygiene:
+    def test_normalize_prior_zeroes_illegal_mass(self):
+        legal = jnp.array([True, False, True, False, True])
+        raw = jnp.array([0.2, 5.0, 0.3, 4.0, 0.5])
+        p = normalize_prior(raw, legal)
+        np.testing.assert_array_equal(np.asarray(p)[~np.asarray(legal)], 0.0)
+        assert float(p.sum()) == pytest.approx(1.0)
+        np.testing.assert_allclose(np.asarray(p)[[0, 2, 4]],
+                                   [0.2, 0.3, 0.5])
+
+    def test_normalize_prior_degenerate_falls_back_uniform(self):
+        legal = jnp.array([True, False, True, False])
+        raw = jnp.array([0.0, 1.0, 0.0, 1.0])     # all mass illegal
+        np.testing.assert_array_equal(np.asarray(normalize_prior(raw, legal)),
+                                      np.asarray(uniform_prior(legal)))
+
+    def test_root_prior_fn_normalized_under_batch_init(self, engine5,
+                                                       roots2, keys2):
+        """The ``prior_fn`` root path (dormant pre-PR 7): a policy that
+        emits unnormalised mass on illegal points must land in the tree
+        as a legal-move distribution, per game under the search vmap."""
+        a = engine5.num_actions
+
+        def messy_prior(_state, _legal):
+            return jnp.arange(1.0, a + 1.0)       # mass everywhere
+
+        mcts = MCTS(engine5, CFG, prior_fn=messy_prior, use_puct=True)
+        res = mcts.search_batch(roots2, jnp.asarray(keys2))
+        root_prior = np.asarray(res.tree.prior[:, 0])      # [G, A]
+        root_legal = np.asarray(res.tree.legal[:, 0])
+        for g in range(2):
+            assert (root_prior[g][~root_legal[g]] == 0.0).all()
+            assert root_prior[g].sum() == pytest.approx(1.0)
+        # game 1 has occupied points -> its legal set (and prior) differ
+        assert root_legal[0].sum() != root_legal[1].sum()
+
+    def test_net_prior_is_legal_distribution(self, engine5, evaluator):
+        st = engine5.init_state()
+        for mv in (0, 6, 12, 18):
+            st = engine5.jit_play(st, jnp.int32(mv))
+        states = jax.tree.map(lambda x: jnp.stack([x, x]), st)
+        legal = jax.vmap(engine5.legal_moves)(states)
+        prior, value = evaluator.policy_value(states, legal)
+        p, m = np.asarray(prior), np.asarray(legal)
+        assert (p[~m] == 0.0).all()
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-6)
+        assert (np.abs(np.asarray(value)) <= 1.0).all()
+
+
+# --------------------------------------------------- w = 0 bit-identity
+
+
+class TestBitIdentity:
+    def test_w0_bit_identical_to_unguided(self, plain, guided, roots2,
+                                          keys2):
+        """The tentpole acceptance pin: traced prior_w = 0 reproduces the
+        no-eval program exactly — across *different* compiled programs
+        (blended scoring + value mixing vs the static path)."""
+        base = plain.search_batch(roots2, jnp.asarray(keys2))
+        got = guided.search_batch(roots2, jnp.asarray(keys2),
+                                  params=_params([0.0, 0.0]))
+        np.testing.assert_array_equal(np.asarray(got.action),
+                                      np.asarray(base.action))
+        np.testing.assert_array_equal(np.asarray(got.root_visits),
+                                      np.asarray(base.root_visits))
+        np.testing.assert_array_equal(np.asarray(got.root_values),
+                                      np.asarray(base.root_values))
+        np.testing.assert_array_equal(np.asarray(got.tree.visit),
+                                      np.asarray(base.tree.visit))
+
+    def test_guided_search_differs(self, plain, guided, roots2, keys2):
+        base = plain.search_batch(roots2, jnp.asarray(keys2))
+        got = guided.search_batch(roots2, jnp.asarray(keys2),
+                                  params=_params([1.0, 1.0]))
+        assert (np.asarray(got.root_visits)
+                != np.asarray(base.root_visits)).any()
+
+    def test_mixed_pool_rows_equal_pure_runs(self, guided, roots2, keys2):
+        """One vmapped search over [w=0, w=1] slots gives each row the
+        bit-exact result of a pure run at that weight."""
+        mixed = guided.search_batch(roots2, jnp.asarray(keys2),
+                                    params=_params([0.0, 1.0]))
+        for g, w in enumerate((0.0, 1.0)):
+            pure = guided.search_batch(roots2, jnp.asarray(keys2),
+                                       params=_params([w, w]))
+            np.testing.assert_array_equal(
+                np.asarray(mixed.root_visits[g]),
+                np.asarray(pure.root_visits[g]))
+            assert int(mixed.action[g]) == int(pure.action[g])
+
+    def test_prior_w_values_are_traced(self, guided, roots2, keys2):
+        fn = jax.jit(guided.search_batch)
+        for w in ([0.0, 0.0], [0.5, 1.0], [1.0, 0.25]):
+            fn(roots2, jnp.asarray(keys2), params=_params(w))
+        assert fn._cache_size() == 1
+
+
+# ------------------------------------------------------- service lane
+
+
+class TestServiceEvalLane:
+    def _run(self, engine, player, keys, prior_weight):
+        svc = SearchService(engine, player, player, slots=2, max_moves=CAP)
+        svc.reset(seed=0, colour_cap=2)
+        tickets = [svc.submit_game(key=k, prior_weight=prior_weight)
+                   for k in keys]
+        recs = {r.ticket: r for r in svc.drain()}
+        return svc, [recs[t] for t in tickets]
+
+    def test_w0_pool_bit_identical_to_plain_pool(self, engine5, plain,
+                                                 guided):
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(5), 4))
+        _, want = self._run(engine5, plain, keys, None)
+        svc, got = self._run(engine5, guided, keys, 0.0)
+        for w, g in zip(want, got):
+            assert w[:7] == g[:7]            # every scalar result field
+            np.testing.assert_array_equal(w.root_visits, g.root_visits)
+        # nothing counted as guided work
+        assert float(svc.eval_occupancy().sum()) == 0.0
+
+    def test_one_trace_across_guided_and_unguided(self, engine5, guided):
+        """Guided (w > 0), half-guided, and unguided (w = 0) requests —
+        games and serves — share one compiled dispatch."""
+        svc = SearchService(engine5, guided, guided, slots=4,
+                            max_moves=CAP)
+        st = engine5.init_state()
+        for seed, pw in enumerate((0.0, 0.5, 1.0)):
+            svc.reset(seed=seed)
+            svc.submit_game(prior_weight=pw)
+            svc.submit_serve(st, prior_weight=pw)
+            assert len(svc.drain()) == 2
+        assert svc._dispatch._cache_size() == 1
+        assert svc._push_games._cache_size() == 1
+        assert svc._push_serve._cache_size() == 1
+
+    def test_eval_occupancy_counts_guided_slots(self, engine5, guided):
+        svc, _ = self._run(engine5, guided, np.asarray(
+            jax.random.split(jax.random.PRNGKey(9), 4)), 1.0)
+        occ = svc.eval_occupancy()
+        assert occ.shape == (1,)
+        assert 0.0 < float(occ[0]) <= 1.0
+
+    def test_asymmetric_guided_a_plain_b(self, engine5, plain, guided):
+        """A guided A-side and an unguided B-side coexist in one pool;
+        the B side statically ignores the pw knob."""
+        svc = SearchService(engine5, guided, plain, slots=2, max_moves=CAP)
+        svc.reset(seed=0, colour_cap=2)
+        t = svc.submit_game(prior_weight=1.0)
+        recs = {r.ticket: r for r in svc.drain()}
+        assert recs[t].moves > 0
+
+
+# --------------------------------------------------------- sharded lane
+
+
+@multidevice
+class TestShardedEvalLane:
+    def test_mixed_pool_sharded_matches_unsharded(self, engine5, guided):
+        """Serve answers with heterogeneous prior_w are placement-
+        independent: an 8-shard pool answers bit-for-bit like mesh=None,
+        from one compiled dispatch."""
+        from repro.compat import make_service_mesh
+        st = engine5.init_state()
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(3), 4))
+        weights = (0.0, 0.5, 1.0, 0.0)
+
+        def serve(mesh, slots):
+            svc = SearchService(engine5, guided, guided, slots=slots,
+                                max_moves=CAP, mesh=mesh)
+            svc.reset(seed=0)
+            tickets = [svc.submit_serve(st, key=k, prior_weight=w)
+                       for k, w in zip(keys, weights)]
+            recs = {r.ticket: r for r in svc.drain()}
+            return svc, [recs[t] for t in tickets]
+
+        _, want = serve(None, 4)
+        svc, got = serve(make_service_mesh(8), 8)
+        for w, g in zip(want, got):
+            assert w.action == g.action
+            np.testing.assert_array_equal(w.root_visits, g.root_visits)
+        assert svc._dispatch._cache_size() == 1
+
+
+# ------------------------------------------------------------ win rate
+
+
+@pytest.mark.slow
+class TestWinRate:
+    def test_distilled_prior_beats_uniform_at_9x9(self, engine9):
+        """The lane must buy strength, not just run: a heuristic-
+        distilled checkpoint (tests/fixtures/distill_eval9.py, committed
+        under tests/fixtures/eval9/) guides one side of a small 9x9
+        arena match at a fixed sims budget and must outscore the
+        uniform-prior side.  Colours alternate by the arena's balanced
+        assignment, so the margin is not a komi artifact."""
+        import os
+
+        from repro.core.arena import Arena
+        fix = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "fixtures", "eval9")
+        # keep in sync with ECFG in tests/fixtures/distill_eval9.py
+        ev = EvalService(dataclasses.replace(
+            EvalConfig(board_size=9, d_model=16, num_layers=1,
+                       num_heads=2, d_ff=32), ckpt_dir=fix))
+        cfg = MCTSConfig(board_size=9, komi=6.0, lanes=4,
+                         sims_per_move=24, max_nodes=160)
+        guided = MCTS(engine9, cfg, evaluator=ev)
+        uniform = MCTS(engine9, cfg)
+        arena = Arena(engine9, guided, uniform, slots=8, max_moves=70)
+        recs = arena.play_games(8, seed=2, prior_weight=1.0)
+        score = sum((1.0 if (r.winner > 0) == r.a_is_black else 0.0)
+                    if r.winner != 0 else 0.5 for r in recs)
+        assert score > len(recs) / 2, \
+            f"guided scored {score}/{len(recs)} vs uniform priors"
+
+
+# ------------------------------------------------------------- plumbing
+
+
+class TestEvalServicePlumbing:
+    def test_deterministic_init(self):
+        a, b = EvalService(ECFG), EvalService(ECFG)
+        jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), a.params, b.params)
+
+    def test_config_parse(self):
+        cfg = EvalConfig.parse("d_model=64,value_weight=0.25",
+                               board_size=5)
+        assert (cfg.d_model, cfg.value_weight, cfg.board_size) \
+            == (64, 0.25, 5)
+        with pytest.raises(ValueError):
+            EvalConfig.parse("d_modle=64")
+        with pytest.raises(ValueError):
+            EvalConfig.parse("d_model")
+
+    def test_checkpoint_round_trip_into_service(self, evaluator, tmp_path):
+        """A saved param tree is what a fresh EvalService loads."""
+        from repro.ckpt.checkpoint import save_checkpoint
+        bumped = jax.tree.map(lambda x: x + 1.0, evaluator.params)
+        save_checkpoint(str(tmp_path), 3, bumped, extra={})
+        loaded = EvalService(dataclasses.replace(
+            ECFG, ckpt_dir=str(tmp_path)))
+        jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y)), loaded.params, bumped)
+
+    def test_loss_and_train_step(self, engine5, evaluator):
+        """The evaluator satisfies the training/step.py model contract."""
+        from repro.config import TrainConfig
+        from repro.training.step import init_train_state, make_train_step
+        b, a, s = 4, engine5.num_actions, engine5.n2 + 1
+        rng = np.random.default_rng(0)
+        legal = jnp.asarray(rng.random((b, a)) > 0.3)
+        pol = normalize_prior(jnp.asarray(rng.random((b, a)), jnp.float32),
+                              legal)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(1, 6, (b, s)), jnp.int32),
+            "legal": legal,
+            "policy": pol,
+            "value": jnp.asarray(rng.uniform(-1, 1, b), jnp.float32),
+        }
+        loss, metrics = evaluator.loss(evaluator.params, batch)
+        assert np.isfinite(float(loss))
+        assert set(metrics) >= {"ce", "value_mse"}
+
+        tcfg = TrainConfig(steps=2, warmup_steps=1, z_loss=0.0)
+        state = init_train_state(evaluator, tcfg, jax.random.PRNGKey(0))
+        step = make_train_step(evaluator, tcfg)
+        state, m1 = step(state, batch)
+        assert int(state.step) == 1 and np.isfinite(float(m1["loss"]))
