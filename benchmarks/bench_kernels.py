@@ -1,0 +1,253 @@
+"""Fused-superstep kernel benchmark -> BENCH_kernels.json.
+
+Measures the PR 8 fused MCTS hot loop (kernels/mcts_step/) against the
+unfused per-lane program on the 5x5 reference cell, at two scopes:
+
+* **search** (measured wall clock) — sims/sec through the full
+  ``MCTS.search_batch`` with ``fused=True`` vs ``fused=False`` (the
+  flagless PR 7 program): same roots, same seeds, min-of-N.
+* **hotloop** (bytes moved) — one select/expand/backup superstep with
+  playouts stubbed (``value_fn``), the phases the fusion restructures:
+
+  - *unfused*: trip-count-aware HLO traffic (analysis/hlo.py) of the
+    compiled per-lane superstep — the XLA program re-streams child-stat
+    rows from the ``[N]``/``[N, A]`` tree slabs per (lane, level) with
+    no residency guarantee;
+  - *fused*: the Pallas kernel's **block-transfer contract**: with
+    ``grid=(G,)`` and per-game BlockSpecs every operand crosses
+    HBM<->VMEM exactly once per superstep, so bytes moved = sum of the
+    (action-padded) operand + result sizes of ``mcts_select`` +
+    ``mcts_backup``.  That sum *is* the VMEM-residency claim, stated in
+    bytes — the CPU interpret path runs the oracle, so the kernel's
+    traffic is a shape-derived estimate, not an HLO measurement.
+
+  FLOPs for the fused kernel are the one-hot MXU gathers (2*N*A per
+  child-stat row, 6 rows per lane-level) plus the backup's path-count
+  matmuls; the unfused program's gathers are dynamic-slices, which the
+  MODEL_FLOPS convention (dots only) counts as zero.  Arithmetic
+  intensity / ``ridge`` (``PEAK_FLOPS_BF16 / HBM_BW``, TPU v5e model
+  constants) gives each variant's roofline fraction: both stay
+  memory-bound, but the fused superstep's roofline step time drops by
+  the bytes-moved reduction — the headline number.
+
+``check_regression.py --kernels`` gates both throughputs (fail
+downward) and both bytes/sim numbers (fail upward — the direction-aware
+``*_bytes_per_sim`` rule), so a kernel change that adds an operand
+stream or a superstep change that re-streams slabs trips CI.
+
+    PYTHONPATH=src python benchmarks/bench_kernels.py [--out BENCH_kernels.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):                    # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.analysis.hlo import analyze
+from repro.analysis.roofline import roofline_terms
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.go import GoEngine
+from repro.kernels.common import round_up
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+BOARD = 5
+KOMI = 0.5
+GAMES = 4
+LANES = 4
+SIMS = 32
+MAX_NODES = 256
+MAX_DEPTH = 16
+REPEATS = 3
+SCHEMA = "bench_kernels/v1"
+RIDGE = PEAK_FLOPS_BF16 / HBM_BW                 # FLOPs/byte at the roof
+LANE = 128                                       # kernel action-axis pad
+
+
+def _mcts(engine: GoEngine, fused: bool, value_fn=None) -> MCTS:
+    cfg = MCTSConfig(board_size=BOARD, komi=KOMI, lanes=LANES,
+                     sims_per_move=SIMS, max_nodes=MAX_NODES)
+    return MCTS(engine, cfg, max_depth=MAX_DEPTH, fused=fused,
+                value_fn=value_fn)
+
+
+def _roots(engine: GoEngine):
+    roots = jax.vmap(lambda _: engine.init_state())(jnp.arange(GAMES))
+    rngs = jax.vmap(jax.random.PRNGKey)(jnp.arange(GAMES))
+    return roots, rngs
+
+
+def _wall(fn, *args) -> float:
+    """Min-of-N wall seconds for one jitted call (compiles first)."""
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+# ------------------------------------------------------------------ search
+
+def run_search() -> dict:
+    """Measured sims/sec of the full search, fused vs unfused."""
+    engine = GoEngine(BOARD, komi=KOMI)
+    roots, rngs = _roots(engine)
+    sims = float(GAMES * SIMS)
+    out = {}
+    for name, fused in (("unfused", False), ("fused", True)):
+        player = _mcts(engine, fused)
+        wall = _wall(jax.jit(lambda r, k, p=player: p.search_batch(r, k)),
+                     roots, rngs)
+        out[name] = {"wall_s": wall, "sims_per_sec": sims / wall}
+    out["speedup"] = (out["fused"]["sims_per_sec"]
+                      / out["unfused"]["sims_per_sec"])
+    return out
+
+
+# ----------------------------------------------------------------- hotloop
+
+def _kernel_bytes(g: int, n: int, a: int, lanes: int, depth: int) -> float:
+    """Block-transfer bytes of one fused superstep (select + backup).
+
+    ``grid=(G,)`` with per-game BlockSpecs: every operand and result
+    crosses HBM<->VMEM exactly once, so traffic = array sizes after the
+    action-axis pad to the kernel's LANE width (ops.py).
+    """
+    ap = round_up(a, LANE)
+    vec = g * n * 4                              # one [G, N] f32/i32 slab
+    slab = g * n * ap * 4                        # one [G, N, Ap] slab
+    paths = g * lanes * depth * 4
+    lane_vec = g * lanes * 4
+    # select: visit/value/vloss/expanded/terminal/player in, prior/legal/
+    # children slabs in; paths + depth/leaf/act/can_expand + vloss out
+    select = (6 * vec + 3 * slab) + (paths + 4 * lane_vec + vec)
+    # backup: visit/value/paths/val_sum in; visit/value out
+    backup = (2 * vec + paths + lane_vec) + 2 * vec
+    return float(select + backup)
+
+
+def _kernel_flops(g: int, n: int, a: int, lanes: int, depth: int) -> float:
+    """One-hot matmul FLOPs of one fused superstep.
+
+    Per (lane, level) the select kernel gathers six per-node rows
+    (visit/value/vloss/prior/legal/children) as ``[N] one-hot x [N, Ap]``
+    MXU products; the backup kernel forms per-lane ``[D, N]`` path
+    counts for the visit and value scatters.
+    """
+    ap = round_up(a, LANE)
+    sel = g * lanes * (depth - 1) * 6 * 2.0 * n * ap
+    bk = g * lanes * 2 * 2.0 * depth * n
+    return sel + bk
+
+
+def run_hotloop() -> dict:
+    """Bytes/FLOPs of one superstep: measured HLO (unfused) vs the
+    kernel's block-transfer contract (fused), + roofline terms."""
+    engine = GoEngine(BOARD, komi=KOMI)
+    roots, rngs = _roots(engine)
+    stub = lambda _st: jnp.float32(0.0)          # noqa: E731 — drop playouts
+    m0 = _mcts(engine, False, value_fn=stub)
+    m1 = _mcts(engine, True, value_fn=stub)
+    t = m1.init_tree_batch(roots)
+    c, vlw, pw = m1._resolve_params(None)
+    sims = float(GAMES * LANES)                  # sims per superstep
+
+    step0 = jax.jit(lambda t, k: jax.vmap(m0._simulate)(t, k))
+    step1 = jax.jit(lambda t, k: m1._simulate_fused(t, k, c, vlw, pw))
+
+    cost0 = analyze(step0.lower(t, rngs).compile().as_text())
+    n, a = MAX_NODES, engine.num_actions
+    cells = {
+        "unfused": {"flops": float(cost0["flops"]),
+                    "hbm_bytes": float(cost0["hbm_bytes"]),
+                    "source": "hlo_measured",
+                    "wall_s": _wall(step0, t, rngs)},
+        "fused": {"flops": _kernel_flops(GAMES, n, a, LANES, MAX_DEPTH),
+                  "hbm_bytes": _kernel_bytes(GAMES, n, a, LANES, MAX_DEPTH),
+                  "source": "block_transfer_contract",
+                  "wall_s": _wall(step1, t, rngs)},
+    }
+    for cell in cells.values():
+        terms = roofline_terms(cell, {"total": 0.0}, chips=1)
+        intensity = (cell["flops"] / cell["hbm_bytes"]
+                     if cell["hbm_bytes"] else 0.0)
+        cell.update(
+            bytes_per_sim=cell["hbm_bytes"] / sims,
+            flops_per_byte=intensity,
+            roofline_fraction=intensity / RIDGE,
+            roofline={k: terms[k] for k in
+                      ("compute_s", "memory_s", "dominant",
+                       "roofline_step_s")})
+    u, f = cells["unfused"], cells["fused"]
+    cells["bytes_reduction"] = (u["bytes_per_sim"] / f["bytes_per_sim"]
+                                if f["bytes_per_sim"] else 0.0)
+    cells["roofline_step_reduction"] = (
+        u["roofline"]["roofline_step_s"] / f["roofline"]["roofline_step_s"]
+        if f["roofline"]["roofline_step_s"] else 0.0)
+    return cells
+
+
+# ------------------------------------------------------------------ output
+
+def _payload(search: dict, hotloop: dict) -> dict:
+    return {"schema": SCHEMA, "board": BOARD, "komi": KOMI,
+            "games": GAMES, "lanes": LANES, "sims_per_move": SIMS,
+            "max_nodes": MAX_NODES, "max_depth": MAX_DEPTH,
+            "backend": jax.default_backend(),
+            "ridge_flops_per_byte": RIDGE,
+            "search": search, "hotloop": hotloop}
+
+
+def _print(search: dict, hotloop: dict) -> None:
+    for name in ("unfused", "fused"):
+        s, h = search[name], hotloop[name]
+        print(f"{name:8s}: {s['sims_per_sec']:8.0f} sims/s  "
+              f"hotloop {h['bytes_per_sim'] / 1e3:8.1f} KB/sim "
+              f"({h['source']})  AI {h['flops_per_byte']:.3f} FLOP/B  "
+              f"roofline frac {h['roofline_fraction']:.4f}")
+    print(f"fused/unfused: {search['speedup']:.2f}x sims/s, "
+          f"{hotloop['bytes_reduction']:.2f}x fewer hot-loop bytes/sim, "
+          f"{hotloop['roofline_step_reduction']:.2f}x lower roofline "
+          f"step time")
+
+
+def run() -> None:
+    """benchmarks.run entry: both scopes, CSV + default JSON output."""
+    search, hotloop = run_search(), run_hotloop()
+    csv_row("kernels_fused_search", search["fused"]["wall_s"],
+            f"sims/s={search['fused']['sims_per_sec']:.0f};"
+            f"bytes_red={hotloop['bytes_reduction']:.2f}x;"
+            f"speedup={search['speedup']:.2f}x")
+    _print(search, hotloop)
+    with open("BENCH_kernels.json", "w") as f:
+        json.dump(_payload(search, hotloop), f, indent=2, sort_keys=True)
+
+
+def main() -> None:
+    """CLI entry point: both scopes, printed + JSON artifact."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+    print(f"# fused superstep ({BOARD}x{BOARD}, {GAMES} games x "
+          f"{LANES} lanes x {SIMS} sims, backend={jax.default_backend()})")
+    search, hotloop = run_search(), run_hotloop()
+    _print(search, hotloop)
+    with open(args.out, "w") as f:
+        json.dump(_payload(search, hotloop), f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

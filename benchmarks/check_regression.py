@@ -9,11 +9,13 @@ and ``bench_load.py --smoke`` on the serving tier, then:
         --baseline benchmarks/baselines/ci_cpu.json
 
 Metrics are **direction-aware**: throughput (``*_sims_per_sec``) fails
-when it drops below the band, latency (``load.*_ms``, gated on the
-bottom offered-load point, the uncontended-path SLO) fails when it rises
-above it — the paper's lesson is that scheduling regressions show up as
-throughput collapse *and* latency growth, and a gate watching only one
-of them misses half the knee.  Runs on the good side of the band only
+when it drops below the band; latency (``load.*_ms``, gated on the
+bottom offered-load point, the uncontended-path SLO) and bytes-moved
+(``kernels.*_bytes_per_sim``, PR 8 — the fused superstep's hot-loop
+traffic) fail when they rise above it — the paper's lesson is that
+scheduling regressions show up as throughput collapse *and* latency
+growth, and a gate watching only one of them misses half the knee.
+Runs on the good side of the band only
 warn (faster CI hardware is not a bug) with a hint to refresh the
 baseline via ``--update``, which rewrites it from every artifact passed.
 
@@ -84,9 +86,23 @@ EVAL_METRICS = {
 }
 
 
+# gated kernel-lane metrics over BENCH_kernels.json (PR 8): full-search
+# throughput for both superstep variants (fail downward), plus the
+# hot-loop bytes moved per simulation (fail upward) — the unfused
+# number is HLO-measured, the fused one is the Pallas block-transfer
+# contract, so a kernel change that adds an operand stream or a
+# superstep change that re-streams the tree slabs trips this gate.
+KERNEL_METRICS = {
+    "kernels.fused_sims_per_sec": lambda d: d["search"]["fused"]["sims_per_sec"],
+    "kernels.unfused_sims_per_sec": lambda d: d["search"]["unfused"]["sims_per_sec"],
+    "kernels.fused_bytes_per_sim": lambda d: d["hotloop"]["fused"]["bytes_per_sim"],
+    "kernels.unfused_bytes_per_sim": lambda d: d["hotloop"]["unfused"]["bytes_per_sim"],
+}
+
+
 def lower_is_better(name: str) -> bool:
-    """Gate direction by metric name: latencies fail upward."""
-    return name.endswith("_ms")
+    """Gate direction by metric name: latencies and bytes fail upward."""
+    return name.endswith("_ms") or name.endswith("_bytes_per_sim")
 
 
 def extract(payload: dict, metrics: dict) -> dict:
@@ -107,7 +123,7 @@ def check(current: dict, baseline: dict, tolerance: float) -> int:
         lo, hi = 1.0 - tolerance, 1.0 + tolerance
         if lower_is_better(name):
             bad, good = ratio > hi, ratio < lo
-            note_bad = f"{ratio:.2f}x > {hi:.2f}x (latency grew)"
+            note_bad = f"{ratio:.2f}x > {hi:.2f}x (lower-is-better metric grew)"
             note_good = "below the band; refresh with --update"
         else:
             bad, good = ratio < lo, ratio > hi
@@ -138,12 +154,19 @@ def main() -> int:
         default=None,
         help="BENCH_eval.json from this run (optional)",
     )
+    ap.add_argument(
+        "--kernels",
+        default=None,
+        help="BENCH_kernels.json from this run (optional)",
+    )
     ap.add_argument("--baseline", default="benchmarks/baselines/ci_cpu.json")
     ap.add_argument("--tolerance", type=float, default=None, help="override the baseline's band")
     ap.add_argument("--update", action="store_true", help="rewrite the baseline from this run")
     args = ap.parse_args()
-    if args.bench is None and args.load is None and args.eval_bench is None:
-        ap.error("pass BENCH_service.json, --load BENCH_load.json, and/or --eval BENCH_eval.json")
+    if (args.bench is None and args.load is None
+            and args.eval_bench is None and args.kernels is None):
+        ap.error("pass BENCH_service.json, --load BENCH_load.json, "
+                 "--eval BENCH_eval.json, and/or --kernels BENCH_kernels.json")
 
     current = {}
     source_schemas = []
@@ -162,6 +185,11 @@ def main() -> int:
             eval_payload = json.load(f)
         current.update(extract(eval_payload, EVAL_METRICS))
         source_schemas.append(eval_payload.get("schema"))
+    if args.kernels is not None:
+        with open(args.kernels) as f:
+            kernels_payload = json.load(f)
+        current.update(extract(kernels_payload, KERNEL_METRICS))
+        source_schemas.append(kernels_payload.get("schema"))
 
     if args.update:
         try:

@@ -1,6 +1,11 @@
 """Render EXPERIMENTS.md tables from the dry-run JSON caches.
 
     PYTHONPATH=src python -m repro.analysis.report [results.json ...]
+    PYTHONPATH=src python -m repro.analysis.report --kernels BENCH_kernels.json
+
+``--kernels`` renders the fused-superstep before/after roofline table
+from a ``bench_kernels`` artifact instead (the kernel-parity CI lane
+uploads it as the roofline report).
 """
 from __future__ import annotations
 
@@ -78,6 +83,34 @@ def _bottleneck_note(v) -> str:
     return "MXU-bound; already near the compute roof"
 
 
+def kernels_table(payload: Dict) -> str:
+    """Before/after roofline table for BENCH_kernels.json (PR 8).
+
+    One row per superstep variant: measured search throughput, hot-loop
+    bytes per sim (HLO-measured for the unfused program, the Pallas
+    block-transfer contract for the fused kernel), arithmetic intensity
+    against the ridge, and the model roofline step time.
+    """
+    h, s = payload["hotloop"], payload["search"]
+    rows = ["| superstep | sims/s (measured) | hot-loop KB/sim | source | "
+            "FLOPs/byte | roofline frac | roofline step s |",
+            "|---|---|---|---|---|---|---|"]
+    for name in ("unfused", "fused"):
+        c = h[name]
+        rows.append(
+            f"| {name} | {s[name]['sims_per_sec']:.0f} | "
+            f"{c['bytes_per_sim'] / 1e3:.1f} | {c['source']} | "
+            f"{c['flops_per_byte']:.3f} | {c['roofline_fraction']:.4f} | "
+            f"{c['roofline']['roofline_step_s']:.3e} |")
+    rows.append(
+        f"\nfused/unfused: **{s['speedup']:.2f}x** sims/s, "
+        f"**{h['bytes_reduction']:.2f}x** fewer hot-loop bytes/sim, "
+        f"**{h['roofline_step_reduction']:.2f}x** lower roofline step "
+        f"time (ridge {payload['ridge_flops_per_byte']:.1f} FLOPs/byte, "
+        f"backend {payload['backend']}).")
+    return "\n".join(rows)
+
+
 def summary(results: Dict) -> str:
     ok = sum(1 for v in results.values() if v.get("status") == "ok")
     sk = sum(1 for v in results.values() if v.get("status") == "skipped")
@@ -86,7 +119,15 @@ def summary(results: Dict) -> str:
 
 
 def main() -> None:
-    paths = sys.argv[1:] or ["benchmarks/results/dryrun.json"]
+    argv = sys.argv[1:]
+    if argv and argv[0] == "--kernels":
+        for p in argv[1:] or ["BENCH_kernels.json"]:
+            with open(p) as f:
+                payload = json.load(f)
+            print(f"\n### {p} — fused superstep roofline\n")
+            print(kernels_table(payload))
+        return
+    paths = argv or ["benchmarks/results/dryrun.json"]
     for p in paths:
         with open(p) as f:
             results = json.load(f)

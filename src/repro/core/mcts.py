@@ -103,9 +103,10 @@ class MCTS:
 
     def __init__(self, engine: GoEngine, cfg: MCTSConfig,
                  prior_fn=None, value_fn=None, use_puct: bool = False,
-                 max_depth: int = 64, evaluator=None):
+                 max_depth: int = 64, evaluator=None, fused: bool = False):
         self.engine = engine
         self.cfg = cfg
+        self.fused = fused            # route search_batch through mcts_step
         self.evaluator = evaluator    # optional EvalService (core/evaluator.py)
         if evaluator is not None:
             if value_fn is not None:
@@ -409,9 +410,17 @@ class MCTS:
           (static vs blended — a pytree-structure change, so the two
           programs are separate jit cache entries), while its values —
           any per-game mix of guided/unguided weights — stay traced.
+
+        Players built with ``fused=True`` route through the
+        ``kernels/mcts_step`` superstep (:meth:`_search_fused_batch`) —
+        a documented search *variant* with deferred expansion;
+        ``fused=False`` (the default) is this exact historical program,
+        bit for bit (tests/test_mcts_step.py pins both).
         """
         sims = None if sims is None else jnp.asarray(sims, jnp.int32)
         if params is None:
+            if self.fused:
+                return self._search_fused_batch(roots, rngs, sims)
             if sims is None:
                 return jax.vmap(self._search)(roots, rngs)
             return jax.vmap(self._search)(roots, rngs, sims)
@@ -419,11 +428,169 @@ class MCTS:
                               jnp.asarray(params.vl_weight, jnp.float32),
                               None if params.prior_w is None
                               else jnp.asarray(params.prior_w, jnp.float32))
+        if self.fused:
+            return self._search_fused_batch(roots, rngs, sims, params)
         if sims is None:
             return jax.vmap(
                 lambda r, k, p: self._search(r, k, None, p))(
                     roots, rngs, params)
         return jax.vmap(self._search)(roots, rngs, sims, params)
+
+    # ---------------------------------------------------- fused superstep
+
+    def _expand_batch(self, t: Tree, paths, depth, leaf, act, can_exp):
+        """Grow every game's tree for all lanes at once (deferred expansion).
+
+        The fused kernel selects over a frozen children table, so lanes
+        that picked the same ``(leaf, action)`` edge collapse onto one new
+        node: the first such lane allocates, the rest share its child.
+        Slots come from an exclusive cumsum over the unique expansions;
+        lanes whose slot would overflow the arena keep their parent as
+        the playout node (the unfused ``allocate`` full-arena behaviour).
+        Masked scatters use the out-of-bounds sentinel ``N`` — dropped by
+        XLA scatter semantics — instead of a per-lane ``cond``, and the
+        engine step runs as **one** vmapped ``[G, L]`` batch where the
+        unfused lane scan played ``L`` sequential moves per game.
+
+        Returns ``(tree, extended paths, playout leaves i32[G, L])``.
+        """
+        g, lanes = leaf.shape
+        n = t.visit.shape[1]
+        gi = jnp.arange(g)[:, None]
+        li = jnp.arange(lanes, dtype=jnp.int32)[None, :]
+        same = (leaf[:, :, None] == leaf[:, None, :]) \
+            & (act[:, :, None] == act[:, None, :])
+        rep = jnp.argmax(same & can_exp[:, None, :], axis=-1).astype(jnp.int32)
+        uniq = can_exp & (rep == li)
+        u32 = uniq.astype(jnp.int32)
+        slots = t.size[:, None] + jnp.cumsum(u32, axis=1) - u32
+        alloc = uniq & (slots < n)
+
+        parents = jax.vmap(
+            lambda st, i: jax.tree.map(lambda x: x[i], st))(t.states, leaf)
+        childs = jax.vmap(jax.vmap(self.engine.play))(parents, act)
+        legal = jax.vmap(jax.vmap(self.engine.legal_moves))(childs)
+        if self._expand_prior_fn is not None:
+            raw = jax.vmap(jax.vmap(self._expand_prior_fn))(childs, legal)
+            prior = jax.vmap(jax.vmap(tree_lib.normalize_prior))(raw, legal)
+        else:
+            prior = jax.vmap(jax.vmap(tree_lib.uniform_prior))(legal)
+
+        oob = jnp.where(alloc, slots, n)
+        t = t._replace(
+            children=t.children.at[
+                gi, jnp.where(alloc, leaf, n), act].set(slots),
+            parent=t.parent.at[gi, oob].set(leaf),
+            action=t.action.at[gi, oob].set(act),
+            legal=t.legal.at[gi, oob].set(legal),
+            prior=t.prior.at[gi, oob].set(prior),
+            expanded=t.expanded.at[gi, oob].set(~childs.done),
+            terminal=t.terminal.at[gi, oob].set(childs.done),
+            states=jax.tree.map(lambda buf, v: buf.at[gi, oob].set(v),
+                                t.states, childs),
+            size=t.size + alloc.sum(axis=1).astype(jnp.int32),
+        )
+
+        rep_alloc = jnp.take_along_axis(alloc, rep, axis=1)
+        rep_slot = jnp.take_along_axis(slots, rep, axis=1)
+        leaves = jnp.where(can_exp & rep_alloc, rep_slot, leaf)
+        ext = (leaves != leaf).astype(jnp.int32)
+        paths = paths.at[gi, li, depth + ext].set(leaves)
+        return t, paths, leaves
+
+    def _simulate_fused(self, t: Tree, keys, c, vlw, pw) -> Tree:
+        """One fused iteration over every game: kernel select -> batched
+        expansion -> playouts/eval -> kernel backup.
+
+        The ``kernels/mcts_step`` counterpart of :meth:`_simulate`:
+        selection and backup run as single fused ops over the ``[G, ...]``
+        tree slabs (Pallas on TPU, oracle on CPU) instead of a lane scan,
+        and expansion/playouts batch over ``[G, L]``.  ``keys`` is
+        ``u32[G, 2]``; ``c`` / ``vlw`` / ``pw`` are the resolved traced
+        knobs (scalar or ``[G]``).
+        """
+        from repro.kernels.mcts_step.ops import mcts_backup, mcts_select
+        lanes, p = self.cfg.lanes, max(1, self.cfg.leaf_playouts)
+        g = t.visit.shape[0]
+        gi = jnp.arange(g)[:, None]
+        sub = jax.vmap(lambda k: jax.random.split(k, 2))(keys)   # [G, 2, 2]
+        seeds = sub[:, 0, 0]                                     # u32[G]
+        pkeys = jax.vmap(
+            lambda k: jax.random.split(k, lanes * p))(sub[:, 1])
+        pkeys = pkeys.reshape(g, lanes, p, 2)
+
+        player = t.states.to_play.astype(jnp.float32)            # [G, N]
+        paths, depth, leaf, act, can_exp, vloss = mcts_select(
+            t.visit, t.value, t.vloss, t.prior, t.legal, t.children,
+            t.expanded, t.terminal, player, seeds,
+            c_uct=c, vl_weight=vlw, prior_w=pw,
+            lanes=lanes, max_depth=self.max_depth,
+            expand_threshold=int(self.cfg.expand_threshold),
+            use_puct=self.use_puct)
+        t = t._replace(vloss=vloss)
+        t, paths, leaves = self._expand_batch(
+            t, paths, depth, leaf, act, can_exp)
+
+        leaf_states = jax.vmap(
+            lambda st, i: jax.tree.map(lambda x: x[i], st))(t.states, leaves)
+        if self.value_fn is not None:
+            vals = jax.vmap(jax.vmap(self.value_fn))(leaf_states)  # [G, L]
+            val_sum = vals * p
+        else:
+            one = lambda st, ks: jax.vmap(                         # noqa: E731
+                lambda k: self.engine.playout_value(st, k))(ks)
+            vals = jax.vmap(jax.vmap(one))(leaf_states, pkeys)     # [G, L, P]
+            val_sum = vals.sum(axis=-1)
+
+        prior = t.prior
+        if self.evaluator is not None:
+            net_prior, net_val = jax.vmap(self.evaluator.policy_value)(
+                leaf_states, t.legal[gi, leaves])
+            mix = jnp.broadcast_to(jnp.asarray(pw, jnp.float32), (g,))[:, None]
+            mix = mix * self.evaluator.value_weight
+            mix = jnp.where(t.terminal[gi, leaves], 0.0, mix)      # [G, L]
+            val_sum = (1.0 - mix) * val_sum + mix * (net_val * p)
+            prior = prior.at[gi, leaves].set(net_prior)
+
+        visit, value = mcts_backup(t.visit, t.value, paths, val_sum,
+                                   playouts=float(p))
+        return t._replace(visit=visit, value=value,
+                          vloss=jnp.zeros_like(t.vloss), prior=prior)
+
+    def _search_fused_batch(self, roots: GoState, rngs: jax.Array,
+                            sims: Optional[jax.Array] = None,
+                            params: Optional[SearchParams] = None
+                            ) -> SearchOutput:
+        """Batched move search through the fused superstep kernels.
+
+        Same signature/contract as the vmapped :meth:`_search` path of
+        :meth:`search_batch` (traced ``sims`` masking, traced ``params``)
+        — but a deliberate algorithm *variant*, not a bit-identical
+        replacement: lanes see earlier lanes' virtual losses yet not
+        their expansions (ref.py documents the deferred-expansion
+        semantics), and tie-breaks come from the counter-based hash.
+        """
+        t = self.init_tree_batch(roots)
+        keys = jax.vmap(
+            lambda k: jax.random.split(k, self.iterations))(rngs)  # [G, I, 2]
+        c, vlw, pw = self._resolve_params(params)
+        iters = None if sims is None else jax.vmap(self._iterations_for)(sims)
+
+        def it(i, t):
+            t2 = self._simulate_fused(t, keys[:, i], c, vlw, pw)
+            if iters is None:
+                return t2
+            live = (i < iters)[:, None]
+            return t2._replace(
+                visit=jnp.where(live, t2.visit, t.visit),
+                value=jnp.where(live, t2.value, t.value),
+                size=jnp.where(live[:, 0], t2.size, t.size))
+
+        t = jax.lax.fori_loop(0, self.iterations, it, t)
+        visits = jax.vmap(tree_lib.root_action_visits)(t)
+        action = jax.vmap(tree_lib.select_action)(visits, t.legal[:, 0])
+        return SearchOutput(tree=t, action=action, root_visits=visits,
+                            root_values=jax.vmap(tree_lib.root_action_values)(t))
 
     def init_tree_batch(self, roots: GoState) -> Tree:
         """Batch of per-game tree arenas under this player's engine/config.

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the compute hot-spots.
 
-Three kernels, each a ``kernel.py`` (``pl.pallas_call`` + explicit BlockSpec
+Four kernels, each a ``kernel.py`` (``pl.pallas_call`` + explicit BlockSpec
 VMEM tiling), ``ops.py`` (jitted dispatch wrapper: Pallas on TPU, oracle math
 on other backends), and ``ref.py`` (pure-jnp oracle):
 
@@ -10,4 +10,7 @@ on other backends), and ``ref.py`` (pure-jnp oracle):
   under virtual loss (the per-node hot path of selection).
 * ``flash_attention`` — blocked online-softmax attention (causal, sliding
   window, logit softcap, GQA) for the long-context serving shapes.
+* ``mcts_step``   — the fused MCTS superstep: all selection lanes of one
+  iteration descend over VMEM-resident tree slabs, plus the matching
+  scatter-add backup (``repro.core.mcts`` fused path).
 """

@@ -1,0 +1,55 @@
+"""Shared tile-padding helpers for the kernel dispatch wrappers.
+
+Every ``kernels/*/ops.py`` dispatcher pads its operands up to the kernel's
+tile multiples before the ``pallas_call`` and slices the result back.  The
+helpers used to be copy-pasted per kernel (``_pad2`` / ``_pad_to`` /
+``_pad_seq``); they live here now so a tiling bug is fixed once.
+
+All helpers are no-ops (returning the input array unchanged, with zero pad
+width where reported) when the shape already aligns — callers can branch on
+that to skip the pad+slice round trip entirely (``uct_select.ops`` does).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pad2(x: jax.Array, rows_to: int, cols_to: int) -> jax.Array:
+    """Zero-pad a 2-D array up to ``(rows_to, cols_to)``.
+
+    The row/col targets are absolute sizes (callers round up to their tile
+    multiples first); equal sizes return ``x`` unchanged.
+    """
+    pr = rows_to - x.shape[0]
+    pc = cols_to - x.shape[1]
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def pad_to_multiple(x: jax.Array, mult: int) -> jax.Array:
+    """Zero-pad a 1-D array so its length is a multiple of ``mult``."""
+    pad = (-x.shape[0]) % mult
+    if pad:
+        x = jnp.pad(x, (0, pad))
+    return x
+
+
+def pad_axis(x: jax.Array, mult: int, axis: int) -> tuple[jax.Array, int]:
+    """Zero-pad ``axis`` of ``x`` to a multiple of ``mult``.
+
+    Returns ``(padded, pad_width)`` so callers can slice the kernel output
+    back and decide whether padded positions need masking.
+    """
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    width = [(0, 0)] * x.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(x, width), pad
+
+
+def round_up(n: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is ``>= n``."""
+    return -(-n // mult) * mult

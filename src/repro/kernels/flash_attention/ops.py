@@ -10,19 +10,10 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import pad_axis
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import attention_ref
-
-
-def _pad_seq(x, mult, axis):
-    pad = (-x.shape[axis]) % mult
-    if pad == 0:
-        return x, 0
-    width = [(0, 0)] * x.ndim
-    width[axis] = (0, pad)
-    return jnp.pad(x, width), pad
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -41,9 +32,9 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     sq, sk = q.shape[2], k.shape[2]
     bq_eff = min(bq, max(8, sq))
     bk_eff = min(bk, max(8, sk))
-    qp, pq = _pad_seq(q, bq_eff, 2)
-    kp, pk = _pad_seq(k, bk_eff, 2)
-    vp, _ = _pad_seq(v, bk_eff, 2)
+    qp, pq = pad_axis(q, bq_eff, 2)
+    kp, pk = pad_axis(k, bk_eff, 2)
+    vp, _ = pad_axis(v, bk_eff, 2)
     if pk:
         # padded KV columns must never win the max: rely on causal/window
         # masks only if they cover them; otherwise mask via kv_offset trick

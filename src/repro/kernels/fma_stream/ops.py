@@ -9,19 +9,11 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels.common import pad_to_multiple
 from repro.kernels.fma_stream.kernel import (DEFAULT_BLOCK, SUBLANES,
                                              fma_stream_pallas)
 from repro.kernels.fma_stream.ref import fma_stream_ref
-
-
-def _pad_to(x: jax.Array, mult: int) -> jax.Array:
-    n = x.shape[0]
-    pad = (-n) % mult
-    if pad:
-        x = jnp.pad(x, (0, pad))
-    return x
 
 
 @functools.partial(jax.jit,
@@ -34,7 +26,7 @@ def fma_stream(a, b, c, repeats: int = 1, block: int = DEFAULT_BLOCK,
         return fma_stream_ref(a, b, c, repeats)
     n = a.shape[0]
     tile = SUBLANES * block
-    a2, b2, c2 = (_pad_to(x, tile) for x in (a, b, c))
+    a2, b2, c2 = (pad_to_multiple(x, tile) for x in (a, b, c))
     out = fma_stream_pallas(a2, b2, c2, repeats=repeats, block=block,
                             interpret=interpret)
     return out[:n]

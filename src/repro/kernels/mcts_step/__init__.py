@@ -1,0 +1,4 @@
+"""Fused MCTS superstep kernels: batched select + scatter-add backup."""
+from repro.kernels.mcts_step.ops import mcts_backup, mcts_select
+
+__all__ = ["mcts_backup", "mcts_select"]

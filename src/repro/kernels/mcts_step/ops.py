@@ -1,0 +1,111 @@
+"""Jitted dispatch wrappers for the fused MCTS superstep kernels.
+
+Same dispatch contract as ``kernels/uct_select/ops.py``: the Pallas
+kernels run on TPU (or anywhere under ``interpret=True`` for CPU
+validation), the pure-jnp oracle elsewhere — so ``repro.core.mcts`` calls
+one function and the backend picks the implementation.
+
+Both entry points take **batched** slabs with a leading game axis
+(``[G, N]`` / ``[G, N, A]``): the fused search operates on all games of a
+``search_batch`` directly (``grid=(G,)`` in the kernel, ``vmap`` of the
+single-game oracle on CPU) instead of relying on vmap-of-``pallas_call``
+batching rules.
+
+Traced-vs-static: ``c_uct`` / ``vl_weight`` / ``prior_w`` / ``seed`` are
+traced per-game operands (scalar or ``[G]``; values never recompile);
+``lanes`` / ``max_depth`` / ``expand_threshold`` / ``use_puct`` /
+``playouts`` are static shape/program parameters, and the *presence* of
+``prior_w`` selects the blended scoring program — identical to the
+``uct_select`` contract.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import pad2, round_up
+from repro.kernels.mcts_step.kernel import (LANE, mcts_backup_pallas,
+                                            mcts_select_pallas)
+from repro.kernels.mcts_step.ref import mcts_backup_ref, mcts_select_ref
+
+UNVISITED = -1
+
+
+def _per_game(x, g: int, dtype=jnp.float32):
+    """Broadcast a scalar-or-``[G]`` traced knob to a ``[G]`` vector."""
+    return jnp.broadcast_to(jnp.asarray(x, dtype), (g,))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "lanes", "max_depth", "expand_threshold", "use_puct", "interpret"))
+def mcts_select(visit, value, vloss, prior, legal, children, expanded,
+                terminal, player, seed, *, c_uct, vl_weight, prior_w=None,
+                lanes: int, max_depth: int, expand_threshold: int = 1,
+                use_puct: bool = False, interpret: bool = False):
+    """All ``lanes`` descents for every game of a batch; see ref.py.
+
+    ``visit/value/vloss/player`` ``f32[G, N]``; ``expanded/terminal``
+    ``bool[G, N]``; ``prior`` ``f32[G, N, A]``; ``legal`` ``bool[G, N,
+    A]``; ``children`` ``i32[G, N, A]``; ``seed`` ``u32[G]``.  Returns
+    ``(paths i32[G, L, D], depth i32[G, L], leaf i32[G, L], act
+    i32[G, L], can_expand bool[G, L], vloss f32[G, N])``.
+    """
+    g = visit.shape[0]
+    legal = legal.astype(jnp.float32)
+    expanded = expanded.astype(jnp.float32)
+    terminal = terminal.astype(jnp.float32)
+    seed = _per_game(seed, g, jnp.uint32)
+    c = _per_game(c_uct, g)
+    vlw = _per_game(vl_weight, g)
+    pw = None if prior_w is None else _per_game(prior_w, g)
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        def one(vi, va, vl, pr, lg, ch, ex, te, pl_, sd, cc, vw, *rest):
+            return mcts_select_ref(
+                vi, va, vl, pr, lg, ch, ex, te, pl_, sd,
+                c_uct=cc, vl_weight=vw,
+                prior_w=rest[0] if rest else None,
+                use_puct=use_puct, lanes=lanes, max_depth=max_depth,
+                expand_threshold=expand_threshold)
+        args = (visit, value, vloss, prior, legal, children, expanded,
+                terminal, player, seed, c, vlw)
+        out = jax.vmap(one)(*args) if pw is None \
+            else jax.vmap(one)(*args, pw)
+        paths, depth, leaf, act, can_exp, vl = out
+        return paths, depth, leaf, act, can_exp, vl
+    a = prior.shape[-1]
+    ap = round_up(a, LANE)
+    n = visit.shape[1]
+    # pad the action axis: illegal zero-prior lanes can never win argmax
+    pad3 = jax.vmap(lambda x: pad2(x, n, ap))
+    prior_p = pad3(prior)
+    legal_p = pad3(legal)
+    kids_p = jnp.pad(children, ((0, 0), (0, 0), (0, ap - a)),
+                     constant_values=UNVISITED) if ap != a else children
+    paths, depth, leaf, act, can_exp, vl = mcts_select_pallas(
+        visit, value, vloss, prior_p, legal_p, kids_p, expanded, terminal,
+        player, seed, c, vlw, pw, lanes=lanes, max_depth=max_depth,
+        expand_threshold=expand_threshold, use_puct=use_puct,
+        interpret=interpret)
+    return paths, depth, leaf, act, can_exp != 0, vl
+
+
+@functools.partial(jax.jit, static_argnames=("playouts", "interpret"))
+def mcts_backup(visit, value, paths, val_sum, *, playouts: float = 1.0,
+                interpret: bool = False):
+    """Scatter-add backup over every game/lane path; see ref.py.
+
+    ``visit/value f32[G, N]``, ``paths i32[G, L, D]``, ``val_sum
+    f32[G, L]`` -> updated ``(visit, value)``.  ``playouts`` is the
+    static per-leaf playout count ``P`` (each path entry gains ``P``
+    visits).
+    """
+    use_pallas = interpret or jax.default_backend() == "tpu"
+    if not use_pallas:
+        return jax.vmap(
+            functools.partial(mcts_backup_ref, playouts=playouts))(
+                visit, value, paths, val_sum)
+    return mcts_backup_pallas(visit, value, paths, val_sum,
+                              playouts=playouts, interpret=interpret)

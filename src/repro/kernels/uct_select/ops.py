@@ -19,14 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import pad2, round_up
 from repro.kernels.uct_select.kernel import LANE, ROWS, uct_scores_pallas
 from repro.kernels.uct_select.ref import per_row, uct_scores_ref
-
-
-def _pad2(x, b_to, a_to):
-    pb = b_to - x.shape[0]
-    pa = a_to - x.shape[1]
-    return jnp.pad(x, ((0, pb), (0, pa)))
 
 
 @functools.partial(jax.jit, static_argnames=("use_puct", "interpret"))
@@ -53,9 +48,10 @@ def uct_scores(child_visit, child_value, child_vloss, prior, legal,
                               c_uct=c_uct, vl_weight=vl_weight,
                               prior_w=prior_w, use_puct=use_puct)
     b, a = child_visit.shape
-    bp = -(-b // ROWS) * ROWS
-    ap = -(-a // LANE) * LANE
-    args2 = [_pad2(x.astype(jnp.float32), bp, ap)
+    bp = round_up(b, ROWS)
+    ap = round_up(a, LANE)
+    aligned = bp == b and ap == a   # skip the pad+slice round trip
+    args2 = [pad2(x.astype(jnp.float32), bp, ap)
              for x in (child_visit, child_value, child_vloss, prior, legal,
                        has_child)]
     pn = jnp.pad(parent_n.astype(jnp.float32), (0, bp - b))[:, None]
@@ -72,4 +68,4 @@ def uct_scores(child_visit, child_value, child_vloss, prior, legal,
     else:
         out = uct_scores_pallas(*args2, pn, pidx, *cols,
                                 use_puct=use_puct, interpret=interpret)
-    return out[:b, :a]
+    return out if aligned else out[:b, :a]

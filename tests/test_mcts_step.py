@@ -1,0 +1,378 @@
+"""Fused MCTS superstep tests (kernels/mcts_step + the MCTS ``fused=`` flag).
+
+Four invariant groups:
+
+* **kernel parity** — interpret-mode Pallas ``mcts_select`` / ``mcts_backup``
+  match the pure-jnp oracle over random tree forests, for both the plain and
+  the prior-blended scoring program (the kernel-parity CI job runs these);
+* **fused=False bit-identity** — the flag's off-position is the exact
+  historical program: array_equal against a flagless player at the MCTS
+  level, through a SearchService pool, and (slow tier) on 8 faked devices,
+  with the dispatch compile count unchanged;
+* **fused search invariants** — visit conservation, virtual-loss clearing,
+  traced ``sims`` masking and traced ``SearchParams`` with one compiled
+  trace, legality of chosen actions, evaluator lane under fusion;
+* **fused service** — a fused player drives the SearchService dispatch
+  end-to-end from a single compiled trace.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS, SearchParams
+from repro.core.service import SearchService
+from repro.kernels.mcts_step.ops import mcts_backup, mcts_select
+from repro.kernels.mcts_step.ref import tie_break_noise
+
+CFG = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+CAP = 12
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _forest(seed, g=3, n=64, a=82):
+    """Random tree slabs shaped like a mid-search arena (children > parent)."""
+    rng = np.random.default_rng(seed)
+    visit = rng.integers(0, 20, (g, n)).astype(np.float32)
+    value = rng.normal(size=(g, n)).astype(np.float32) * 3
+    vloss = rng.integers(0, 3, (g, n)).astype(np.float32)
+    prior = rng.random((g, n, a)).astype(np.float32)
+    legal = rng.random((g, n, a)) < 0.7
+    legal[:, :, -1] = True                        # pass always legal
+    children = np.full((g, n, a), -1, np.int32)
+    for gi in range(g):
+        for i in range(n // 2):
+            for act in rng.choice(a, size=4, replace=False):
+                children[gi, i, act] = rng.integers(i + 1, n)
+    expanded = rng.random((g, n)) < 0.9
+    terminal = rng.random((g, n)) < 0.05
+    expanded[:, 0] = True
+    terminal[:, 0] = False
+    player = rng.choice([-1.0, 1.0], (g, n)).astype(np.float32)
+    return tuple(jnp.asarray(x) for x in (
+        visit, value, vloss, prior, legal, children, expanded, terminal,
+        player))
+
+
+SELECT_KW = dict(c_uct=0.9, vl_weight=1.0, lanes=4, max_depth=8,
+                 expand_threshold=1)
+
+
+# ------------------------------------------------------------ kernel parity
+
+
+class TestSelectParity:
+    @pytest.mark.parametrize("pw", [None, (0.0, 0.5, 1.0)])
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_interpret_matches_ref(self, pw, seed):
+        """The Pallas program (interpret mode) and the oracle agree on
+        every selection output — paths, depths, leaves, actions, the
+        expansion mask, and the accumulated virtual loss."""
+        slabs = _forest(seed)
+        seeds = jnp.arange(3, dtype=jnp.uint32) + 7
+        pwa = None if pw is None else jnp.asarray(pw)
+        ref = mcts_select(*slabs, seeds, prior_w=pwa, **SELECT_KW)
+        ker = mcts_select(*slabs, seeds, prior_w=pwa, interpret=True,
+                          **SELECT_KW)
+        for name, r, k in zip(
+                ("paths", "depth", "leaf", "act", "can_exp", "vloss"),
+                ref, ker):
+            r, k = np.asarray(r), np.asarray(k)
+            if r.dtype.kind == "f":
+                np.testing.assert_allclose(r, k, rtol=2e-6, atol=2e-6,
+                                           err_msg=name)
+            else:
+                np.testing.assert_array_equal(r, k, err_msg=name)
+
+    def test_use_puct_program(self):
+        slabs = _forest(2)
+        seeds = jnp.zeros((3,), jnp.uint32)
+        kw = dict(SELECT_KW, use_puct=True)
+        ref = mcts_select(*slabs, seeds, **kw)
+        ker = mcts_select(*slabs, seeds, interpret=True, **kw)
+        np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(ker[0]))
+        np.testing.assert_allclose(np.asarray(ref[5]), np.asarray(ker[5]),
+                                   rtol=2e-6)
+
+    def test_lanes_accumulate_virtual_loss(self):
+        """Each lane adds one unit of virtual loss per path node, root
+        included — the cross-lane decorrelation the fusion preserves."""
+        slabs = _forest(3)
+        seeds = jnp.zeros((3,), jnp.uint32)
+        paths, _, _, _, _, vl = mcts_select(*slabs, seeds, **SELECT_KW)
+        added = np.asarray(vl) - np.asarray(slabs[2])
+        assert added.sum() == (np.asarray(paths) != -1).sum()
+        assert (added >= 0).all()
+
+    def test_seed_perturbs_tie_breaks(self):
+        """Different seeds must be able to change lane routes (the
+        asynchronous-thread nondeterminism analogue)."""
+        visit, value, vloss, prior, legal, ch, ex, te, pl = _forest(4)
+        # flat landscape so only the tie-break noise orders the edges
+        slabs = (jnp.zeros_like(visit), jnp.zeros_like(value),
+                 jnp.zeros_like(vloss), jnp.ones_like(prior),
+                 jnp.ones_like(legal), ch, ex, te, pl)
+        a = mcts_select(*slabs, jnp.zeros((3,), jnp.uint32), **SELECT_KW)
+        b = mcts_select(*slabs, jnp.full((3,), 99, jnp.uint32), **SELECT_KW)
+        assert (np.asarray(a[3]) != np.asarray(b[3])).any()
+
+    def test_noise_bounded_and_deterministic(self):
+        iota = jnp.arange(128, dtype=jnp.uint32)
+        x = tie_break_noise(7, 3, 2, iota)
+        y = tie_break_noise(7, 3, 2, iota)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert float(x.min()) >= 0.0 and float(x.max()) < 1e-3
+        assert len(np.unique(np.asarray(x))) > 100     # actually varies
+
+
+class TestBackupParity:
+    def test_interpret_matches_ref(self):
+        rng = np.random.default_rng(0)
+        g, lanes, d, n = 3, 4, 8, 64
+        paths = np.full((g, lanes, d), -1, np.int32)
+        for gi in range(g):
+            for li in range(lanes):
+                depth = rng.integers(1, d)
+                paths[gi, li, :depth] = rng.choice(n, size=depth,
+                                                   replace=False)
+        val_sum = jnp.asarray(rng.normal(size=(g, lanes)), jnp.float32)
+        visit = jnp.asarray(rng.integers(0, 9, (g, n)), jnp.float32)
+        value = jnp.asarray(rng.normal(size=(g, n)), jnp.float32)
+        ref = mcts_backup(visit, value, jnp.asarray(paths), val_sum,
+                          playouts=2.0)
+        ker = mcts_backup(visit, value, jnp.asarray(paths), val_sum,
+                          playouts=2.0, interpret=True)
+        for name, r, k in zip(("visit", "value"), ref, ker):
+            np.testing.assert_allclose(np.asarray(r), np.asarray(k),
+                                       rtol=2e-6, atol=2e-6, err_msg=name)
+
+    def test_duplicate_path_nodes_accumulate(self):
+        """Two lanes through the same node both deposit visits/value —
+        the lock-free scatter-add contract of the paper's backups."""
+        paths = jnp.asarray([[[0, 1, -1], [0, 1, 2]]], jnp.int32)
+        vs = jnp.asarray([[1.0, -1.0]], jnp.float32)
+        visit0 = jnp.zeros((1, 4))
+        value0 = jnp.zeros((1, 4))
+        visit, value = mcts_backup(visit0, value0, paths, vs, playouts=1.0,
+                                   interpret=True)
+        np.testing.assert_allclose(np.asarray(visit[0]), [2, 2, 1, 0])
+        np.testing.assert_allclose(np.asarray(value[0]), [0, 0, -1, 0],
+                                   atol=1e-6)
+
+
+# ------------------------------------------------- fused=False bit-identity
+
+
+@pytest.fixture(scope="module")
+def roots2(engine5):
+    st = engine5.init_state()
+    for mv in (3, 7, 12):
+        st = engine5.jit_play(st, jnp.int32(mv))
+    return jax.tree.map(lambda a, b: jnp.stack([a, b]),
+                        engine5.init_state(), st)
+
+
+@pytest.fixture(scope="module")
+def keys2():
+    return jnp.asarray(jax.random.split(jax.random.PRNGKey(13), 2))
+
+
+class TestFusedFalseBitIdentity:
+    def test_mcts_level(self, engine5, roots2, keys2):
+        """fused=False must leave search_batch on the exact historical
+        program: every output array_equal to a flagless player's."""
+        base = MCTS(engine5, CFG).search_batch(roots2, keys2)
+        off = MCTS(engine5, CFG, fused=False).search_batch(roots2, keys2)
+        np.testing.assert_array_equal(np.asarray(off.action),
+                                      np.asarray(base.action))
+        np.testing.assert_array_equal(np.asarray(off.root_visits),
+                                      np.asarray(base.root_visits))
+        np.testing.assert_array_equal(np.asarray(off.root_values),
+                                      np.asarray(base.root_values))
+        np.testing.assert_array_equal(np.asarray(off.tree.visit),
+                                      np.asarray(base.tree.visit))
+        np.testing.assert_array_equal(np.asarray(off.tree.value),
+                                      np.asarray(base.tree.value))
+
+    def test_mcts_level_with_sims_and_params(self, engine5, roots2, keys2):
+        sims = jnp.asarray([4, 8], jnp.int32)
+        params = SearchParams(jnp.full((2,), CFG.c_uct),
+                              jnp.full((2,), CFG.virtual_loss))
+        base = MCTS(engine5, CFG).search_batch(roots2, keys2, sims, params)
+        off = MCTS(engine5, CFG, fused=False).search_batch(
+            roots2, keys2, sims, params)
+        np.testing.assert_array_equal(np.asarray(off.root_visits),
+                                      np.asarray(base.root_visits))
+        np.testing.assert_array_equal(np.asarray(off.tree.visit),
+                                      np.asarray(base.tree.visit))
+
+    def test_pool_level_one_trace(self, engine5):
+        """A fused=False player through the SearchService pool: identical
+        game records and an unchanged dispatch compile count."""
+        def run(player):
+            svc = SearchService(engine5, player, player, slots=2,
+                                max_moves=CAP)
+            svc.reset(seed=0, colour_cap=2)
+            keys = np.asarray(jax.random.split(jax.random.PRNGKey(5), 4))
+            tickets = [svc.submit_game(key=k) for k in keys]
+            recs = {r.ticket: r for r in svc.drain()}
+            return svc, [recs[t] for t in tickets]
+
+        _, want = run(MCTS(engine5, CFG))
+        svc, got = run(MCTS(engine5, CFG, fused=False))
+        for w, g in zip(want, got):
+            assert w[:7] == g[:7]          # every scalar result field
+            np.testing.assert_array_equal(w.root_visits, g.root_visits)
+        assert svc._dispatch._cache_size() == 1
+        assert svc._push_games._cache_size() == 1
+
+
+# -------------------------------------------------- fused search invariants
+
+
+@pytest.fixture(scope="module")
+def fused_player(engine5):
+    return MCTS(engine5, CFG, fused=True)
+
+
+class TestFusedSearch:
+    def test_visit_conservation_and_vloss_cleared(self, fused_player,
+                                                  roots2, keys2):
+        out = fused_player.search_batch(roots2, keys2)
+        it = fused_player.iterations
+        # every iteration deposits lanes * playouts visits on the root
+        np.testing.assert_allclose(np.asarray(out.tree.visit[:, 0]),
+                                   1.0 + it * CFG.lanes)
+        assert float(jnp.abs(out.tree.vloss).max()) == 0.0
+        # root visit mass equals the sum over root actions + the init visit
+        np.testing.assert_allclose(
+            np.asarray(out.root_visits.sum(-1)),
+            np.asarray(out.tree.visit[:, 0]) - 1.0)
+
+    def test_actions_legal(self, fused_player, engine5, roots2, keys2):
+        out = fused_player.search_batch(roots2, keys2)
+        legal = jax.vmap(engine5.legal_moves)(roots2)
+        for g in range(2):
+            assert bool(legal[g, int(out.action[g])])
+
+    def test_sims_masking_monotone(self, fused_player, engine5):
+        g = 3
+        roots = jax.vmap(lambda _: engine5.init_state())(jnp.arange(g))
+        rngs = jnp.asarray(jax.random.split(jax.random.PRNGKey(0), g))
+        sims = jnp.asarray([2, 4, 8], jnp.int32)
+        out = fused_player.search_batch(roots, rngs, sims)
+        sizes = np.asarray(out.tree.size)
+        visits = np.asarray(out.tree.visit[:, 0])
+        assert (np.diff(sizes) >= 0).all(), sizes
+        assert (np.diff(visits) > 0).all(), visits
+
+    def test_params_traced_one_trace(self, fused_player, roots2, keys2):
+        fn = jax.jit(fused_player.search_batch)
+        for cu, vl in ((0.9, 1.0), (1.7, 2.5), (0.4, 0.5)):
+            fn(roots2, keys2,
+               params=SearchParams(jnp.full((2,), cu), jnp.full((2,), vl)))
+        assert fn._cache_size() == 1
+
+    def test_deterministic(self, fused_player, roots2, keys2):
+        a = fused_player.search_batch(roots2, keys2)
+        b = fused_player.search_batch(roots2, keys2)
+        np.testing.assert_array_equal(np.asarray(a.root_visits),
+                                      np.asarray(b.root_visits))
+
+    def test_tree_growth_bounded_by_capacity(self, engine5):
+        """Deferred expansion must respect the arena: a tiny tree fills up
+        and further iterations keep size pinned at max_nodes."""
+        cfg = MCTSConfig(board_size=5, lanes=4, sims_per_move=64,
+                         max_nodes=16)
+        m = MCTS(engine5, cfg, fused=True, max_depth=8)
+        roots = jax.vmap(lambda _: engine5.init_state())(jnp.arange(2))
+        rngs = jnp.asarray(jax.random.split(jax.random.PRNGKey(1), 2))
+        out = m.search_batch(roots, rngs)
+        assert (np.asarray(out.tree.size) <= 16).all()
+
+    def test_evaluator_lane_under_fusion(self, engine5, roots2, keys2,
+                                         fused_player):
+        """A guided fused player consumes net priors/values (differs from
+        the unguided fused search) and w=0 rows stay playout-pure."""
+        from repro.core.evaluator import EvalConfig, EvalService
+        ev = EvalService(EvalConfig(board_size=5, d_model=16, num_layers=1,
+                                    num_heads=2, d_ff=32))
+        guided = MCTS(engine5, CFG, evaluator=ev, fused=True)
+
+        def params(w):
+            return SearchParams(jnp.full((2,), CFG.c_uct),
+                                jnp.full((2,), CFG.virtual_loss),
+                                jnp.asarray(w, jnp.float32))
+
+        base = fused_player.search_batch(roots2, keys2)
+        got = guided.search_batch(roots2, keys2, params=params([1.0, 1.0]))
+        assert (np.asarray(got.root_visits)
+                != np.asarray(base.root_visits)).any()
+        # value mixing off at w=0: visit mass still conserved
+        w0 = guided.search_batch(roots2, keys2, params=params([0.0, 0.0]))
+        np.testing.assert_allclose(
+            np.asarray(w0.tree.visit[:, 0]),
+            1.0 + guided.iterations * CFG.lanes)
+
+
+# ----------------------------------------------------------- fused service
+
+
+class TestFusedService:
+    def test_fused_pool_completes_games_one_trace(self, engine5):
+        player = MCTS(engine5, CFG, fused=True)
+        svc = SearchService(engine5, player, player, slots=2, max_moves=CAP)
+        svc.reset(seed=0, colour_cap=2)
+        tickets = [svc.submit_game() for _ in range(4)]
+        recs = {r.ticket: r for r in svc.drain()}
+        assert sorted(recs) == sorted(tickets)
+        assert all(recs[t].moves > 0 for t in tickets)
+        assert svc._dispatch._cache_size() == 1
+
+
+@pytest.mark.slow
+class TestFusedFalseSharded:
+    """8-fake-device bit-identity for the flag's off-position."""
+
+    def test_sharded_pool_matches_flagless(self):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                            + env.get("XLA_FLAGS", "")).strip()
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        out = subprocess.run([sys.executable, "-c", """
+import jax, numpy as np
+assert jax.device_count() == 8
+from repro.compat import make_service_mesh
+from repro.config import MCTSConfig
+from repro.core.mcts import MCTS
+from repro.core.service import SearchService
+from repro.go import GoEngine
+
+eng = GoEngine(5, komi=0.5)
+cfg = MCTSConfig(board_size=5, lanes=2, sims_per_move=8, max_nodes=64)
+st = eng.init_state()
+keys = np.asarray(jax.random.split(jax.random.PRNGKey(3), 4))
+
+def serve(player, mesh, slots):
+    svc = SearchService(eng, player, player, slots=slots, max_moves=12,
+                        mesh=mesh)
+    svc.reset(seed=0)
+    tickets = [svc.submit_serve(st, key=k) for k in keys]
+    recs = {r.ticket: r for r in svc.drain()}
+    return svc, [recs[t] for t in tickets]
+
+_, want = serve(MCTS(eng, cfg), None, 4)
+svc, got = serve(MCTS(eng, cfg, fused=False), make_service_mesh(8), 16)
+for w, g in zip(want, got):
+    assert w.action == g.action
+    np.testing.assert_array_equal(w.root_visits, g.root_visits)
+assert svc._dispatch_mesh._cache_size() == 1
+print("OK")
+"""], env=env, capture_output=True, text=True, timeout=480)
+        assert out.returncode == 0, \
+            f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
