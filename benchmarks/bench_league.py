@@ -1,0 +1,184 @@
+"""League scheduling benchmark -> BENCH_league.json.
+
+Measures what adaptive (Elo-CI-driven) scheduling buys over round-robin
+on the tiny 5x5 reference league: three trace-compatible configs whose
+strength ordering is real (playout budgets 8/4/2), both arms run to the
+same stop test (every pairing separated at ``Z`` standard errors of the
+rating difference, or ``BUDGET`` games), and the reported metric is
+**games to separation** — the adaptive arm stops funding pairings the
+moment their CIs detach, so it should resolve the table in strictly
+fewer games (``league.adaptive_games`` gates lower-is-better in
+``check_regression.py --league``).
+
+The payload also carries a **kill/resume identity** cell: the adaptive
+arm is re-run with a preemption trigger after wave 2, resumed from the
+wave-boundary snapshot, and the final cross table (win matrix, game
+counts, colour ledger) must be bit-identical to the uninterrupted arm —
+the league's crash/resume contract, exercised on every CI run.
+
+    PYTHONPATH=src python benchmarks/bench_league.py [--out BENCH_league.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+if __package__ in (None, ""):                    # `python benchmarks/...`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.config import MCTSConfig
+from repro.core.league import League
+from repro.go import GoEngine
+
+BOARD = 5
+KOMI = 0.5
+MOVE_CAP = 30
+BASE = MCTSConfig(board_size=BOARD, komi=KOMI, lanes=2, sims_per_move=8,
+                  max_nodes=64)
+CONFIGS = (BASE,
+           dataclasses.replace(BASE, sims_per_move=4, c_uct=0.8),
+           dataclasses.replace(BASE, sims_per_move=2, c_uct=2.0))
+Z = 1.0
+BUDGET = 60
+GAMES_PER_WAVE = 2
+SEED = 3
+INTERRUPT_WAVE = 2
+SCHEMA = "bench_league/v1"
+
+
+def _league(engine: GoEngine, schedule: str, **kw) -> League:
+    return League(engine, CONFIGS, z=Z, budget=BUDGET,
+                  games_per_wave=GAMES_PER_WAVE, schedule=schedule,
+                  seed=SEED, max_moves=MOVE_CAP, **kw)
+
+
+def run_arm(engine: GoEngine, schedule: str) -> dict:
+    """One scheduling arm to separation (or budget); timed."""
+    lg = _league(engine, schedule)
+    t0 = time.perf_counter()
+    res = lg.run()
+    wall = time.perf_counter() - t0
+    return {
+        "schedule": schedule, "games_to_separation": res.games_played,
+        "waves": res.waves, "converged": res.converged, "wall_s": wall,
+        "per_wave_games": [r["games"] for r in lg.history],
+        "result": res,
+    }
+
+
+def run_resume(engine: GoEngine, reference) -> dict:
+    """Kill after INTERRUPT_WAVE waves, resume, compare cross tables."""
+    state_dir = tempfile.mkdtemp(prefix="bench_league_")
+    try:
+        lg = _league(engine, "adaptive", state_dir=state_dir)
+        lg.on_wave = lambda rec: (rec["wave"] >= INTERRUPT_WAVE
+                                  and lg.preemption.trigger())
+        part = lg.run()
+        if not part.stopped or part.waves != INTERRUPT_WAVE:
+            raise RuntimeError(
+                f"preemption did not stop the league at wave "
+                f"{INTERRUPT_WAVE} (waves={part.waves})")
+        resumed = _league(engine, "adaptive", state_dir=state_dir,
+                          resume=True).run()
+        identical = (
+            np.array_equal(resumed.win_matrix, reference.win_matrix)
+            and np.array_equal(resumed.games, reference.games)
+            and np.array_equal(resumed.blacks, reference.blacks))
+        if not identical:
+            raise RuntimeError(
+                "resumed league diverged from the uninterrupted run:\n"
+                f"win {resumed.win_matrix} vs {reference.win_matrix}\n"
+                f"games {resumed.games} vs {reference.games}\n"
+                f"blacks {resumed.blacks} vs {reference.blacks}")
+        return {"interrupt_wave": INTERRUPT_WAVE,
+                "resumed_waves": resumed.waves,
+                "resumed_games": resumed.games_played,
+                "identical": identical}
+    finally:
+        shutil.rmtree(state_dir, ignore_errors=True)
+
+
+def _payload(adaptive: dict, rr: dict, resume: dict) -> dict:
+    res = adaptive.pop("result")
+    rr.pop("result")
+    return {
+        "schema": SCHEMA, "board": BOARD, "komi": KOMI,
+        "move_cap": MOVE_CAP, "z": Z, "budget": BUDGET,
+        "games_per_wave": GAMES_PER_WAVE, "seed": SEED,
+        "configs": [{"sims_per_move": c.sims_per_move, "c_uct": c.c_uct}
+                    for c in CONFIGS],
+        "adaptive": adaptive, "round_robin": rr, "resume": resume,
+        "elo": [round(e, 1) for e in res.elo.elo],
+        "ci": [round(c, 1) for c in res.elo.ci],
+    }
+
+
+def bench() -> dict:
+    """Both arms + the resume identity cell; asserts adaptive wins."""
+    engine = GoEngine(BOARD, KOMI)
+    adaptive = run_arm(engine, "adaptive")
+    rr = run_arm(engine, "round_robin")
+    if not adaptive["converged"]:
+        raise RuntimeError(
+            f"adaptive arm failed to separate within {BUDGET} games")
+    if adaptive["games_to_separation"] >= rr["games_to_separation"]:
+        raise RuntimeError(
+            f"adaptive scheduling ({adaptive['games_to_separation']} "
+            f"games) did not beat round-robin "
+            f"({rr['games_to_separation']} games)")
+    resume = run_resume(engine, adaptive["result"])
+    return _payload(adaptive, rr, resume)
+
+
+def run() -> None:
+    """benchmarks.run entry: both arms + resume cell, default output."""
+    payload = bench()
+    csv_row("league_adaptive", payload["adaptive"]["wall_s"],
+            f"games={payload['adaptive']['games_to_separation']};"
+            f"rr={payload['round_robin']['games_to_separation']};"
+            f"resume_ok={payload['resume']['identical']}")
+    with open("BENCH_league.json", "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+
+def main() -> None:
+    """CLI entry point: arms + resume cell, printed + JSON."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_league.json")
+    args = ap.parse_args()
+
+    print(f"# league scheduling ({BOARD}x{BOARD}, z={Z}, "
+          f"budget {BUDGET}, {len(CONFIGS)} configs)")
+    payload = bench()
+    a, r = payload["adaptive"], payload["round_robin"]
+    print(f"adaptive:    {a['games_to_separation']:3d} games over "
+          f"{a['waves']} waves (converged={a['converged']}, "
+          f"{a['wall_s']:.1f}s)")
+    print(f"round_robin: {r['games_to_separation']:3d} games over "
+          f"{r['waves']} waves (converged={r['converged']}, "
+          f"{r['wall_s']:.1f}s)")
+    print(f"resume: interrupted at wave "
+          f"{payload['resume']['interrupt_wave']}, cross table identical="
+          f"{payload['resume']['identical']}")
+    csv_row("league_adaptive", a["wall_s"],
+            f"games={a['games_to_separation']};"
+            f"rr={r['games_to_separation']};"
+            f"resume_ok={payload['resume']['identical']}")
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,6 +6,7 @@ and ``bench_load.py --smoke`` on the serving tier, then:
 
     python benchmarks/check_regression.py BENCH_service.json \\
         --load BENCH_load.json --eval BENCH_eval.json \\
+        --league BENCH_league.json \\
         --baseline benchmarks/baselines/ci_cpu.json
 
 Metrics are **direction-aware**: throughput (``*_sims_per_sec``) fails
@@ -100,9 +101,22 @@ KERNEL_METRICS = {
 }
 
 
+# gated league metrics over BENCH_league.json (PR 9): games the adaptive
+# scheduler needs to separate the reference cross table at confidence Z.
+# Lower is better — a scheduling regression (funding already-resolved
+# pairings, or a CI estimate gone loose) shows up as more games burned
+# for the same verdict.  The bench itself hard-fails unless adaptive
+# beats round-robin and the kill/resume cross table is bit-identical,
+# so the band here only watches for drift in the margin.
+LEAGUE_METRICS = {
+    "league.adaptive_games": lambda d: d["adaptive"]["games_to_separation"],
+}
+
+
 def lower_is_better(name: str) -> bool:
-    """Gate direction by metric name: latencies and bytes fail upward."""
-    return name.endswith("_ms") or name.endswith("_bytes_per_sim")
+    """Gate direction by metric name: latencies/bytes/games fail upward."""
+    return (name.endswith("_ms") or name.endswith("_bytes_per_sim")
+            or name.endswith("_games"))
 
 
 def extract(payload: dict, metrics: dict) -> dict:
@@ -159,14 +173,21 @@ def main() -> int:
         default=None,
         help="BENCH_kernels.json from this run (optional)",
     )
+    ap.add_argument(
+        "--league",
+        default=None,
+        help="BENCH_league.json from this run (optional)",
+    )
     ap.add_argument("--baseline", default="benchmarks/baselines/ci_cpu.json")
     ap.add_argument("--tolerance", type=float, default=None, help="override the baseline's band")
     ap.add_argument("--update", action="store_true", help="rewrite the baseline from this run")
     args = ap.parse_args()
     if (args.bench is None and args.load is None
-            and args.eval_bench is None and args.kernels is None):
+            and args.eval_bench is None and args.kernels is None
+            and args.league is None):
         ap.error("pass BENCH_service.json, --load BENCH_load.json, "
-                 "--eval BENCH_eval.json, and/or --kernels BENCH_kernels.json")
+                 "--eval BENCH_eval.json, --kernels BENCH_kernels.json, "
+                 "and/or --league BENCH_league.json")
 
     current = {}
     source_schemas = []
@@ -190,6 +211,11 @@ def main() -> int:
             kernels_payload = json.load(f)
         current.update(extract(kernels_payload, KERNEL_METRICS))
         source_schemas.append(kernels_payload.get("schema"))
+    if args.league is not None:
+        with open(args.league) as f:
+            league_payload = json.load(f)
+        current.update(extract(league_payload, LEAGUE_METRICS))
+        source_schemas.append(league_payload.get("schema"))
 
     if args.update:
         try:

@@ -55,6 +55,7 @@ def main() -> None:
         ("bench_service", "Service dispatcher throughput (BENCH_service.json)"),
         ("bench_eval", "Evaluation-lane throughput (BENCH_eval.json)"),
         ("bench_kernels", "Fused superstep kernels (BENCH_kernels.json)"),
+        ("bench_league", "League scheduling (BENCH_league.json)"),
     ]
     print("name,us_per_call,derived")
     for mod_name, desc in figures:

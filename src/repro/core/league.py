@@ -1,0 +1,416 @@
+"""Persistent league: continuous evaluation as a first-class workload.
+
+The paper's methodology — strength measured by self-play tournaments — is
+a one-shot cross table in core/tournament.py.  The league turns it into a
+*service*: a long-lived scheduler on top of the multiplexed
+:class:`~repro.core.service.SearchService` pool that keeps playing until
+the ratings are **resolved**, not until a fixed game count runs out.
+
+Three ideas, layered:
+
+* **Elo-driven scheduling.**  After every wave the league refits the
+  Bradley–Terry ratings *with covariance*
+  (:func:`~repro.core.tournament.elo_estimate`) and schedules the next
+  wave only for pairings whose rating difference is still inside ``z``
+  standard errors (``EloEstimate.separated``).  Resolved pairings stop
+  consuming games; unresolved (or never-played) ones keep getting waves
+  until everything is separated at the target confidence or the game
+  budget runs out.  ``schedule="round_robin"`` keeps scheduling *every*
+  pairing each wave under the same stop test — the control arm
+  benchmarks/bench_league.py measures games-to-separation against.
+
+* **Colour-targeted admission.**  Each game is submitted with a forced
+  colour (``submit_game(a_black=...)``): the pairing's Black owner comes
+  from a per-pairing **colour ledger** (``blacks[i, j]`` = games of
+  pairing (i, j) in which ``i`` held Black), restoring the strict
+  per-pairing +-1 balance through the multiplexed pool.  The ledger is
+  part of the league state, so balance survives restarts.
+
+* **Crash/resume.**  A :class:`~repro.runtime.ft.PreemptionHandler`
+  drives checkpoint-at-wave-boundary: after every wave the full league
+  state (win matrix, game counts, colour ledger, wave counter, seed) is
+  snapshotted to ``state_dir`` via an atomic write-then-rename, and a
+  preempted league exits cleanly at the next boundary.  Scheduling is a
+  *pure function* of that state — per-game RNG keys derive from
+  ``(seed, i, j, game_index)``, sides from the game index, colours from
+  the ledger — so a resumed league replays the exact remaining schedule
+  and converges to the same cross table bit for bit (the
+  tests/test_league.py kill/resume pin).  A torn snapshot (partial
+  write, truncated file) fails JSON validation and the loader falls back
+  to the previous one.
+
+The wave loop::
+
+    load snapshot (resume) or start empty
+    loop:
+      fit elo_estimate(win, games)             # ratings + covariance
+      pairs <- still-overlapping pairings      # or all, round_robin
+      stop if none (converged) / budget gone / preempted
+      submit games_per_wave per pair           # key, side, forced colour
+      drain the pool; fold results into win/games/ledger
+      snapshot state                            # atomic, wave boundary
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+from typing import Callable, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import MCTSConfig
+from repro.core import stats
+from repro.core.mcts import MCTS
+from repro.core.service import LANE_TOURNAMENT, SearchService, pad_slots
+from repro.core.tournament import (EloEstimate, elo_estimate,
+                                   trace_compatible)
+from repro.go.board import GoEngine
+from repro.runtime.ft import PreemptionHandler
+
+STATE_SCHEMA = "league_state/v1"
+SCHEDULES = ("adaptive", "round_robin")
+
+
+def game_key(seed: int, i: int, j: int, g: int) -> np.ndarray:
+    """The RNG key of pairing (i, j)'s ``g``-th game — a pure function.
+
+    Keys never live in mutable RNG state: deriving them from
+    ``(seed, i, j, g)`` makes the whole schedule replayable from a
+    snapshot, which is what the kill/resume bit-identity rests on.
+    """
+    rng = np.random.default_rng((int(seed), int(i), int(j), int(g)))
+    return rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
+
+
+class LeagueResult(NamedTuple):
+    """The league's cross table plus its convergence verdict."""
+    names: Tuple[str, ...]
+    win_matrix: np.ndarray    # f64[P,P] points of row vs column
+    games: np.ndarray         # f64[P,P] games per pairing (symmetric)
+    blacks: np.ndarray        # i64[P,P] colour ledger: row held Black
+    elo: EloEstimate          # ratings + covariance/CI at the target z
+    waves: int                # waves completed (including resumed ones)
+    games_played: int         # total games in the cross table
+    converged: bool           # every pairing separated at confidence z
+    stopped: bool             # exited early on preemption
+
+    def table(self) -> str:
+        """Human-readable standings with CIs, best first."""
+        played = self.games.sum(axis=1).astype(np.int64)
+        order = np.argsort(-self.elo.elo)
+        width = max(len(n) for n in self.names)
+        lines = [f"{'player':<{width}}  elo      ci      games"]
+        for p in order:
+            lines.append(f"{self.names[p]:<{width}}  "
+                         f"{self.elo.elo[p]:<+7.0f}  "
+                         f"+-{self.elo.ci[p]:<5.0f} {played[p]}")
+        return "\n".join(lines)
+
+
+class League:
+    """Elo-driven, crash-resumable all-play-all league over one pool.
+
+    ``configs`` must be trace-compatible (only the traced fields of
+    core/tournament.py may differ): the league exists to keep many
+    differently-configured searches resident in **one** compiled
+    dispatch, and falls back to nothing — incompatible configs raise.
+
+    ``z`` is the separation confidence multiplier (1.96 = 95%);
+    ``budget`` caps total games (``None`` = unbounded); ``state_dir``
+    enables wave-boundary snapshots and ``resume=True`` restores the
+    newest valid one.  ``preemption`` is the
+    :class:`~repro.runtime.ft.PreemptionHandler` polled at wave
+    boundaries (default: a fresh handler with **no** signals bound, so
+    library use never hijacks the process's handlers — the
+    launch/league.py CLI binds SIGTERM/SIGINT).  ``on_wave`` is called
+    after every completed wave with the per-wave record dict —
+    benchmarks and tests use it to observe (or interrupt) the schedule.
+    """
+
+    def __init__(self, engine: GoEngine, configs: Sequence[MCTSConfig],
+                 names: Optional[Sequence[str]] = None,
+                 z: float = stats.Z95, budget: Optional[int] = None,
+                 games_per_wave: int = 2, schedule: str = "adaptive",
+                 state_dir: Optional[str] = None, resume: bool = False,
+                 slots: int = 0, max_moves: Optional[int] = None,
+                 seed: int = 0, superstep: int = 4, mesh=None,
+                 placement: str = "round_robin", rebalance: bool = True,
+                 multihop: bool = True, pipeline_depth: int = 1,
+                 preemption: Optional[PreemptionHandler] = None,
+                 on_wave: Optional[Callable[[dict], None]] = None,
+                 **mcts_kw):
+        if len(configs) < 2:
+            raise ValueError("league needs at least 2 configs")
+        if names is not None and len(names) != len(configs):
+            raise ValueError("names must match configs")
+        if not trace_compatible(configs):
+            raise ValueError(
+                "league configs must be trace-compatible (one compiled "
+                "dispatch); static-shape differences need per-pair pools "
+                "— use core/tournament.py multiplex=False instead")
+        if schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}")
+        if games_per_wave < 1:
+            raise ValueError("games_per_wave must be >= 1")
+        self.engine = engine
+        self.configs = list(configs)
+        self.names = tuple(names) if names is not None else tuple(
+            f"cfg{i}:{c.lanes}x{c.sims_per_move}"
+            for i, c in enumerate(configs))
+        self.z = float(z)
+        self.budget = budget
+        self.games_per_wave = games_per_wave
+        self.schedule = schedule
+        self.state_dir = state_dir
+        self.seed = seed
+        self.max_moves = max_moves
+        self.superstep = superstep
+        self.mesh = mesh
+        self.placement = placement
+        self.rebalance = rebalance
+        self.multihop = multihop
+        self.pipeline_depth = pipeline_depth
+        self.preemption = preemption or PreemptionHandler(signals=())
+        self.on_wave = on_wave
+        self.mcts_kw = mcts_kw
+        P = len(configs)
+        self.pair_list = list(itertools.combinations(range(P), 2))
+        self.slots = pad_slots(
+            slots or min(self.games_per_wave * len(self.pair_list), 8),
+            mesh)
+        # league state (restored by resume(), folded by each wave)
+        self.win = np.zeros((P, P))
+        self.counts = np.zeros((P, P))
+        self.blacks = np.zeros((P, P), np.int64)
+        self.wave = 0
+        self.games_played = 0
+        self.history: List[dict] = []
+        self.service: Optional[SearchService] = None
+        if resume:
+            if state_dir is None:
+                raise ValueError("resume=True needs a state_dir")
+            self._restore()
+
+    # ---------------------------------------------------------- state files
+
+    def _fingerprint(self) -> dict:
+        """The schedule-defining knobs a snapshot must match to restore."""
+        return {"names": list(self.names), "seed": self.seed,
+                "z": self.z, "games_per_wave": self.games_per_wave,
+                "schedule": self.schedule,
+                "budget": self.budget}
+
+    def _snapshot_path(self, wave: int) -> str:
+        return os.path.join(self.state_dir, f"league-{wave:06d}.json")
+
+    def save_state(self) -> str:
+        """Atomically snapshot league state; returns the snapshot path.
+
+        Write-then-``os.replace`` means a crash mid-write leaves a
+        ``.tmp`` the loader never looks at; a torn file that somehow
+        lands at the final name fails ``json.load`` and the loader falls
+        back to the previous wave's snapshot.
+        """
+        os.makedirs(self.state_dir, exist_ok=True)
+        path = self._snapshot_path(self.wave)
+        payload = {"schema": STATE_SCHEMA,
+                   "fingerprint": self._fingerprint(),
+                   "wave": self.wave,
+                   "games_played": self.games_played,
+                   "win": self.win.tolist(),
+                   "games": self.counts.tolist(),
+                   "blacks": self.blacks.tolist()}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+        return path
+
+    def _snapshots(self) -> List[str]:
+        if not os.path.isdir(self.state_dir):
+            return []
+        return sorted(f for f in os.listdir(self.state_dir)
+                      if f.startswith("league-") and f.endswith(".json"))
+
+    def _restore(self) -> None:
+        """Restore the newest valid snapshot (torn files fall through)."""
+        for name in reversed(self._snapshots()):
+            path = os.path.join(self.state_dir, name)
+            try:
+                with open(path) as f:
+                    payload = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                continue                      # torn/partial: try the previous
+            if payload.get("schema") != STATE_SCHEMA:
+                continue
+            if payload["fingerprint"] != self._fingerprint():
+                raise ValueError(
+                    f"snapshot {path} was written by a league with "
+                    f"different settings: {payload['fingerprint']} != "
+                    f"{self._fingerprint()}")
+            P = len(self.configs)
+            self.win = np.asarray(payload["win"], np.float64)
+            self.counts = np.asarray(payload["games"], np.float64)
+            self.blacks = np.asarray(payload["blacks"], np.int64)
+            if self.win.shape != (P, P):
+                raise ValueError(f"snapshot {path} is for "
+                                 f"{self.win.shape[0]} configs, not {P}")
+            self.wave = int(payload["wave"])
+            self.games_played = int(payload["games_played"])
+            return
+        # no (valid) snapshot: a fresh league — resume is idempotent
+
+    # ------------------------------------------------------------ scheduling
+
+    def estimate(self) -> EloEstimate:
+        """Current ratings + covariance at the league's confidence."""
+        return elo_estimate(self.win, self.counts, z=self.z)
+
+    def overlapping(self, est: Optional[EloEstimate] = None
+                    ) -> List[Tuple[int, int]]:
+        """Pairings not yet separated at the target confidence."""
+        est = est or self.estimate()
+        return [(i, j) for (i, j) in self.pair_list
+                if not est.separated(i, j)]
+
+    def _next_wave_pairs(self, est: EloEstimate) -> List[Tuple[int, int]]:
+        if self.schedule == "round_robin":
+            # control arm: the stop test is identical (all separated),
+            # only the wave keeps funding already-resolved pairings
+            return list(self.pair_list) if self.overlapping(est) else []
+        return self.overlapping(est)
+
+    def _plan_game(self, i: int, j: int, g: int, n: int) -> dict:
+        """Key, side, and forced colour of pairing (i, j)'s game ``g``.
+
+        Black ownership follows the colour ledger (fewest Blacks so far
+        takes Black; ties stagger by ``g + n`` so simultaneous pairings
+        do not all force the same colour); the A-side alternates with
+        the game index.  All inputs live in the snapshot, so the plan is
+        replayable.
+        """
+        lb_i, lb_j = int(self.blacks[i, j]), int(self.blacks[j, i])
+        if lb_i != lb_j:
+            black = i if lb_i < lb_j else j
+        else:
+            black = i if (g + n) % 2 == 0 else j
+        a = i if g % 2 == 0 else j
+        return {"key": game_key(self.seed, i, j, g),
+                "a": a, "b": j if a == i else i,
+                "black": black, "a_black": black == a}
+
+    def _ensure_service(self) -> SearchService:
+        if self.service is not None:
+            return self.service
+        cfgs = self.configs
+        shared = dataclasses.replace(
+            cfgs[0], sims_per_move=max(c.sims_per_move for c in cfgs))
+        player = MCTS(self.engine, shared, **self.mcts_kw)
+        svc = SearchService(self.engine, player, player, self.slots,
+                            max_moves=self.max_moves,
+                            superstep=self.superstep, mesh=self.mesh,
+                            placement=self.placement,
+                            rebalance=self.rebalance,
+                            multihop=self.multihop,
+                            pipeline_depth=self.pipeline_depth)
+        # forced colours make the aggregate cap redundant (the ledger
+        # holds every pairing at +-1, hence the pool at +-n_pairs), and
+        # an active cap could starve a ledger-forced demand — leave it
+        # at the no-cap default.  Capacities cover one full wave.
+        wave_max = len(self.pair_list) * self.games_per_wave
+        svc.reset(seed=self.seed, game_capacity=wave_max,
+                  ring_capacity=wave_max + self.slots)
+        self.service = svc
+        return svc
+
+    def run_wave(self) -> Optional[dict]:
+        """Schedule, play, and fold one wave; ``None`` when converged.
+
+        The returned record (also appended to ``history`` and passed to
+        ``on_wave``) carries the wave index, the scheduled pairings, the
+        games played, and the post-wave separation per scheduled pair.
+        """
+        est = self.estimate()
+        pairs = self._next_wave_pairs(est)
+        if not pairs:
+            return None
+        if self.budget is not None:
+            remaining = self.budget - self.games_played
+            if remaining <= 0:
+                return None
+        else:
+            remaining = None
+        svc = self._ensure_service()
+        pair_index = {p: n for n, p in enumerate(self.pair_list)}
+        cfgs = self.configs
+        meta: Dict[int, dict] = {}
+        for (i, j) in pairs:
+            n = pair_index[(i, j)]
+            for w in range(self.games_per_wave):
+                if remaining is not None and len(meta) >= remaining:
+                    break
+                g = int(self.counts[i, j]) + w
+                plan = self._plan_game(i, j, g, n)
+                a, b = plan["a"], plan["b"]
+                t = svc.submit_game(
+                    key=plan["key"], lane=LANE_TOURNAMENT,
+                    sims=(cfgs[a].sims_per_move, cfgs[b].sims_per_move),
+                    c_uct=(cfgs[a].c_uct, cfgs[b].c_uct),
+                    virtual_loss=(cfgs[a].virtual_loss,
+                                  cfgs[b].virtual_loss),
+                    prior_weight=(cfgs[a].prior_weight,
+                                  cfgs[b].prior_weight),
+                    a_black=plan["a_black"])
+                meta[t] = {"i": i, "j": j, **plan}
+        if not meta:
+            return None
+        for r in svc.drain():
+            m = meta[r.ticket]
+            i, j, a = m["i"], m["j"], m["a"]
+            # +1 = the A-side config won (A owns Black iff a_is_black)
+            a_score = r.winner * (1.0 if r.a_is_black else -1.0)
+            i_pts = (0.5 + 0.5 * a_score if a == i
+                     else 0.5 - 0.5 * a_score)
+            self.win[i, j] += i_pts
+            self.win[j, i] += 1.0 - i_pts
+            self.counts[i, j] += 1
+            self.counts[j, i] += 1
+            self.blacks[m["black"],
+                        j if m["black"] == i else i] += 1
+            self.games_played += 1
+        self.wave += 1
+        est = self.estimate()
+        rec = {"wave": self.wave, "pairs": list(pairs),
+               "games": len(meta), "games_played": self.games_played,
+               "separation": {f"{i},{j}": round(est.separation(i, j), 3)
+                              for (i, j) in pairs}}
+        self.history.append(rec)
+        if self.state_dir is not None:
+            self.save_state()
+        if self.on_wave is not None:
+            self.on_wave(rec)
+        return rec
+
+    def run(self, max_waves: Optional[int] = None) -> LeagueResult:
+        """Wave until converged, out of budget, preempted, or capped."""
+        waves = 0
+        while max_waves is None or waves < max_waves:
+            if self.preemption.should_stop:
+                break
+            if self.run_wave() is None:
+                break
+            waves += 1
+        return self.result()
+
+    def result(self) -> LeagueResult:
+        """The current cross table and convergence verdict."""
+        est = self.estimate()
+        converged = (self.games_played > 0
+                     and not self.overlapping(est))
+        return LeagueResult(
+            names=self.names, win_matrix=self.win.copy(),
+            games=self.counts.copy(), blacks=self.blacks.copy(),
+            elo=est, waves=self.wave, games_played=self.games_played,
+            converged=converged, stopped=self.preemption.should_stop)

@@ -13,9 +13,12 @@ pool, and one jitted ``dispatch`` step advances all ``S`` slots together:
   device-resident pending queues (a pending counter per queue, no host
   round-trip).  Full-game requests are colour-capped exactly like the PR 1
   host queue (alternating colours, at most +-1 imbalance), so device
-  refill is bit-for-bit the host refill.  Serve requests are admitted only
-  into cells that player A searches on the next step, making a query's
-  result independent of slot placement and batch-mates.
+  refill is bit-for-bit the host refill; a game may additionally carry a
+  **forced colour** (``submit_game(a_black=...)``) and is then admitted
+  only into a matching cell — the colour-targeted admission the league's
+  per-pairing +-1 ledger (core/league.py) rides on.  Serve requests are
+  admitted only into cells that player A searches on the next step, making
+  a query's result independent of slot placement and batch-mates.
 * **Search**: the parity-balanced roll-by-half from PR 1 — one
   ``player_a.search_batch`` over half the slots, one ``player_b`` over the
   other, exactly one search per move.  The per-slot ``sims`` budget and
@@ -123,6 +126,7 @@ class SearchRequest(NamedTuple):
     c_uct: jax.Array      # f32[2] UCT exploration constant per side
     vl: jax.Array         # f32[2] virtual-loss weight per side
     pw: jax.Array         # f32[2] eval-lane prior blend weight per side
+    colour: jax.Array     # i32 forced colour: 1 A=Black, 0 A=White, -1 free
     ticket: jax.Array     # i32 service-assigned id
 
 
@@ -169,6 +173,7 @@ class _Pending(NamedTuple):
     ticket: int
     shard: int
     deadline: Optional[float] = None
+    colour: int = -1      # forced colour: 1 A=Black, 0 A=White, -1 free
 
 
 class _Slots(NamedTuple):
@@ -194,6 +199,7 @@ class _Queue(NamedTuple):
     c_uct: jax.Array      # f32[Q,2]
     vl: jax.Array         # f32[Q,2]
     pw: jax.Array         # f32[Q,2]
+    colour: jax.Array     # i32[Q] forced colour demand (-1 = free)
     ticket: jax.Array     # i32[Q]
     size: jax.Array       # i32: total ever enqueued
     head: jax.Array       # i32: total ever admitted (next to admit)
@@ -295,6 +301,7 @@ def _queue_push(q: _Queue, req: SearchRequest, n: jax.Array) -> _Queue:
         c_uct=put(q.c_uct, req.c_uct),
         vl=put(q.vl, req.vl),
         pw=put(q.pw, req.pw),
+        colour=put(q.colour, req.colour),
         ticket=put(q.ticket, req.ticket),
         size=q.size + n,
     )
@@ -504,6 +511,7 @@ class SearchService:
                 c_uct=jnp.zeros((n, 2), jnp.float32),
                 vl=jnp.zeros((n, 2), jnp.float32),
                 pw=jnp.zeros((n, 2), jnp.float32),
+                colour=jnp.full((n,), -1, jnp.int32),
                 ticket=jnp.full((n,), -1, jnp.int32),
                 size=jnp.int32(0),
                 head=jnp.int32(0),
@@ -565,11 +573,21 @@ class SearchService:
 
     def submit_game(self, key=None, lane: int = LANE_ARENA, sims=0,
                     c_uct=None, virtual_loss=None,
-                    prior_weight=None) -> int:
+                    prior_weight=None, a_black=None) -> int:
         """Queue one full self-play game (A vs B); returns its ticket.
 
         Colour is assigned at admission by the slot-pool cell, capped to
         the +-1 balance by ``colour_cap`` — exactly the PR 1 host queue.
+        ``a_black`` overrides that free assignment with a **forced**
+        colour (colour-targeted admission): ``True`` admits the game
+        only into a cell where player A owns Black, ``False`` only into
+        a White cell, and ``None`` keeps the free cell-assigned colour.
+        Admission stays strictly FIFO — a forced game whose colour has
+        no matching empty cell this step blocks the game queue until the
+        parity flips (at most one dispatch step) — and forced colours
+        still count against ``colour_cap``, so a submitter forcing more
+        games of one colour than the cap allows deadlocks its own queue
+        (the league's per-pairing ledger keeps demands inside the cap).
 
         ``sims`` / ``c_uct`` / ``virtual_loss`` / ``prior_weight``
         configure this game's two searches and are **traced** through
@@ -583,9 +601,10 @@ class SearchService:
         """
         if lane not in GAME_LANES:
             raise ValueError(f"game lane must be one of {GAME_LANES}")
+        colour = -1 if a_black is None else int(bool(a_black))
         return self._submit(self._pending_games, self._init_state,
                             key, lane, sims, c_uct, virtual_loss,
-                            prior_weight)
+                            prior_weight, colour=colour)
 
     def submit_serve(self, state: GoState, key=None, sims=0,
                      c_uct=None, virtual_loss=None, prior_weight=None,
@@ -610,7 +629,7 @@ class SearchService:
 
     def _submit(self, pending: List[_Pending], state: GoState, key,
                 lane: int, sims, c_uct, virtual_loss, prior_weight=None,
-                deadline: Optional[float] = None) -> int:
+                deadline: Optional[float] = None, colour: int = -1) -> int:
         cls = CLS_SERVE if lane == LANE_SERVE else CLS_GAME
         cap = (self.serve_capacity if cls == CLS_SERVE
                else self.game_capacity)
@@ -630,7 +649,7 @@ class SearchService:
         pending.append(_Pending(state=state, key=self._draw_key(key),
                                 lane=lane, sims=sims, c_uct=cu, vl=vl,
                                 pw=pw, ticket=ticket, shard=shard,
-                                deadline=deadline))
+                                deadline=deadline, colour=colour))
         self._assigned[ticket] = (cls, shard)
         self._submitted[lane] += 1
         return ticket
@@ -672,6 +691,8 @@ class SearchService:
                            jnp.float32),
             pw=jnp.asarray([r.pw for r in rows] + [(0., 0.)] * pad,
                            jnp.float32),
+            colour=jnp.asarray([r.colour for r in rows] + [-1] * pad,
+                               jnp.int32),
             ticket=jnp.asarray([r.ticket for r in rows] + [-1] * pad,
                                jnp.int32),
         )
@@ -810,7 +831,7 @@ class SearchService:
             state=jax.tree.map(lambda x: x[idx], gq.states),
             key=gq.keys[idx], lane=gq.lane[idx], sims=gq.sims[idx],
             c_uct=gq.c_uct[idx], vl=gq.vl[idx], pw=gq.pw[idx],
-            ticket=gq.ticket[idx])
+            colour=gq.colour[idx], ticket=gq.ticket[idx])
         got = jax.tree.map(lambda x: lax.ppermute(x, self._axis, to_next),
                            chunk)
         got_n = lax.ppermute(d, self._axis, to_next)
@@ -838,15 +859,40 @@ class SearchService:
         adm_s = elig_s & (rank_s < (sq.size - sq.head))
         pos_s = (sq.head + rank_s) % Qs
 
-        # game lanes: colour-capped FIFO over the remaining empties
+        # game lanes: colour-capped FIFO over the remaining empties,
+        # honouring per-request forced colours (colour-targeted
+        # admission).  A sequential greedy walks the queue in FIFO
+        # order: entry k takes the first remaining eligible cell whose
+        # colour matches its demand (a free demand takes any cell), and
+        # an unmatchable entry blocks the rest of the queue — strict
+        # FIFO, never reordering.  With no forced colours this is the
+        # rank mapping (entry k -> the k-th eligible cell) exactly, so
+        # free pools admit bit-identically to the pre-colour dispatch.
         empty_g = empty & ~adm_s
         budget = pool.colour_cap - pool.colour_count          # i32[2]
         rank_c = jnp.where(cellA, _excl_cumsum(empty_g & cellA),
                            _excl_cumsum(empty_g & ~cellA))
         elig_g = empty_g & (rank_c < budget[cellA.astype(jnp.int32)])
-        rank_g = _excl_cumsum(elig_g)
-        adm_g = elig_g & (rank_g < (gq.size - gq.head))
-        pos_g = (gq.head + rank_g) % Qg
+        backlog_g = gq.size - gq.head
+
+        def admit_one(k, carry):
+            taken, assign, blocked = carry
+            demand = gq.colour[(gq.head + k) % Qg]
+            cand = elig_g & ~taken & ((demand < 0)
+                                      | (cellA == (demand > 0)))
+            cell = jnp.argmax(cand)
+            want = (k < backlog_g) & ~blocked
+            take = want & cand.any()
+            taken = taken.at[cell].set(taken[cell] | take)
+            assign = assign.at[cell].set(jnp.where(take, k, assign[cell]))
+            return taken, assign, blocked | (want & ~take)
+
+        _, assign, _ = lax.fori_loop(
+            0, S, admit_one,
+            (jnp.zeros((S,), jnp.bool_), jnp.full((S,), -1, jnp.int32),
+             jnp.bool_(False)))
+        adm_g = assign >= 0
+        pos_g = (gq.head + jnp.maximum(assign, 0)) % Qg
 
         def sel(mask, new, old):
             m = mask.reshape((S,) + (1,) * (old.ndim - 1))

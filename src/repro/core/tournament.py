@@ -12,18 +12,21 @@ differently-configured searches stay resident with zero re-setup — where
 the pre-PR 4 scheduler retraced (or serialised) whenever configs differed.
 
 Scheduling: games are submitted in pair-interleaved waves (wave ``w``
-holds one game of every pairing) with the A/B *role* alternating per wave,
-so each config plays both dispatch sides equally; colour (Black/White) is
-assigned at admission under the pool-wide colour cap.  Colour balance is
-therefore **aggregate** (+-1 across the whole cross table, the paper's
-alternating-colours cap) plus statistical per pairing (role alternation
-decorrelates a pairing from any fixed admission cell) — weaker than the
-strict per-pairing +-1 the per-pair pools enforce; tournaments where
-per-pairing colour parity matters more than throughput can pass
-``multiplex=False`` (colour-targeted admission is a ROADMAP follow-up).
-Results come back origin-tagged (ticket -> pairing), and the cross table
-accumulates a win matrix, per-config points, and Bradley–Terry Elo
-ratings.
+holds one game of every pairing).  Colour is **targeted**, not left to
+the admission cell: each game carries a forced ``a_black`` demand
+(``SearchService.submit_game(a_black=...)``), chosen so that (a) within
+every pairing the Black owner alternates wave to wave — the strict
+per-pairing +-1 balance the per-pair pools always had, which the PR 4
+multiplexed path had weakened to an aggregate cap — and (b) the A-side
+colour alternates with the global submission index, so the pool-wide
+colour cap (+-1 aggregate, the paper's alternating-colours rule) still
+holds and forced demands can never deadlock against it.  The dispatch
+side (A or B) of each config follows from those two choices instead of
+a fixed per-wave role; over a pairing's games each config still sees
+both sides.  Results come back origin-tagged (ticket -> pairing), and
+the cross table accumulates a win matrix, per-config points, and
+Bradley–Terry Elo ratings (:func:`elo_estimate` adds the
+covariance/CI the league schedules on — core/league.py).
 
 Configs that differ in *static* search shape (``lanes``, ``max_nodes``,
 ``parallelism``, board) cannot share a compiled search; those tournaments
@@ -38,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Dict, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
@@ -66,15 +70,45 @@ def trace_compatible(configs: Sequence[MCTSConfig]) -> bool:
     return all(dataclasses.replace(c, **strip) == base for c in configs[1:])
 
 
-def elo_ratings(score: np.ndarray, games: np.ndarray,
-                iters: int = 200) -> np.ndarray:
-    """Bradley–Terry Elo fit of a cross table (deterministic, no RNG).
+# Elo points per unit of Bradley-Terry log-strength: elo = _ELO_SCALE * beta.
+_ELO_SCALE = 400.0 / math.log(10.0)
 
-    ``score[i, j]`` is i's points against j (1 per win, 0.5 per draw) and
-    ``games[i, j]`` the games they played.  Each played pairing gets one
-    virtual draw so perfect scores stay finite; ratings are centred on a
-    mean of 0 Elo.
+
+class EloEstimate(NamedTuple):
+    """Bradley–Terry ratings with their uncertainty (league scheduling).
+
+    ``cov`` is the (pseudo-inverse) Fisher-information covariance of the
+    mean-centred ratings in Elo² units; ``ci`` the per-config half-width
+    ``z * sqrt(diag(cov))``.  The quantity the league schedules on is
+    :meth:`separation`: a pairing is *separated* once the rating gap
+    exceeds ``z`` standard errors of the *difference* (which uses the
+    off-diagonal covariance — two configs estimated from the same games
+    are correlated, so per-config CI overlap alone over-schedules).
     """
+    elo: np.ndarray       # f64[P] ratings, mean 0
+    cov: np.ndarray       # f64[P,P] covariance of the ratings (Elo^2)
+    ci: np.ndarray        # f64[P] z * standard error per rating
+    z: float              # confidence multiplier the CIs were built at
+
+    def separation(self, i: int, j: int) -> float:
+        """Rating gap of (i, j) in standard errors of the difference."""
+        gap = abs(self.elo[i] - self.elo[j])
+        se = math.sqrt(max(self.cov[i, i] + self.cov[j, j]
+                           - 2.0 * self.cov[i, j], 0.0))
+        if se == 0.0:
+            # zero variance with zero gap is *no evidence* (an empty
+            # cross table), not a resolved pairing
+            return math.inf if gap > 0.0 else 0.0
+        return gap / se
+
+    def separated(self, i: int, j: int) -> bool:
+        """True when pairing (i, j) is resolved at this confidence."""
+        return self.separation(i, j) > self.z
+
+
+def _bt_fit(score: np.ndarray, games: np.ndarray,
+            iters: int) -> tuple:
+    """Regularised Bradley–Terry MM fit -> (strengths, s, n, played)."""
     P = score.shape[0]
     played = (games > 0) & ~np.eye(P, dtype=bool)
     s = np.where(played, score + 0.5, 0.0)
@@ -84,8 +118,51 @@ def elo_ratings(score: np.ndarray, games: np.ndarray,
         denom = (n / (w[:, None] + w[None, :] + 1e-30)).sum(axis=1)
         w = np.where(denom > 0, s.sum(axis=1) / np.maximum(denom, 1e-30), w)
         w = w / np.exp(np.mean(np.log(np.maximum(w, 1e-30))))
-    elo = 400.0 * np.log10(np.maximum(w, 1e-30))
+    return w, s, n, played
+
+
+def elo_ratings(score: np.ndarray, games: np.ndarray,
+                iters: int = 200) -> np.ndarray:
+    """Bradley–Terry Elo fit of a cross table (deterministic, no RNG).
+
+    ``score[i, j]`` is i's points against j (1 per win, 0.5 per draw) and
+    ``games[i, j]`` the games they played.  Each played pairing gets one
+    virtual draw so perfect scores stay finite; ratings are centred on a
+    mean of 0 Elo.  :func:`elo_estimate` returns the same ratings with
+    their covariance/CI — the league's scheduling signal.
+    """
+    w, _, _, _ = _bt_fit(score, games, iters)
+    elo = _ELO_SCALE * np.log(np.maximum(w, 1e-30))
     return elo - elo.mean()
+
+
+def elo_estimate(score: np.ndarray, games: np.ndarray,
+                 iters: int = 200, z: float = stats.Z95) -> EloEstimate:
+    """:func:`elo_ratings` plus a covariance / confidence-interval estimate.
+
+    The covariance is the Moore–Penrose pseudo-inverse of the observed
+    Fisher information of the Bradley–Terry log-strengths, evaluated at
+    the (virtual-draw regularised) MM fit and projected onto the
+    mean-zero constraint the ratings are reported under:
+    ``I[i, j] = -n_ij p_ij p_ji`` off-diagonal, row sums on the diagonal,
+    with ``p_ij = w_i / (w_i + w_j)``.  An unplayed config has no
+    information; its variance comes out of the pseudo-inverse as the
+    largest finite value the centring allows, so its CI dominates and the
+    league schedules it first.  Scaled to Elo via ``400 / ln 10``.
+    """
+    w, _, n, _ = _bt_fit(score, games, iters)
+    ws = np.maximum(w, 1e-30)
+    p = ws[:, None] / (ws[:, None] + ws[None, :])
+    info = -n * p * p.T
+    np.fill_diagonal(info, 0.0)
+    np.fill_diagonal(info, -info.sum(axis=1))
+    # pseudo-inverse: inverts information on the mean-zero subspace the
+    # centred ratings live in (the all-ones direction carries none)
+    cov = np.linalg.pinv(info, hermitian=True) * _ELO_SCALE ** 2
+    elo = _ELO_SCALE * np.log(ws)
+    elo = elo - elo.mean()
+    ci = z * np.sqrt(np.maximum(np.diag(cov), 0.0))
+    return EloEstimate(elo=elo, cov=cov, ci=ci, z=z)
 
 
 class PairResult(NamedTuple):
@@ -217,8 +294,12 @@ class Tournament:
         The shared players' static shape is ``configs[0]`` with the
         *maximum* playout budget (the compiled loop bound — smaller
         per-game budgets mask the tail); each game carries its pairing's
-        traced knobs.  Wave ``w`` submits one game per pairing with the
-        roles swapped on odd waves.
+        traced knobs.  Wave ``w`` submits one game per pairing; the
+        Black owner of pairing ``n`` alternates with ``w + n`` (strict
+        per-pairing +-1, staggered across pairings) and the forced
+        ``a_black`` flag alternates with the submission index (so the
+        aggregate colour cap is consumed exactly alternately and the
+        forced demands can never starve against it).
         """
         cfgs = self.configs
         shared = dataclasses.replace(
@@ -237,9 +318,13 @@ class Tournament:
         svc.reset(seed=self.seed, colour_cap=(total + 1) // 2,
                   game_capacity=total, ring_capacity=total + self.slots)
         meta: Dict[int, Tuple[int, int, int]] = {}  # ticket -> (i, j, a_side)
+        g = 0                                       # global submission index
         for wave in range(self.games_per_pair):
-            for (i, j) in pair_list:
-                a, b = (i, j) if wave % 2 == 0 else (j, i)
+            for n, (i, j) in enumerate(pair_list):
+                black = i if (wave + n) % 2 == 0 else j
+                a_black = g % 2 == 0
+                a = black if a_black else (j if black == i else i)
+                b = j if a == i else i
                 t = svc.submit_game(
                     lane=LANE_TOURNAMENT,
                     sims=(cfgs[a].sims_per_move, cfgs[b].sims_per_move),
@@ -247,8 +332,10 @@ class Tournament:
                     virtual_loss=(cfgs[a].virtual_loss,
                                   cfgs[b].virtual_loss),
                     prior_weight=(cfgs[a].prior_weight,
-                                  cfgs[b].prior_weight))
+                                  cfgs[b].prior_weight),
+                    a_black=a_black)
                 meta[t] = (i, j, a)
+                g += 1
         recs = svc.drain()
         self.host_syncs += svc.host_syncs
         out = {p: [0, 0, 0] for p in pair_list}

@@ -41,7 +41,7 @@ class PreemptionHandler:
             except ValueError:  # not main thread (tests)
                 pass
 
-    def _handler(self, signum, frame):
+    def _handler(self, _signum, _frame):
         self._flag.set()
 
     @property

@@ -1,0 +1,116 @@
+"""First unit tests for runtime/ft.py (fault-tolerance runtime).
+
+The league (core/league.py) is the first consumer of
+``PreemptionHandler``; these tests pin the rest of the module's
+contracts so later consumers (multi-host training, straggler-driven
+restarts) inherit tested behaviour:
+
+* ``Heartbeat.beat`` is an atomic write-then-rename — no ``.tmp``
+  residue, and the beacon is always whole JSON;
+* ``StragglerMonitor`` skips torn/partial heartbeat files instead of
+  crashing, flags hosts by beacon age (``dead_hosts``) and by step time
+  against the fleet median (``stragglers``);
+* ``elastic_mesh_for`` degenerate cases: fewer devices than the TP
+  degree (shrink TP to the largest power of two that fits), and
+  non-power-of-two survivor counts (floor the data axis).
+"""
+import json
+import os
+import signal
+
+from repro.runtime.ft import (Heartbeat, PreemptionHandler,
+                              StragglerMonitor, elastic_mesh_for)
+
+
+def write_beat(directory, host, ts, step_time_s=1.0, step=10):
+    with open(os.path.join(directory, f"heartbeat_{host}.json"), "w") as f:
+        json.dump({"host": host, "step": step,
+                   "step_time_s": step_time_s, "ts": ts}, f)
+
+
+class TestPreemptionHandler:
+    def test_trigger_sets_flag(self):
+        h = PreemptionHandler(signals=())
+        assert not h.should_stop
+        h.trigger()
+        assert h.should_stop
+
+    def test_signal_flips_flag_and_restore(self):
+        h = PreemptionHandler(signals=(signal.SIGUSR1,))
+        try:
+            assert not h.should_stop
+            os.kill(os.getpid(), signal.SIGUSR1)
+            assert h.should_stop
+        finally:
+            h.restore()
+
+    def test_no_signals_leaves_handlers_alone(self):
+        before = signal.getsignal(signal.SIGTERM)
+        PreemptionHandler(signals=())
+        assert signal.getsignal(signal.SIGTERM) is before
+
+
+class TestHeartbeat:
+    def test_beat_writes_whole_json(self, tmp_path):
+        hb = Heartbeat(str(tmp_path), host_id=3)
+        hb.beat(step=42, step_time_s=0.5)
+        payload = json.load(open(hb.path))
+        assert payload["host"] == 3 and payload["step"] == 42
+        assert payload["step_time_s"] == 0.5 and "ts" in payload
+
+    def test_beat_atomic_replace_leaves_no_tmp(self, tmp_path):
+        hb = Heartbeat(str(tmp_path), host_id=0)
+        for step in range(3):
+            hb.beat(step=step, step_time_s=1.0)
+        assert sorted(os.listdir(tmp_path)) == ["heartbeat_0.json"]
+        assert json.load(open(hb.path))["step"] == 2
+
+
+class TestStragglerMonitor:
+    def test_dead_hosts_by_beacon_age(self, tmp_path):
+        mon = StragglerMonitor(str(tmp_path), dead_after_s=60.0)
+        now = 1000.0
+        write_beat(tmp_path, 0, ts=now - 10)         # alive
+        write_beat(tmp_path, 1, ts=now - 120)        # dead
+        write_beat(tmp_path, 2, ts=now - 61)         # just dead
+        assert mon.dead_hosts(now=now) == [1, 2]
+
+    def test_torn_heartbeat_skipped(self, tmp_path):
+        mon = StragglerMonitor(str(tmp_path), dead_after_s=60.0)
+        now = 1000.0
+        write_beat(tmp_path, 0, ts=now - 120)
+        with open(os.path.join(tmp_path, "heartbeat_1.json"), "w") as f:
+            f.write('{"host": 1, "step_t')         # torn mid-write
+        assert [b["host"] for b in mon.read()] == [0]
+        assert mon.dead_hosts(now=now) == [0]        # torn != crash
+
+    def test_stragglers_vs_fleet_median(self, tmp_path):
+        mon = StragglerMonitor(str(tmp_path), straggler_factor=2.0)
+        now = 1000.0
+        for host, t in enumerate([1.0, 1.1, 0.9, 5.0]):
+            write_beat(tmp_path, host, ts=now, step_time_s=t)
+        assert mon.stragglers() == [3]
+
+    def test_single_host_never_straggles(self, tmp_path):
+        mon = StragglerMonitor(str(tmp_path))
+        write_beat(tmp_path, 0, ts=1000.0, step_time_s=99.0)
+        assert mon.stragglers() == []
+
+    def test_missing_directory_is_empty(self, tmp_path):
+        mon = StragglerMonitor(str(tmp_path / "never_made"))
+        assert mon.read() == []
+        assert mon.dead_hosts() == []
+        assert mon.stragglers() == []
+
+
+class TestElasticMesh:
+    def test_survivors_keep_tp_degree(self):
+        assert elastic_mesh_for(16, 4) == (4, 4)
+        assert elastic_mesh_for(12, 4) == (3, 4)     # non-pow2 data axis
+
+    def test_fewer_devices_than_tp_shrinks_tp(self):
+        assert elastic_mesh_for(3, 8) == (1, 2)      # largest pow2 <= 3
+        assert elastic_mesh_for(1, 8) == (1, 1)
+
+    def test_floor_division_drops_stragglers(self):
+        assert elastic_mesh_for(7, 2) == (3, 2)      # 1 device idles

@@ -1,0 +1,172 @@
+"""Property suite for the Bradley–Terry rating layer (core/tournament.py).
+
+The league schedules on :func:`elo_estimate` — ratings with covariance —
+so these properties pin the statistics against relabelings and scalings
+that must not change the verdicts:
+
+* **permutation equivariance** — renaming the configs permutes the
+  ratings (and the covariance rows/columns) and nothing else;
+* **transpose anti-symmetry** — flipping every result (``score -> Tᵀ``)
+  negates the ratings;
+* **symmetric table** — a cross table where every pairing is tied rates
+  everyone equal (0 Elo, up to the mean-centring);
+* **CI monotonicity** — scaling every pairing's games by ``k`` at the
+  same win fractions shrinks every CI (more evidence, same fit), and
+  separation never drops;
+* **no-evidence floor** — an empty cross table separates nothing (the
+  scheduling loop's "play everything first" base case).
+
+Seeded sweeps always run; the hypothesis tier widens the same checks
+when the package is installed (mirrors tests/test_go_property.py).
+"""
+import numpy as np
+import pytest
+
+from repro.core.tournament import elo_estimate, elo_ratings
+
+try:                                    # property tier (CI installs .[test])
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    SETTINGS = dict(max_examples=25, deadline=None,
+                    suppress_health_check=list(hypothesis.HealthCheck))
+except ImportError:                     # seeded-sweep tier still runs
+    hypothesis = None
+
+
+def random_table(rng: np.random.Generator, players: int,
+                 max_games: int = 12, sparsity: float = 0.2):
+    """A valid (score, games) cross table: symmetric games, split points."""
+    score = np.zeros((players, players))
+    games = np.zeros((players, players))
+    for i in range(players):
+        for j in range(i + 1, players):
+            if rng.random() < sparsity:
+                continue
+            n = int(rng.integers(1, max_games + 1))
+            wins = int(rng.integers(0, n + 1))
+            draws = int(rng.integers(0, n - wins + 1))
+            score[i, j] = wins + 0.5 * draws
+            score[j, i] = n - score[i, j]
+            games[i, j] = games[j, i] = n
+    return score, games
+
+
+def assert_permutation_equivariant(score, games):
+    """elo(P S Pᵀ) == P elo(S) for a random relabeling P."""
+    P = score.shape[0]
+    perm = np.random.default_rng(0).permutation(P)
+    base = elo_ratings(score, games)
+    permuted = elo_ratings(score[np.ix_(perm, perm)],
+                           games[np.ix_(perm, perm)])
+    np.testing.assert_allclose(permuted, base[perm], atol=1e-6)
+    est, est_p = (elo_estimate(score, games),
+                  elo_estimate(score[np.ix_(perm, perm)],
+                               games[np.ix_(perm, perm)]))
+    np.testing.assert_allclose(est_p.elo, est.elo[perm], atol=1e-6)
+    np.testing.assert_allclose(est_p.cov, est.cov[np.ix_(perm, perm)],
+                               atol=1e-5)
+    np.testing.assert_allclose(est_p.ci, est.ci[perm], atol=1e-6)
+
+
+def assert_transpose_antisymmetric(score, games):
+    """Flipping every result negates the ratings."""
+    np.testing.assert_allclose(elo_ratings(score.T, games.T),
+                               -elo_ratings(score, games), atol=1e-5)
+
+
+def assert_ci_monotone(score, games, k: int = 4):
+    """k-fold evidence at the same win fractions: CIs shrink."""
+    a = elo_estimate(score, games)
+    b = elo_estimate(k * score, k * games)
+    played = games.sum(axis=1) > 0
+    assert (b.ci[played] <= a.ci[played] + 1e-9).all(), (a.ci, b.ci)
+    for i in range(score.shape[0]):
+        for j in range(i + 1, score.shape[0]):
+            if games[i, j] > 0:
+                assert (b.separation(i, j)
+                        >= a.separation(i, j) - 1e-9), (i, j)
+
+
+class TestSeededSweep:
+    """Deterministic random tables: the tier that always runs."""
+
+    @pytest.mark.parametrize("players", [2, 3, 5])
+    def test_permutation_equivariance(self, players):
+        rng = np.random.default_rng(players)
+        for _ in range(10):
+            assert_permutation_equivariant(*random_table(rng, players))
+
+    @pytest.mark.parametrize("players", [2, 3, 5])
+    def test_transpose_antisymmetry(self, players):
+        rng = np.random.default_rng(10 + players)
+        for _ in range(10):
+            assert_transpose_antisymmetric(*random_table(rng, players))
+
+    @pytest.mark.parametrize("players", [2, 3, 5])
+    def test_ci_shrinks_with_games(self, players):
+        rng = np.random.default_rng(20 + players)
+        for _ in range(10):
+            assert_ci_monotone(*random_table(rng, players))
+
+    def test_symmetric_table_rates_equal(self):
+        games = np.full((4, 4), 6.0)
+        np.fill_diagonal(games, 0.0)
+        score = games / 2.0                      # every pairing tied
+        np.testing.assert_allclose(elo_ratings(score, games),
+                                   np.zeros(4), atol=1e-6)
+        est = elo_estimate(score, games)
+        np.testing.assert_allclose(est.elo, np.zeros(4), atol=1e-6)
+        # tied-and-played pairings are *unresolved*: gap 0, finite se
+        assert not est.separated(0, 1)
+        assert est.ci.min() > 0
+
+    def test_empty_table_separates_nothing(self):
+        est = elo_estimate(np.zeros((3, 3)), np.zeros((3, 3)))
+        for i in range(3):
+            for j in range(i + 1, 3):
+                assert est.separation(i, j) == 0.0
+                assert not est.separated(i, j)
+
+    def test_decisive_pairing_separates(self):
+        # 12-0 between two players: a gap of many standard errors
+        score = np.array([[0.0, 12.0], [0.0, 0.0]])
+        games = np.array([[0.0, 12.0], [12.0, 0.0]])
+        est = elo_estimate(score, games)
+        assert est.elo[0] > est.elo[1]
+        assert est.separated(0, 1)
+
+    def test_ratings_are_mean_centred(self):
+        rng = np.random.default_rng(7)
+        for _ in range(5):
+            score, games = random_table(rng, 4, sparsity=0.0)
+            assert abs(elo_ratings(score, games).mean()) < 1e-9
+
+
+if hypothesis is not None:
+
+    @st.composite
+    def tables(draw, max_players: int = 5):
+        players = draw(st.integers(min_value=2, max_value=max_players))
+        seed = draw(st.integers(min_value=0, max_value=2 ** 31 - 1))
+        sparsity = draw(st.floats(min_value=0.0, max_value=0.5))
+        return random_table(np.random.default_rng(seed), players,
+                            sparsity=sparsity)
+
+    class TestHypothesis:
+        """Generative tier: same invariants, wider input space."""
+
+        @settings(**SETTINGS)
+        @given(tables())
+        def test_permutation_equivariance(self, table):
+            assert_permutation_equivariant(*table)
+
+        @settings(**SETTINGS)
+        @given(tables())
+        def test_transpose_antisymmetry(self, table):
+            assert_transpose_antisymmetric(*table)
+
+        @settings(**SETTINGS)
+        @given(tables(), st.integers(min_value=2, max_value=8))
+        def test_ci_shrinks_with_games(self, table, k):
+            assert_ci_monotone(*table, k=k)
