@@ -19,7 +19,19 @@ SLO contract end to end: **zero unshed losses** (every request answers
 bottom point, **explicit shedding** at the top (4x capacity) point, and
 bottom-point p99 under ``--p99-budget-ms``.
 
-    PYTHONPATH=src python benchmarks/bench_load.py --smoke
+``--buckets N`` (PR 10) adds the **multi-bucket cell**: skewed
+Zipf-distributed komi traffic over N buckets, driven head-to-head
+through the unified scheduler (one pool, one pump,
+``GoService(unified=True)``) and the per-bucket baseline (one pool +
+pipeline per komi, ``unified=False``) — same request stream, compiles
+excluded.  The cell reports sims/sec, host syncs per move, and the
+dispatch-trace count for each mode; the smoke gate requires the unified
+scheduler to compile exactly ONE dispatch across all buckets and to win
+>= 1.3x on sims/sec or >= 1.5x on host syncs.  This leg drives
+GoService directly (no HTTP) so the comparison measures scheduling, not
+socket parsing, and the sync counts stay deterministic.
+
+    PYTHONPATH=src python benchmarks/bench_load.py --smoke --buckets 4
     PYTHONPATH=src python benchmarks/bench_load.py \
         --requests 200 --rates 0.25,0.75,4.0 [--url http://host:port]
 """
@@ -152,6 +164,77 @@ async def calibrate(client, komis: list, slots: int,
             "warm_queries": n}
 
 
+def run_multi_bucket(args: argparse.Namespace) -> dict:
+    """The multi-bucket cell: unified scheduler vs per-bucket pools.
+
+    One skewed request stream (komi drawn Zipf over ``--buckets``
+    values, hot bucket first) is pushed through both scheduling modes
+    with identical seeds and budgets: submit as admission allows, poll
+    continuously, stop when every move answers.  Compiles are paid
+    before the clock starts (one warm query per komi), so the cell
+    measures steady-state scheduling cost — exactly where the
+    per-bucket path burns one pump + reconcile per komi per round while
+    the unified path spends one total.
+    """
+    from repro.serving.go_service import GoService, OverCapacityError
+
+    rng = np.random.default_rng(args.seed)
+    n2 = args.board * args.board
+    nb = int(args.buckets)
+    komis = [round(5.5 + 0.5 * i, 1) for i in range(nb)]
+    # Zipf-skewed traffic: bucket rank r carries weight (r+1)^-s
+    weights = np.array([(r + 1.0) ** -args.zipf_s for r in range(nb)])
+    weights /= weights.sum()
+    n = int(args.mb_requests)
+    picks = rng.choice(nb, size=n, p=weights)
+    boards = [_board(rng, n2) for _ in range(n)]
+
+    def drive(unified: bool) -> dict:
+        svc = GoService(board_size=args.board, komi=komis[0],
+                        max_sims=args.sims, lanes=args.lanes,
+                        slots=args.slots, seed=args.seed,
+                        pipeline_depth=args.pipeline_depth,
+                        queue_capacity=4 * args.slots * nb,
+                        admission_limit=2 * args.slots,
+                        unified=unified)
+        for k in komis:                  # pay every compile up front
+            svc.best_move(boards[0], komi=k)
+        syncs0 = svc.host_syncs
+        t0 = time.perf_counter()
+        i = done = 0
+        while done < n:
+            while i < n:
+                try:
+                    svc.submit(boards[i], komi=komis[picks[i]])
+                except OverCapacityError:
+                    break                # bucket full: poll, then retry
+                i += 1
+            for t in svc.poll():
+                svc.result(t, wait=False)
+                done += 1
+        wall = time.perf_counter() - t0
+        syncs = svc.host_syncs - syncs0
+        if unified:
+            traces = svc._buckets[komis[0]]._dispatch._cache_size()
+        else:
+            traces = sum(b._dispatch._cache_size()
+                         for b in svc._buckets.values())
+        return {"sims_per_sec": n * args.sims / wall, "wall_s": wall,
+                "host_syncs": syncs, "host_syncs_per_move": syncs / n,
+                "dispatch_traces": traces, "moves": n}
+
+    uni = drive(True)
+    per = drive(False)
+    return {
+        "buckets": nb, "komis": komis, "zipf_s": args.zipf_s,
+        "requests": n, "sims": args.sims,
+        "traffic_share": [float(w) for w in weights],
+        "unified": uni, "per_bucket": per,
+        "speedup_sims_per_sec": uni["sims_per_sec"] / per["sims_per_sec"],
+        "host_syncs_ratio": per["host_syncs"] / max(uni["host_syncs"], 1),
+    }
+
+
 def smoke_verdict(payload: dict, p99_budget_ms: float) -> list:
     """The CI load gate's assertions; returns failure messages."""
     fails = []
@@ -173,6 +256,19 @@ def smoke_verdict(payload: dict, p99_budget_ms: float) -> list:
     if p99 > p99_budget_ms:
         fails.append(f"bottom-point p99 {p99:.1f}ms over the "
                      f"{p99_budget_ms:.0f}ms budget")
+    mb = payload.get("multi_bucket")
+    if mb is not None:
+        if mb["unified"]["dispatch_traces"] != 1:
+            fails.append(
+                f"unified scheduler compiled "
+                f"{mb['unified']['dispatch_traces']} dispatch traces for "
+                f"{mb['buckets']} buckets; the traced-komi contract pins 1")
+        if (mb["speedup_sims_per_sec"] < 1.3
+                and mb["host_syncs_ratio"] < 1.5):
+            fails.append(
+                f"unified scheduler won neither axis vs per-bucket: "
+                f"{mb['speedup_sims_per_sec']:.2f}x sims/sec (< 1.3) and "
+                f"{mb['host_syncs_ratio']:.2f}x fewer host syncs (< 1.5)")
     return fails
 
 
@@ -259,6 +355,14 @@ def main() -> int:
                          "offered-load point must overflow it")
     ap.add_argument("--komis", default="6.0,7.5",
                     help="comma list; each value is one service bucket")
+    ap.add_argument("--buckets", type=int, default=0,
+                    help="run the multi-bucket cell over this many komi "
+                         "buckets (0 = skip): unified scheduler vs "
+                         "per-bucket pools under skewed Zipf traffic")
+    ap.add_argument("--zipf-s", type=float, default=1.2,
+                    help="multi-bucket traffic skew exponent")
+    ap.add_argument("--mb-requests", type=int, default=48,
+                    help="requests in the multi-bucket cell")
     ap.add_argument("--requests", type=int, default=150,
                     help="Poisson arrivals per offered-load point")
     ap.add_argument("--rates", default="0.25,0.75,4.0",
@@ -281,6 +385,19 @@ def main() -> int:
         args.requests = min(args.requests, 60)
 
     payload = asyncio.run(run(args))
+    if args.buckets > 0:
+        print(f"multi-bucket cell: {args.buckets} buckets x "
+              f"{args.mb_requests} requests (zipf {args.zipf_s}) ...",
+              flush=True)
+        mb = run_multi_bucket(args)
+        payload["multi_bucket"] = mb
+        print(f"  unified {mb['unified']['sims_per_sec']:.0f} sims/s "
+              f"({mb['unified']['host_syncs_per_move']:.1f} syncs/move, "
+              f"{mb['unified']['dispatch_traces']} trace) vs per-bucket "
+              f"{mb['per_bucket']['sims_per_sec']:.0f} sims/s "
+              f"({mb['per_bucket']['host_syncs_per_move']:.1f} syncs/move)"
+              f" -> {mb['speedup_sims_per_sec']:.2f}x throughput, "
+              f"{mb['host_syncs_ratio']:.2f}x fewer syncs", flush=True)
     with open(args.out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -62,12 +62,19 @@ METRICS = {
 }
 
 # gated serving-tier metrics over BENCH_load.json: client-observed latency
-# at the *bottom* (uncontended) offered-load point.  Lower is better — the
-# gate direction flips relative to the throughput metrics.
+# at the *bottom* (uncontended) offered-load point (lower is better — the
+# gate direction flips relative to the throughput metrics), plus the PR 10
+# multi-bucket cell: unified-scheduler throughput under skewed Zipf komi
+# traffic (fails downward) and its host syncs per move (a deterministic
+# count, not a wall time — fails upward: a scheduling change that pumps
+# per bucket again shows up here first).
 LOAD_METRICS = {
     "load.p50_ms": lambda d: _load_point(d, 0)["p50_ms"],
     "load.p99_ms": lambda d: _load_point(d, 0)["p99_ms"],
+    "load.multi_bucket_sims_per_sec": lambda d: d["multi_bucket"]["unified"]["sims_per_sec"],
+    "load.host_syncs_per_move": lambda d: d["multi_bucket"]["unified"]["host_syncs_per_move"],
 }
+
 
 def _sweep_default(d: dict) -> dict:
     """The batch-sweep cell at the default (gated) eval batch size."""
@@ -114,14 +121,31 @@ LEAGUE_METRICS = {
 
 
 def lower_is_better(name: str) -> bool:
-    """Gate direction by metric name: latencies/bytes/games fail upward."""
-    return (name.endswith("_ms") or name.endswith("_bytes_per_sim")
-            or name.endswith("_games"))
+    """Gate direction by metric name: latencies, bytes moved, games
+    burned, and host syncs per move all fail upward."""
+    return (
+        name.endswith("_ms")
+        or name.endswith("_bytes_per_sim")
+        or name.endswith("_games")
+        or name.endswith("_per_move")
+    )
 
 
 def extract(payload: dict, metrics: dict) -> dict:
-    """Pull one artifact's gated metric values."""
-    return {name: float(fn(payload)) for name, fn in metrics.items()}
+    """Pull one artifact's gated metric values.
+
+    A metric whose cell is absent from the artifact (an older schema, or
+    a run that skipped that leg — e.g. ``bench_load.py`` without
+    ``--buckets``) is simply not extracted; the gate then reports it as
+    ``skip`` instead of crashing, matching the omitted-artifact rule.
+    """
+    out = {}
+    for name, fn in metrics.items():
+        try:
+            out[name] = float(fn(payload))
+        except (KeyError, IndexError, TypeError):
+            pass
+    return out
 
 
 def check(current: dict, baseline: dict, tolerance: float) -> int:

@@ -61,10 +61,20 @@ class SearchParams(NamedTuple):
     path — except under an ``evaluator``, where it defaults to the
     config's ``prior_weight``.  ``w = 0`` rows are bit-identical to the
     static no-eval search (tests/test_evaluator.py pins this).
+
+    ``komi`` (PR 10) multiplexes scoring the same way: ``None`` keeps the
+    engine's static komi (the historical program, bit for bit); an
+    ``f32[G]`` array threads a traced per-game komi into every playout
+    outcome, so one compiled dispatch serves every komi bucket.  Like
+    ``prior_w``, presence selects the program (a pytree-structure
+    change); values never recompile, and an array equal to the engine
+    constant is value-bit-identical to ``None`` (half-integer komis are
+    exact in f32, and komi never touches the RNG stream).
     """
     c_uct: jax.Array           # f32[G] exploration constant
     vl_weight: jax.Array       # f32[G] virtual-loss weight in the Q term
     prior_w: Optional[jax.Array] = None  # f32[G] eval-lane prior blend
+    komi: Optional[jax.Array] = None     # f32[G] traced per-game komi
 
 
 class MCTS:
@@ -280,13 +290,21 @@ class MCTS:
         # batched playouts: [L, P]
         pkeys = jax.random.split(keys[L], L * P).reshape(L, P, 2)
         leaf_states = jax.tree.map(lambda x: x[leaves], t.states)
+        komi = None if params is None else params.komi
         if self.value_fn is not None:
             vals = jax.vmap(self.value_fn)(leaf_states)          # [L]
             vals = jnp.repeat(vals[:, None], P, axis=1)
-        else:
+        elif komi is None:
             vals = jax.vmap(
                 lambda st, ks: jax.vmap(
                     lambda k: self.engine.playout_value(st, k))(ks)
+            )(leaf_states, pkeys)                                 # [L, P]
+        else:
+            # traced per-search komi (a scalar here: search_batch's vmap
+            # peeled the game axis); broadcasts over every lane/playout
+            vals = jax.vmap(
+                lambda st, ks: jax.vmap(
+                    lambda k: self.engine.playout_value(st, k, komi))(ks)
             )(leaf_states, pkeys)                                 # [L, P]
         val_sum = vals.sum(axis=1)                                # black persp.
 
@@ -427,7 +445,9 @@ class MCTS:
         params = SearchParams(jnp.asarray(params.c_uct, jnp.float32),
                               jnp.asarray(params.vl_weight, jnp.float32),
                               None if params.prior_w is None
-                              else jnp.asarray(params.prior_w, jnp.float32))
+                              else jnp.asarray(params.prior_w, jnp.float32),
+                              None if params.komi is None
+                              else jnp.asarray(params.komi, jnp.float32))
         if self.fused:
             return self._search_fused_batch(roots, rngs, sims, params)
         if sims is None:
@@ -498,7 +518,7 @@ class MCTS:
         paths = paths.at[gi, li, depth + ext].set(leaves)
         return t, paths, leaves
 
-    def _simulate_fused(self, t: Tree, keys, c, vlw, pw) -> Tree:
+    def _simulate_fused(self, t: Tree, keys, c, vlw, pw, komi=None) -> Tree:
         """One fused iteration over every game: kernel select -> batched
         expansion -> playouts/eval -> kernel backup.
 
@@ -536,10 +556,19 @@ class MCTS:
         if self.value_fn is not None:
             vals = jax.vmap(jax.vmap(self.value_fn))(leaf_states)  # [G, L]
             val_sum = vals * p
-        else:
+        elif komi is None:
             one = lambda st, ks: jax.vmap(                         # noqa: E731
                 lambda k: self.engine.playout_value(st, k))(ks)
             vals = jax.vmap(jax.vmap(one))(leaf_states, pkeys)     # [G, L, P]
+            val_sum = vals.sum(axis=-1)
+        else:
+            km = jnp.broadcast_to(jnp.asarray(komi, jnp.float32), (g,))
+            one = lambda st, ks, kv: jax.vmap(                     # noqa: E731
+                lambda k: self.engine.playout_value(st, k, kv))(ks)
+            vals = jax.vmap(
+                lambda ls, pk, kv: jax.vmap(
+                    lambda st, ks: one(st, ks, kv))(ls, pk)
+            )(leaf_states, pkeys, km)                              # [G, L, P]
             val_sum = vals.sum(axis=-1)
 
         prior = t.prior
@@ -574,10 +603,11 @@ class MCTS:
         keys = jax.vmap(
             lambda k: jax.random.split(k, self.iterations))(rngs)  # [G, I, 2]
         c, vlw, pw = self._resolve_params(params)
+        komi = None if params is None else params.komi
         iters = None if sims is None else jax.vmap(self._iterations_for)(sims)
 
         def it(i, t):
-            t2 = self._simulate_fused(t, keys[:, i], c, vlw, pw)
+            t2 = self._simulate_fused(t, keys[:, i], c, vlw, pw, komi)
             if iters is None:
                 return t2
             live = (i < iters)[:, None]

@@ -70,6 +70,7 @@ def place(
     capacity: int,
     affine: Optional[int] = None,
     load: Optional[np.ndarray] = None,
+    allowed: Optional[np.ndarray] = None,
 ) -> Optional[int]:
     """Pure placement step: the shard that admits the next request.
 
@@ -81,7 +82,12 @@ def place(
     *estimate* used for load comparisons (in-flight minus landed results
     not yet polled; defaults to ``in_flight`` — the synchronous truth);
     the capacity gate always uses the raw ``in_flight`` so estimates can
-    never oversubscribe a device queue.  Returns ``None`` when every
+    never oversubscribe a device queue.  ``allowed`` is an optional
+    ``bool[n_shard]`` candidate mask (the unified multi-bucket
+    scheduler's per-bucket shard subset + borrowing rule, PR 10):
+    disallowed shards are treated as full, so every policy places only
+    within the mask; ``None`` allows every shard (the historical
+    behaviour, bit for bit).  Returns ``None`` when every (allowed)
     shard is full.
     """
     if policy not in POLICIES:
@@ -90,6 +96,8 @@ def place(
     if load is None:
         load = in_flight
     open_ = in_flight < capacity
+    if allowed is not None:
+        open_ = open_ & np.asarray(allowed, bool)
     if not open_.any():
         return None
     if policy == "round_robin":
@@ -138,22 +146,25 @@ class PlacementPolicy:
         """
         self.landed = np.maximum(np.asarray(landed, np.int64), 0)
 
-    def choose(self, cls: int, capacity: int, config_key=None) -> Optional[int]:
+    def choose(self, cls: int, capacity: int, config_key=None,
+               allowed: Optional[np.ndarray] = None) -> Optional[int]:
         """Admit one request of class ``cls``; returns its shard or None.
 
         ``config_key`` is any hashable signature of the request's traced
         search configuration (the SearchService passes the per-side
         ``(sims, c_uct, virtual_loss)`` tuple); only ``config_affine``
-        consults it.  Load comparisons run against the in-flight
-        *estimate* (in-flight minus landed); the capacity gate stays on
-        the raw count (see the module docstring).
+        consults it.  ``allowed`` restricts candidates to a shard subset
+        (``bool[n_shard]``; ``None`` = all — see :func:`place`).  Load
+        comparisons run against the in-flight *estimate* (in-flight
+        minus landed); the capacity gate stays on the raw count (see the
+        module docstring).
         """
         track = self.policy == "config_affine" and config_key is not None
         affine = self._affine.get(config_key) if track else None
         load = self.in_flight[cls] - np.minimum(self.landed[cls],
                                                 self.in_flight[cls])
         s = place(self.policy, self._cursor[cls], self.in_flight[cls],
-                  capacity, affine, load=load)
+                  capacity, affine, load=load, allowed=allowed)
         if s is None:
             return None
         self.in_flight[cls, s] += 1

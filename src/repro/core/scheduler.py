@@ -1,0 +1,330 @@
+"""Unified multi-bucket scheduler: one mesh, one pump, adaptive depth.
+
+The per-komi ``GoService`` buckets of PR 6-9 re-created the Xeon Phi
+papers' scheduling pathology in miniature: K komi buckets meant K slot
+pools, K compiled dispatches, and K serialized host pump loops — cold
+buckets held idle device slots while hot ones shed.  PR 10 collapses
+them: the dispatch's per-slot **traced komi column**
+(:class:`~repro.core.service.SearchRequest`) lets one compiled program
+score every bucket, so all buckets can share one mesh-wide
+:class:`~repro.core.service.SearchService` pool — and this module owns
+the single pump/reconcile stream over it.
+
+:class:`BucketScheduler` wraps exactly one
+:class:`~repro.core.streaming.DispatchPipeline` (several pipelines over
+one service would race the ring cursor) and adds:
+
+* **bucket registry** — komi -> bucket, registered on first submission.
+  Under a mesh, shards are partitioned round-robin over the registered
+  buckets (bucket ``b`` of ``B`` owns shards ``s`` with ``s % B == b``);
+  the partition is re-derived when a bucket registers, which is safe
+  because it is pure host-side placement (the serve RNG contract makes
+  answers placement-independent).
+* **headroom borrowing** — a bucket's placement mask is its own
+  partition **plus the partitions of currently idle buckets** (zero
+  outstanding requests).  An idle bucket lends its shards; the moment it
+  submits again it stops being idle, so *new* placements reclaim its
+  shards on demand while borrowed work already in flight drains
+  naturally.  ``borrowing=False`` pins every bucket strictly inside its
+  partition (the bit-identity test configuration).
+* **adaptive pipeline depth** — a :class:`DepthController` raises or
+  lowers the in-flight superstep window from observed reconcile blocking
+  and the landed-estimate lag (``SearchService.peek_landed``), clamped
+  to a static ``max_depth`` so depth changes never create a new trace
+  (depth is host read timing, never a compiled shape).
+
+With one bucket, ``borrowing`` irrelevant, and a fixed depth, the
+scheduler's pump/reconcile is *exactly* one pipeline's — results and
+``host_syncs`` bit-identical to the per-bucket path (pinned in
+tests/test_scheduler.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.placement import CLS_GAME, CLS_SERVE
+from repro.core.streaming import DispatchPipeline
+
+
+class DepthController:
+    """Raise/lower a pipeline's in-flight window from observed timing.
+
+    The control signal is the host's **blocking wait** at each reconcile
+    (how long the oldest superstep's ring took to land after the host
+    asked) plus the **landed lag** (results finished on device but not
+    yet polled, from the placement policy's landed estimate):
+
+    * wait ~ 0 with landed results backing up means the device runs
+      ahead of the host — a deeper window keeps it fed, so raise;
+    * wait above ``hi_wait_s`` means the device is the bottleneck and
+      extra in-flight supersteps only add queueing latency, so lower;
+    * anything between is the deadband: hold.
+
+    A move needs ``patience`` *consecutive* same-direction signals, and
+    the wait is EWMA-smoothed — together the hysteresis that makes the
+    depth converge on a steady workload instead of oscillating
+    (tests/test_scheduler.py pins clamp + convergence).  The clamp
+    ``[min_depth, max_depth]`` is static: the controller only changes
+    when the host reads, never what the device runs, so no depth value
+    can create a new jit trace.
+    """
+
+    def __init__(self, min_depth: int = 1, max_depth: int = 4,
+                 lo_wait_s: float = 2e-4, hi_wait_s: float = 2e-2,
+                 ewma: float = 0.3, patience: int = 2):
+        if not 1 <= min_depth <= max_depth:
+            raise ValueError(
+                f"need 1 <= min_depth <= max_depth, got "
+                f"[{min_depth}, {max_depth}]")
+        if not 0.0 <= lo_wait_s < hi_wait_s:
+            raise ValueError(
+                f"need 0 <= lo_wait_s < hi_wait_s, got "
+                f"[{lo_wait_s}, {hi_wait_s}]")
+        self.min_depth = int(min_depth)
+        self.max_depth = int(max_depth)
+        self.lo_wait_s = float(lo_wait_s)
+        self.hi_wait_s = float(hi_wait_s)
+        self.ewma = float(ewma)
+        self.patience = max(1, int(patience))
+        self.wait_ewma_s = 0.0
+        self.adjustments = 0          # depth changes applied (telemetry)
+        self._streak = 0              # signed run of one-direction signals
+
+    def observe(self, depth: int, blocked_s: float, landed_lag: int) -> int:
+        """One reconcile's evidence; returns the (possibly new) depth."""
+        self.wait_ewma_s += self.ewma * (blocked_s - self.wait_ewma_s)
+        if self.wait_ewma_s < self.lo_wait_s and landed_lag > 0:
+            want = 1                                # device ahead: deepen
+        elif self.wait_ewma_s > self.hi_wait_s:
+            want = -1                               # device behind: shrink
+        else:
+            want = 0                                # deadband: hold
+        if want == 0 or (self._streak != 0
+                         and (want > 0) != (self._streak > 0)):
+            self._streak = want
+            return depth
+        self._streak += want
+        if abs(self._streak) < self.patience:
+            return depth
+        self._streak = 0
+        new = int(np.clip(depth + want, self.min_depth, self.max_depth))
+        if new != depth:
+            self.adjustments += 1
+        return new
+
+
+class _Bucket:
+    """Host bookkeeping for one komi bucket inside the shared pool."""
+
+    __slots__ = ("komi", "index", "outstanding", "submitted", "completed")
+
+    def __init__(self, komi: float, index: int):
+        self.komi = komi
+        self.index = index            # registration order (partition key)
+        self.outstanding = 0
+        self.submitted = 0
+        self.completed = 0
+
+
+class BucketScheduler:
+    """One pump/reconcile stream serving every komi bucket of one pool.
+
+    Replaces ``GoService._pipes`` (one pipeline per bucket) with a
+    single :class:`DispatchPipeline` over the shared service — host
+    blocked time per move no longer scales with bucket count.  The
+    scheduler installs itself as the service's ``_shard_filter`` so
+    placement enforces the per-bucket shard partitions (with borrowing)
+    at submission time; it never touches the device program.
+
+    ``depth`` fixes the initial window; ``adaptive=True`` lets a
+    :class:`DepthController` move it inside ``[1, max_depth]``
+    (``max_depth`` defaults to ``depth``).  ``steps`` is the superstep
+    length, as for the pipeline.
+    """
+
+    def __init__(self, service, depth: Optional[int] = None,
+                 steps: Optional[int] = None, adaptive: bool = False,
+                 max_depth: Optional[int] = None, borrowing: bool = True):
+        self.service = service
+        self.pipe = DispatchPipeline(service, depth=depth, steps=steps)
+        self.borrowing = bool(borrowing)
+        self.max_depth = int(max_depth if max_depth is not None
+                             else self.pipe.depth)
+        if self.max_depth < self.pipe.depth:
+            raise ValueError(
+                f"max_depth {self.max_depth} < initial depth "
+                f"{self.pipe.depth}")
+        self.controller = (DepthController(max_depth=self.max_depth)
+                           if adaptive else None)
+        self._buckets: Dict[float, _Bucket] = {}
+        self._ticket_bucket: Dict[int, float] = {}   # inner ticket -> komi
+        service._shard_filter = self._allowed
+
+    # ------------------------------------------------------------- registry
+
+    def bucket(self, komi: float) -> _Bucket:
+        """Get-or-register the bucket for ``komi`` (registration order
+        fixes its shard partition slot)."""
+        komi = float(komi)
+        b = self._buckets.get(komi)
+        if b is None:
+            b = _Bucket(komi, len(self._buckets))
+            self._buckets[komi] = b
+        return b
+
+    @property
+    def buckets(self) -> Dict[float, _Bucket]:
+        return self._buckets
+
+    def _partition(self, index: int) -> np.ndarray:
+        """Shard ownership mask of the bucket at registration ``index``.
+
+        Round-robin over registered buckets: with ``B`` buckets and
+        ``n`` shards, bucket ``b`` owns shards ``s % B == b``.  With
+        more buckets than shards the partitions overlap (shard
+        ``b % n``), so every bucket always owns at least one shard.
+        """
+        n = self.service.n_shard
+        nb = max(1, len(self._buckets))
+        mask = (np.arange(n) % nb) == (index % nb)
+        if not mask.any():                     # more buckets than shards
+            mask = np.zeros(n, bool)
+            mask[index % n] = True
+        return mask
+
+    def _allowed(self, komi: float, cls: int) -> Optional[np.ndarray]:
+        """The service's placement mask hook for one submission.
+
+        Own partition, plus — when borrowing — the partitions of every
+        currently idle bucket.  Unregistered komis (the engine default
+        reaching a game lane, say) see every shard.
+        """
+        del cls
+        b = self._buckets.get(float(komi))
+        if b is None or self.service.n_shard == 1:
+            return None
+        mask = self._partition(b.index)
+        if self.borrowing:
+            for other in self._buckets.values():
+                if other is not b and other.outstanding == 0:
+                    mask = mask | self._partition(other.index)
+        return mask
+
+    # ----------------------------------------------------------- submission
+
+    def submit_serve(self, komi: float, state, **kw) -> int:
+        """Submit one serve query into ``komi``'s bucket; returns the
+        service ticket.  All keyword arguments flow to
+        ``SearchService.submit_serve`` (key, sims, knobs, deadline)."""
+        b = self.bucket(komi)
+        ticket = self.service.submit_serve(state, komi=b.komi, **kw)
+        self._note_submitted(b, ticket)
+        return ticket
+
+    def submit_game(self, komi: float, **kw) -> int:
+        """Submit one full game scored at ``komi``; returns the ticket."""
+        b = self.bucket(komi)
+        ticket = self.service.submit_game(komi=b.komi, **kw)
+        self._note_submitted(b, ticket)
+        return ticket
+
+    def _note_submitted(self, b: _Bucket, ticket: int) -> None:
+        b.submitted += 1
+        b.outstanding += 1
+        self._ticket_bucket[ticket] = b.komi
+
+    def _retire(self, ticket: int) -> None:
+        komi = self._ticket_bucket.pop(ticket, None)
+        if komi is not None:
+            b = self._buckets[komi]
+            b.completed += 1
+            b.outstanding -= 1
+
+    def shed_expired(self, now: Optional[float] = None) -> List[int]:
+        """Shed expired host-pending queries (see the service method);
+        keeps the per-bucket outstanding counts honest."""
+        shed = self.service.shed_expired(now)
+        for t in shed:
+            self._retire(t)
+        return shed
+
+    # ------------------------------------------------------ pump/reconcile
+
+    @property
+    def depth(self) -> int:
+        """Current in-flight window bound (mutable host attribute)."""
+        return self.pipe.depth
+
+    @property
+    def in_flight_supersteps(self) -> int:
+        return self.pipe.in_flight_supersteps
+
+    def pump(self) -> int:
+        """Flush and top the single window up to the current depth."""
+        return self.pipe.pump()
+
+    def reconcile(self, block: bool = True) -> List:
+        """Retire the oldest superstep across *all* buckets at once.
+
+        Feeds the adaptive controller: the reconcile's blocking wait
+        (measured via the service's ``host_blocked_s`` delta) and the
+        landed lag (device-completed results not yet polled) move the
+        depth inside its clamp.
+        """
+        svc = self.service
+        before = svc.host_blocked_s
+        out = self.pipe.reconcile(block=block)
+        for rec in out:
+            self._retire(rec.ticket)
+        if self.controller is not None:
+            lag = int(svc._placement.landed.sum())
+            self.pipe.depth = self.controller.observe(
+                self.pipe.depth, svc.host_blocked_s - before, lag)
+        return out
+
+    def run_until_drained(self, max_steps: Optional[int] = None) -> List:
+        """Pump + reconcile until every submission completes."""
+        out = self.pipe.run_until_drained(max_steps)
+        for rec in out:
+            self._retire(rec.ticket)
+        return out
+
+    # ----------------------------------------------------------- telemetry
+
+    def bucket_stats(self) -> Dict[float, dict]:
+        """Per-bucket occupancy/queue/flow counters for ``/metrics``.
+
+        ``queue_depth`` is the bucket's outstanding request count (host
+        pending + device queued/active + landed-unpolled);
+        ``shards_owned`` the size of its current partition.  The
+        in-flight superstep count is pool-global (one pipeline) and
+        lives in :meth:`stats`.
+        """
+        out = {}
+        for komi, b in sorted(self._buckets.items()):
+            out[komi] = {
+                "queue_depth": b.outstanding,
+                "submitted": b.submitted,
+                "completed": b.completed,
+                "shards_owned": int(self._partition(b.index).sum()),
+            }
+        return out
+
+    def stats(self) -> dict:
+        """Scheduler-level counters (pipeline stats + depth control)."""
+        s = self.pipe.stats()
+        s["buckets"] = len(self._buckets)
+        s["borrowing"] = self.borrowing
+        s["max_depth"] = self.max_depth
+        if self.controller is not None:
+            s["adaptive"] = True
+            s["wait_ewma_s"] = self.controller.wait_ewma_s
+            s["depth_adjustments"] = self.controller.adjustments
+        else:
+            s["adaptive"] = False
+        return s
+
+
+__all__ = ["BucketScheduler", "DepthController", "CLS_GAME", "CLS_SERVE"]

@@ -118,6 +118,12 @@ class SearchRequest(NamedTuple):
     the evaluation-lane blend weight; it only takes effect on sides
     whose player carries an evaluator (elsewhere that side's scoring
     keeps the static no-eval program).
+
+    ``komi`` (PR 10) is the request's *scoring* komi — one traced f32
+    per request (both sides score the same game), defaulting to the
+    engine's static value.  It feeds every playout outcome and the
+    game-lane winner, so one compiled dispatch serves every komi bucket
+    (the unified multi-bucket scheduler contract, core/scheduler.py).
     """
     state: GoState        # root position (games start from the empty board)
     key: jax.Array        # u32[2] request RNG key
@@ -126,6 +132,7 @@ class SearchRequest(NamedTuple):
     c_uct: jax.Array      # f32[2] UCT exploration constant per side
     vl: jax.Array         # f32[2] virtual-loss weight per side
     pw: jax.Array         # f32[2] eval-lane prior blend weight per side
+    komi: jax.Array       # f32 scoring komi (traced; engine default)
     colour: jax.Array     # i32 forced colour: 1 A=Black, 0 A=White, -1 free
     ticket: jax.Array     # i32 service-assigned id
 
@@ -170,6 +177,7 @@ class _Pending(NamedTuple):
     c_uct: tuple          # (A-side, B-side) exploration constants
     vl: tuple             # (A-side, B-side) virtual-loss weights
     pw: tuple             # (A-side, B-side) eval-lane prior blend weights
+    komi: float           # scoring komi (engine default unless overridden)
     ticket: int
     shard: int
     deadline: Optional[float] = None
@@ -187,6 +195,7 @@ class _Slots(NamedTuple):
     c_uct: jax.Array      # f32[S,2] per-request c_uct per side (traced)
     vl: jax.Array         # f32[S,2] per-request vl weight per side (traced)
     pw: jax.Array         # f32[S,2] per-request prior blend per side (traced)
+    komi: jax.Array       # f32[S] per-request scoring komi (traced)
     a_black: jax.Array    # bool[S] player A owns Black (game lanes)
 
 
@@ -199,6 +208,7 @@ class _Queue(NamedTuple):
     c_uct: jax.Array      # f32[Q,2]
     vl: jax.Array         # f32[Q,2]
     pw: jax.Array         # f32[Q,2]
+    komi: jax.Array       # f32[Q]
     colour: jax.Array     # i32[Q] forced colour demand (-1 = free)
     ticket: jax.Array     # i32[Q]
     size: jax.Array       # i32: total ever enqueued
@@ -301,6 +311,7 @@ def _queue_push(q: _Queue, req: SearchRequest, n: jax.Array) -> _Queue:
         c_uct=put(q.c_uct, req.c_uct),
         vl=put(q.vl, req.vl),
         pw=put(q.pw, req.pw),
+        komi=put(q.komi, req.komi),
         colour=put(q.colour, req.colour),
         ticket=put(q.ticket, req.ticket),
         size=q.size + n,
@@ -400,6 +411,10 @@ class SearchService:
         else:
             self._hops = []
         PlacementPolicy(placement, n_shard)      # validate the policy name
+        # unified-scheduler hook (core/scheduler.py): maps a request's
+        # (komi, class) to the bool[n_shard] shard mask its bucket may
+        # occupy; None = every shard (the historical behaviour)
+        self._shard_filter = None
         self._chunk = slots               # flush granularity
         self._init_state = engine.init_state()
         self._dispatch = donate_jit(self._dispatch_impl,
@@ -499,6 +514,7 @@ class SearchService:
             c_uct=jnp.broadcast_to(jnp.asarray(cfg_cu, jnp.float32), (S, 2)),
             vl=jnp.broadcast_to(jnp.asarray(cfg_vl, jnp.float32), (S, 2)),
             pw=jnp.broadcast_to(jnp.asarray(cfg_pw, jnp.float32), (S, 2)),
+            komi=jnp.full((S,), self.engine.komi, jnp.float32),
             a_black=jnp.arange(S) < S // 2,
         )
 
@@ -511,6 +527,7 @@ class SearchService:
                 c_uct=jnp.zeros((n, 2), jnp.float32),
                 vl=jnp.zeros((n, 2), jnp.float32),
                 pw=jnp.zeros((n, 2), jnp.float32),
+                komi=jnp.full((n,), self.engine.komi, jnp.float32),
                 colour=jnp.full((n,), -1, jnp.int32),
                 ticket=jnp.full((n,), -1, jnp.int32),
                 size=jnp.int32(0),
@@ -539,6 +556,18 @@ class SearchService:
             eval_sum=jnp.int32(0), hop_idx=jnp.int32(0))
 
     # ------------------------------------------------------------ submission
+
+    def _allowed_shards(self, komi: float, cls: int):
+        """Shard-subset mask for one submission (``None`` = every shard).
+
+        The :class:`~repro.core.scheduler.BucketScheduler` installs
+        ``_shard_filter`` to enforce per-bucket partitions with headroom
+        borrowing; unset, placement sees all shards — bit-identical to
+        the pre-bucket service.
+        """
+        if self._shard_filter is None:
+            return None
+        return self._shard_filter(komi, cls)
 
     def _draw_key(self, key) -> np.ndarray:
         if key is None:
@@ -573,7 +602,7 @@ class SearchService:
 
     def submit_game(self, key=None, lane: int = LANE_ARENA, sims=0,
                     c_uct=None, virtual_loss=None,
-                    prior_weight=None, a_black=None) -> int:
+                    prior_weight=None, a_black=None, komi=None) -> int:
         """Queue one full self-play game (A vs B); returns its ticket.
 
         Colour is assigned at admission by the slot-pool cell, capped to
@@ -598,24 +627,28 @@ class SearchService:
         pre-traced path.  ``prior_weight`` is the evaluation-lane blend:
         it only affects sides whose player has an evaluator, and ``0``
         makes that side's search bit-identical to the unguided program.
+        ``komi`` overrides the engine's static komi for this game's
+        scoring (playout outcomes and the reported winner) — traced, so
+        mixed-komi games share the one compiled dispatch.
         """
         if lane not in GAME_LANES:
             raise ValueError(f"game lane must be one of {GAME_LANES}")
         colour = -1 if a_black is None else int(bool(a_black))
         return self._submit(self._pending_games, self._init_state,
                             key, lane, sims, c_uct, virtual_loss,
-                            prior_weight, colour=colour)
+                            prior_weight, colour=colour, komi=komi)
 
     def submit_serve(self, state: GoState, key=None, sims=0,
                      c_uct=None, virtual_loss=None, prior_weight=None,
-                     deadline: Optional[float] = None) -> int:
+                     deadline: Optional[float] = None, komi=None) -> int:
         """Queue one external best-move query for ``state``; returns its
         ticket.  The single search always runs under player A with the
         request key, so the result is a pure function of
-        ``(state, key, sims, c_uct, virtual_loss, prior_weight)`` —
-        placement- and batch-mate-independent.  ``c_uct`` /
-        ``virtual_loss`` / ``prior_weight`` are traced per-query
-        strength knobs defaulting to player A's config.
+        ``(state, key, sims, c_uct, virtual_loss, prior_weight, komi)``
+        — placement- and batch-mate-independent.  ``c_uct`` /
+        ``virtual_loss`` / ``prior_weight`` / ``komi`` are traced
+        per-query knobs defaulting to player A's config (komi: the
+        engine's).
 
         ``deadline`` (absolute ``time.monotonic`` seconds, ``None`` = no
         SLO) is host-only metadata consumed by :meth:`shed_expired`: a
@@ -625,11 +658,12 @@ class SearchService:
         """
         return self._submit(self._pending_serve, state, key,
                             LANE_SERVE, sims, c_uct, virtual_loss,
-                            prior_weight, deadline=deadline)
+                            prior_weight, deadline=deadline, komi=komi)
 
     def _submit(self, pending: List[_Pending], state: GoState, key,
                 lane: int, sims, c_uct, virtual_loss, prior_weight=None,
-                deadline: Optional[float] = None, colour: int = -1) -> int:
+                deadline: Optional[float] = None, colour: int = -1,
+                komi=None) -> int:
         cls = CLS_SERVE if lane == LANE_SERVE else CLS_GAME
         cap = (self.serve_capacity if cls == CLS_SERVE
                else self.game_capacity)
@@ -638,8 +672,10 @@ class SearchService:
         cu = self._pair(c_uct, cfg_cu, float)
         vl = self._pair(virtual_loss, cfg_vl, float)
         pw = self._pair(prior_weight, cfg_pw, float)
+        km = float(self.engine.komi if komi is None else komi)
         shard = self._placement.choose(cls, cap,
-                                       config_key=(sims, cu, vl, pw))
+                                       config_key=(sims, cu, vl, pw),
+                                       allowed=self._allowed_shards(km, cls))
         if shard is None:
             raise RuntimeError(
                 f"{LANE_NAMES[lane]} queue full ({cap} in flight per "
@@ -648,7 +684,7 @@ class SearchService:
         self._next_ticket += 1
         pending.append(_Pending(state=state, key=self._draw_key(key),
                                 lane=lane, sims=sims, c_uct=cu, vl=vl,
-                                pw=pw, ticket=ticket, shard=shard,
+                                pw=pw, komi=km, ticket=ticket, shard=shard,
                                 deadline=deadline, colour=colour))
         self._assigned[ticket] = (cls, shard)
         self._submitted[lane] += 1
@@ -691,6 +727,8 @@ class SearchService:
                            jnp.float32),
             pw=jnp.asarray([r.pw for r in rows] + [(0., 0.)] * pad,
                            jnp.float32),
+            komi=jnp.asarray([r.komi for r in rows]
+                             + [self.engine.komi] * pad, jnp.float32),
             colour=jnp.asarray([r.colour for r in rows] + [-1] * pad,
                                jnp.int32),
             ticket=jnp.asarray([r.ticket for r in rows] + [-1] * pad,
@@ -831,7 +869,8 @@ class SearchService:
             state=jax.tree.map(lambda x: x[idx], gq.states),
             key=gq.keys[idx], lane=gq.lane[idx], sims=gq.sims[idx],
             c_uct=gq.c_uct[idx], vl=gq.vl[idx], pw=gq.pw[idx],
-            colour=gq.colour[idx], ticket=gq.ticket[idx])
+            komi=gq.komi[idx], colour=gq.colour[idx],
+            ticket=gq.ticket[idx])
         got = jax.tree.map(lambda x: lax.ppermute(x, self._axis, to_next),
                            chunk)
         got_n = lax.ppermute(d, self._axis, to_next)
@@ -912,6 +951,7 @@ class SearchService:
             c_uct=merge(sl.c_uct, sq.c_uct, gq.c_uct),
             vl=merge(sl.vl, sq.vl, gq.vl),
             pw=merge(sl.pw, sq.pw, gq.pw),
+            komi=merge(sl.komi, sq.komi, gq.komi),
             a_black=jnp.where(adm_s, True,
                               jnp.where(adm_g, cellA, sl.a_black)),
         )
@@ -950,6 +990,7 @@ class SearchService:
         cu_p = sl.c_uct[idx]
         vl_p = sl.vl[idx]
         pw_p = sl.pw[idx]
+        km_p = sl.komi[idx]
         is_serve = (sl.lane == LANE_SERVE) & (sl.ticket >= 0)
         # serve contract: the query key drives its (single) search directly
         ka = jnp.where(is_serve[idx][:, None], keys_p, ka)
@@ -961,11 +1002,13 @@ class SearchService:
         res_a = self.player_a.search_batch(
             head, ka[:h], sims_p[:h, 0],
             params=SearchParams(cu_p[:h, 0], vl_p[:h, 0],
-                                pw_p[:h, 0] if a_eval else None))
+                                pw_p[:h, 0] if a_eval else None,
+                                km_p[:h]))
         res_b = self.player_b.search_batch(
             tail, kb[h:], sims_p[h:, 1],
             params=SearchParams(cu_p[h:, 1], vl_p[h:, 1],
-                                pw_p[h:, 1] if b_eval else None))
+                                pw_p[h:, 1] if b_eval else None,
+                                km_p[h:]))
         actions = jnp.concatenate([res_a.action, res_b.action])
         nodes = jnp.concatenate([res_a.tree.size, res_b.tree.size])
         visits = jnp.concatenate([res_a.root_visits, res_b.root_visits])
@@ -984,7 +1027,7 @@ class SearchService:
         game_done = live & ~is_serve & (new_st.done
                                         | (moves_new >= self.max_moves))
         finished = is_serve | game_done
-        winner = jax.vmap(self.engine.result)(new_st)
+        winner = jax.vmap(self.engine.result)(new_st, sl.komi)
 
         # eval-batch occupancy: live slots whose *searching* side this
         # step was guided (pw > 0 under a player with an evaluator) —
@@ -1001,7 +1044,7 @@ class SearchService:
             states=new_st, keys=new_keys,
             ticket=jnp.where(finished, -1, sl.ticket),
             lane=sl.lane, moves=moves_new, sims=sl.sims,
-            c_uct=sl.c_uct, vl=sl.vl, pw=sl.pw,
+            c_uct=sl.c_uct, vl=sl.vl, pw=sl.pw, komi=sl.komi,
             a_black=sl.a_black)
         return pool._replace(slots=slots, ring=ring,
                              parity=pool.parity + 1,

@@ -267,9 +267,15 @@ class GoEngine:
         white_pts = (board == WHITE).sum() + (empty & rw & ~rb).sum()
         return (black_pts - white_pts).astype(jnp.float32)
 
-    def result(self, state: GoState) -> jax.Array:
-        """+1 black win / -1 white win / 0 draw, komi applied."""
-        s = self.score(state.board) - self.komi
+    def result(self, state: GoState, komi=None) -> jax.Array:
+        """+1 black win / -1 white win / 0 draw, komi applied.
+
+        ``komi`` may be a traced per-game value; ``None`` falls back to the
+        engine's static komi (the historical program, bit for bit — half-
+        integer komis are exact in f32 either way).
+        """
+        k = self.komi if komi is None else komi
+        s = self.score(state.board) - k
         return jnp.sign(s)
 
     # -- playouts ----------------------------------------------------------------
@@ -351,9 +357,10 @@ class GoEngine:
         final, _ = jax.lax.while_loop(cond, body, (state, rng))
         return final
 
-    def playout_value(self, state: GoState, rng: jax.Array) -> jax.Array:
+    def playout_value(self, state: GoState, rng: jax.Array,
+                      komi=None) -> jax.Array:
         """Black-perspective playout outcome in ``{-1, 0, +1}``."""
-        return self.result(self.random_playout(state, rng))
+        return self.result(self.random_playout(state, rng), komi)
 
     # -- convenience ----------------------------------------------------------------
 

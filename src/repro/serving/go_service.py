@@ -3,13 +3,28 @@
 The Go-side counterpart of :class:`~repro.serving.engine.ServeEngine`'s
 fixed-bucket pattern: requests are admitted into a fixed-capacity
 SearchService slot pool so one compiled dispatch serves every query.  The
-static bucket axes are ``(board_size, komi, max_sims)`` — a new komi opens
-a new bucket (engine komi is baked into playout scoring), while the
-per-request ``sims`` budget **and the per-request strength knobs**
-``c_uct`` / ``virtual_loss`` are *traced* (masked search tail; per-lane
-scalar broadcast), so budgets from 1 to ``max_sims`` and arbitrary UCT
-configurations share one executable — a caller can dial a query's
-exploration per request with zero recompilation.
+static bucket axes are ``(board_size, max_sims)``; the per-request
+``sims`` budget, the strength knobs ``c_uct`` / ``virtual_loss``, **and
+— since PR 10 — the scoring ``komi``** are *traced* (masked search tail;
+per-lane scalar broadcast; per-slot komi column), so budgets from 1 to
+``max_sims``, arbitrary UCT configurations, and arbitrary komis share
+one executable — a caller can dial a query's exploration *and* its komi
+per request with zero recompilation.
+
+Two scheduling modes own that pool (``unified=``, default on):
+
+* **unified** — every komi is a *bucket* inside ONE mesh-wide
+  SearchService, scheduled by a single
+  :class:`~repro.core.scheduler.BucketScheduler` pump/reconcile stream:
+  one compiled dispatch and one pipeline serve all buckets, per-bucket
+  shard partitions (+ idle-headroom borrowing) keep traffic classes
+  apart, and ``pipeline_depth`` may adapt inside a static clamp
+  (``max_pipeline_depth``).  Host pump cost no longer scales with
+  bucket count.
+* **per-bucket** (``unified=False``, the PR 6-9 shape, kept as the
+  benchmark baseline) — each komi opens its own SearchService + pipeline
+  and :meth:`poll` round-robins them (rotating its start bucket per
+  call so no bucket eats every pump's first flush).
 
 A query is a pure function of
 ``(board, to_play, sims, c_uct, virtual_loss, key)``: the dispatcher
@@ -55,6 +70,7 @@ import numpy as np
 
 from repro.config import MCTSConfig
 from repro.core.mcts import MCTS
+from repro.core.scheduler import BucketScheduler
 from repro.core.service import SearchService, pad_slots
 from repro.core.streaming import DispatchPipeline
 from repro.go.board import BLACK, NO_KO, GoEngine, GoState
@@ -140,6 +156,26 @@ class DeadlinePolicy:
             sims * self._waves(depth))
         self.sim_cost_s += self.ewma * (per_sim - self.sim_cost_s)
 
+    def observe_censored(self, waited_s: float, sims: int,
+                         depth: int) -> None:
+        """One-sided calibration from a shed or expired request.
+
+        Learning only from completions biases the cost model optimistic
+        under overload: the slowest requests are exactly the ones that
+        never complete, so ``sim_cost_s`` drifts down while the machine
+        drowns and the policy admits ever more unmeetable work.  A
+        request shed after waiting ``waited_s`` is a *censored* sample —
+        its true latency would have been at least the wait — so it may
+        only pull the estimate **up** (standard censored-EWMA rule: skip
+        the sample when the bound is already below the estimate).
+        """
+        if not self.calibrate or sims < 1:
+            return
+        per_sim = max(waited_s - self.base_s, 0.0) / (
+            sims * self._waves(depth))
+        if per_sim > self.sim_cost_s:
+            self.sim_cost_s += self.ewma * (per_sim - self.sim_cost_s)
+
 
 class _Ticket:
     """Host-side lifecycle record of one submitted query."""
@@ -168,12 +204,29 @@ class GoService:
     answers are placement-independent by the dispatcher's RNG contract,
     so sharding only changes throughput, never a move.
 
-    ``pipeline_depth`` streams the serve loop: each bucket drives a
-    persistent :class:`~repro.core.streaming.DispatchPipeline`, so
-    :meth:`poll` keeps up to that many supersteps in flight instead of
-    awaiting each one — queued queries, result unpacking, and placement
-    overlap with device search.  Answers are unchanged at any depth (the
-    serve RNG contract makes them pure functions of the query).
+    ``unified`` (default) schedules every komi bucket inside ONE shared
+    SearchService pool via a
+    :class:`~repro.core.scheduler.BucketScheduler`: one compiled
+    dispatch, one pump/reconcile stream, per-bucket shard partitions
+    with idle-headroom ``borrowing``.  With a single bucket, borrowing
+    moot, and a fixed depth this is bit-identical (results *and* host
+    syncs) to the per-bucket path; with many buckets it answers the
+    same queries with one pump's host cost instead of one per bucket.
+    ``unified=False`` keeps the PR 6-9 one-pool-per-komi shape (each
+    new komi compiles its own bucket).
+
+    ``pipeline_depth`` streams the serve loop: :meth:`poll` keeps up to
+    that many supersteps in flight instead of awaiting each one —
+    queued queries, result unpacking, and placement overlap with device
+    search.  Answers are unchanged at any depth (the serve RNG contract
+    makes them pure functions of the query).  In unified mode the depth
+    may *adapt*: ``max_pipeline_depth > pipeline_depth`` (or
+    ``adaptive_depth=True``) engages a
+    :class:`~repro.core.scheduler.DepthController` that raises the
+    window when the device runs ahead of the host and lowers it when
+    reconciles block, clamped to the static ``max_pipeline_depth`` —
+    depth only changes host read timing, so adaptation never compiles a
+    new trace.
 
     ``admission_limit`` (0 = the bucket queue capacity) bounds each
     bucket's outstanding requests — :meth:`submit` sheds past it — and
@@ -199,6 +252,9 @@ class GoService:
                  admission_limit: int = 0,
                  deadline_policy: Optional[DeadlinePolicy] = None,
                  metrics: Optional[ServingMetrics] = None,
+                 unified: bool = True, max_pipeline_depth: int = 0,
+                 adaptive_depth: Optional[bool] = None,
+                 borrowing: bool = True,
                  **mcts_kw):
         self.board_size = int(board_size)
         self.default_komi = float(komi)
@@ -217,33 +273,64 @@ class GoService:
         self.deadline_policy = deadline_policy or DeadlinePolicy(
             slots=self.slots)
         self.metrics = metrics or ServingMetrics()
+        self.unified = bool(unified)
+        # static depth clamp; > pipeline_depth gives the adaptive
+        # controller headroom to raise the in-flight window
+        self.max_pipeline_depth = (int(max_pipeline_depth)
+                                   or self.pipeline_depth)
+        if adaptive_depth is None:
+            adaptive_depth = self.max_pipeline_depth > self.pipeline_depth
+        self.adaptive_depth = bool(adaptive_depth)
+        self.borrowing = bool(borrowing)
         self.mcts_kw = mcts_kw
         self._buckets: Dict[float, SearchService] = {}
         self._pipes: Dict[float, DispatchPipeline] = {}  # komi -> pipeline
+        self._sched: Optional[BucketScheduler] = None
+        self._poll_rot = 0        # per-bucket path: rotating pump offset
         self._tickets: Dict[int, _Ticket] = {}
         self._done: Dict[int, MoveResult] = {}
         self._shed_tickets: Dict[int, str] = {}    # ticket -> reason
         self._shed_new: List[int] = []             # shed since last pop_shed
         self._next_ticket = 0
         self._rng = np.random.default_rng(seed)
-        self._bucket(self.default_komi)       # compile the default bucket
+        if self.unified:
+            svc = self._make_service(self.default_komi)
+            self._buckets[self.default_komi] = svc
+            self._sched = BucketScheduler(
+                svc, depth=self.pipeline_depth,
+                adaptive=self.adaptive_depth,
+                max_depth=max(self.max_pipeline_depth, self.pipeline_depth),
+                borrowing=self.borrowing)
+            self._sched.bucket(self.default_komi)
+        else:
+            self._bucket(self.default_komi)   # compile the default bucket
 
     # ---------------------------------------------------------------- bucket
 
+    def _make_service(self, komi: float) -> SearchService:
+        """Build + reset one SearchService pool scored at ``komi``."""
+        engine = GoEngine(self.board_size, komi=komi)
+        cfg = MCTSConfig(board_size=self.board_size, komi=komi,
+                         lanes=self.lanes, sims_per_move=self.max_sims,
+                         max_nodes=self.max_nodes)
+        player = MCTS(engine, cfg, **self.mcts_kw)
+        svc = SearchService(engine, player, player, self.slots,
+                            superstep=self.superstep, mesh=self.mesh,
+                            placement=self.placement,
+                            pipeline_depth=self.pipeline_depth)
+        svc.reset(seed=self.seed, serve_capacity=self.queue_capacity,
+                  game_capacity=2)
+        return svc
+
     def _bucket(self, komi: float) -> SearchService:
+        """The pool serving ``komi``: the shared one (unified — the komi
+        just registers a scheduler bucket) or the komi's own (legacy)."""
+        if self.unified:
+            self._sched.bucket(komi)
+            return self._buckets[self.default_komi]
         svc = self._buckets.get(komi)
         if svc is None:
-            engine = GoEngine(self.board_size, komi=komi)
-            cfg = MCTSConfig(board_size=self.board_size, komi=komi,
-                             lanes=self.lanes, sims_per_move=self.max_sims,
-                             max_nodes=self.max_nodes)
-            player = MCTS(engine, cfg, **self.mcts_kw)
-            svc = SearchService(engine, player, player, self.slots,
-                                superstep=self.superstep, mesh=self.mesh,
-                                placement=self.placement,
-                                pipeline_depth=self.pipeline_depth)
-            svc.reset(seed=self.seed, serve_capacity=self.queue_capacity,
-                      game_capacity=2)
+            svc = self._make_service(komi)
             self._buckets[komi] = svc
             self._pipes[komi] = DispatchPipeline(svc)
         return svc
@@ -264,9 +351,50 @@ class GoService:
         return sum(b.outstanding for b in self._buckets.values())
 
     def shard_occupancy(self, komi: Optional[float] = None) -> np.ndarray:
-        """Per-shard occupancy of one bucket's pool (default bucket)."""
-        komi = self.default_komi if komi is None else float(komi)
-        return self._bucket(komi).shard_occupancy()
+        """Per-shard occupancy, aggregated across buckets.
+
+        Unified mode has one pool, so every komi reads the same global
+        occupancy.  Per-bucket mode returns the komi's own pool, or —
+        with ``komi=None`` — the element-wise mean over all buckets'
+        pools (each bucket owns a full ``slots``-wide pool there, so the
+        mean is the fleet-level utilisation a capacity planner wants;
+        with one bucket it degenerates to that bucket, the historical
+        behaviour).
+        """
+        if self.unified:
+            return self._buckets[self.default_komi].shard_occupancy()
+        if komi is not None:
+            return self._bucket(float(komi)).shard_occupancy()
+        occ = [svc.shard_occupancy() for svc in self._buckets.values()]
+        return np.mean(occ, axis=0)
+
+    def scheduler_stats(self) -> dict:
+        """Scheduler telemetry for ``/metrics``: per-bucket occupancy,
+        queue depth, and the in-flight superstep count.
+
+        Unified mode reports the single pipeline (current + max depth,
+        adaptive-controller state) plus per-bucket queue depths and
+        shard-partition sizes; per-bucket mode reports each bucket's own
+        pipeline window.
+        """
+        if self.unified:
+            s = self._sched.stats()
+            s["unified"] = True
+            s["in_flight_supersteps"] = self._sched.in_flight_supersteps
+            s["per_bucket"] = {
+                str(k): v for k, v in self._sched.bucket_stats().items()}
+            return s
+        return {
+            "unified": False,
+            "buckets": len(self._buckets),
+            "per_bucket": {
+                str(komi): {
+                    "queue_depth": svc.outstanding,
+                    "in_flight_supersteps":
+                        self._pipes[komi].in_flight_supersteps,
+                }
+                for komi, svc in self._buckets.items()},
+        }
 
     def _to_state(self, board, to_play: int, engine: GoEngine) -> GoState:
         b = np.asarray(board, np.int8).reshape(-1)
@@ -298,10 +426,11 @@ class GoService:
         them); ``prior_weight`` sets the eval-lane UCT<->PUCT blend when
         the service was built with ``evaluator=`` (an
         :class:`repro.core.evaluator.EvalService` in ``mcts_kw``) — it is
-        silently inert otherwise.  ``komi`` is *static* — a new value
-        opens a new bucket and compiles.  ``key`` fixes the search RNG
-        for reproducible answers (default: drawn from the service
-        chain).
+        silently inert otherwise.  ``komi`` is traced too in unified
+        mode (a new value just registers a scheduler bucket — zero
+        recompilation); with ``unified=False`` it is static and a new
+        value compiles its own pool.  ``key`` fixes the search RNG for
+        reproducible answers (default: drawn from the service chain).
 
         SLO path: admission is queue-depth gated — past
         ``admission_limit`` outstanding requests in the bucket the query
@@ -316,7 +445,8 @@ class GoService:
         komi = self.default_komi if komi is None else float(komi)
         svc = self._bucket(komi)
         now = time.monotonic()
-        depth = svc.outstanding
+        depth = (self._sched.buckets[komi].outstanding if self.unified
+                 else svc.outstanding)
         if depth >= self.admission_limit:
             self.metrics.bump("shed_overload")
             raise OverCapacityError(
@@ -344,10 +474,16 @@ class GoService:
         if key is None:
             key = self._rng.integers(0, 2 ** 32, size=(2,), dtype=np.uint32)
         state = self._to_state(board, to_play, svc.engine)
-        inner = svc.submit_serve(state, key=key, sims=granted,
-                                 c_uct=c_uct, virtual_loss=virtual_loss,
-                                 prior_weight=prior_weight,
-                                 deadline=deadline)
+        if self.unified:
+            inner = self._sched.submit_serve(
+                komi, state, key=key, sims=granted, c_uct=c_uct,
+                virtual_loss=virtual_loss, prior_weight=prior_weight,
+                deadline=deadline)
+        else:
+            inner = svc.submit_serve(state, key=key, sims=granted,
+                                     c_uct=c_uct, virtual_loss=virtual_loss,
+                                     prior_weight=prior_weight,
+                                     deadline=deadline)
         ticket = self._next_ticket
         self._next_ticket += 1
         self._tickets[ticket] = _Ticket(komi, inner, now, deadline,
@@ -384,32 +520,77 @@ class GoService:
         self._shed_new.clear()
         return out
 
+    def _shed_with_calibration(self, ticket: int, now: float) -> None:
+        """Shed one expired ticket; its wait is a censored latency
+        sample, so it still calibrates the deadline policy (one-sided)."""
+        t = self._tickets[ticket]
+        self.deadline_policy.observe_censored(
+            now - t.t_submit, t.sims_granted, t.depth)
+        self._shed_ticket(ticket, "deadline")
+
+    def _record_done(self, ticket: int, rec, engine: GoEngine) -> None:
+        """Unpack one reconcile record into its ticket's MoveResult and
+        land the request's stage latencies in the metrics + policy."""
+        is_pass = rec.action >= engine.n2
+        coord = (None if is_pass else
+                 (rec.action // self.board_size,
+                  rec.action % self.board_size))
+        t = self._tickets[ticket]
+        t_done = time.monotonic()
+        total = t_done - t.t_submit
+        queue = (t.t_flush - t.t_submit
+                 if t.t_flush is not None else None)
+        dispatch = (t_done - t.t_flush
+                    if t.t_flush is not None else None)
+        missed = t.deadline is not None and t_done > t.deadline
+        self.metrics.observe(queue, dispatch, total,
+                             deadline_missed=missed)
+        self.deadline_policy.observe(total, t.sims_granted, t.depth)
+        self._done[ticket] = MoveResult(
+            ticket=ticket, action=rec.action, coord=coord,
+            is_pass=is_pass, root_visits=rec.root_visits,
+            sims_granted=t.sims_granted, downgraded=t.downgraded,
+            latency_s=total)
+
     def poll(self) -> List[int]:
-        """Pump every bucket's pipeline; returns newly done tickets.
+        """Pump the scheduler (or every bucket's pipeline); returns
+        newly done tickets.
 
         Each call sheds expired host-buffered queries
-        (``SearchService.shed_expired`` — they never reach the device),
-        flushes the rest, tops the bucket's in-flight window up to
-        ``pipeline_depth`` supersteps, and reconciles the oldest one —
-        at depth 1 exactly the old flush -> dispatch -> poll superstep;
+        (``SearchService.shed_expired`` — they never reach the device,
+        and their waits calibrate the deadline policy as censored
+        samples), flushes the rest, tops the in-flight window(s) up to
+        the pipeline depth, and reconciles the oldest superstep — at
+        depth 1 exactly the old flush -> dispatch -> poll superstep;
         deeper windows leave the device running while the host unpacks
-        answers.  Completed requests land their queue/dispatch/total
-        latencies in :attr:`metrics` and recalibrate the deadline
-        policy.
+        answers.  Unified mode does all of this **once** for every
+        bucket (one pump, one reconcile — host cost independent of
+        bucket count); per-bucket mode loops the buckets, rotating the
+        start offset each call so every bucket periodically gets the
+        round's first flush.  Completed requests land their
+        queue/dispatch/total latencies in :attr:`metrics` and
+        recalibrate the deadline policy.
         """
+        if self.unified:
+            return self._poll_unified()
         done = []
         inner_to_ticket = {(t.komi, t.inner): ticket
                            for ticket, t in self._tickets.items()
                            if ticket not in self._done
                            and ticket not in self._shed_tickets}
-        for komi, svc in self._buckets.items():
+        items = list(self._buckets.items())
+        if len(items) > 1:            # pump fairness: rotate the start
+            off = self._poll_rot % len(items)
+            self._poll_rot += 1
+            items = items[off:] + items[:off]
+        for komi, svc in items:
             if svc.outstanding == 0:
                 continue
             now = time.monotonic()
             for inner in svc.shed_expired(now):
                 ticket = inner_to_ticket.pop((komi, inner), None)
                 if ticket is not None:
-                    self._shed_ticket(ticket, "deadline")
+                    self._shed_with_calibration(ticket, now)
             pipe = self._pipes[komi]
             pipe.pump()
             self._mark_flushed(time.monotonic(), komi=komi)
@@ -417,28 +598,34 @@ class GoService:
                 ticket = inner_to_ticket.get((komi, rec.ticket))
                 if ticket is None:
                     continue        # a game lane sharing the bucket
-                n2 = svc.engine.n2
-                is_pass = rec.action >= n2
-                coord = (None if is_pass else
-                         (rec.action // self.board_size,
-                          rec.action % self.board_size))
-                t = self._tickets[ticket]
-                t_done = time.monotonic()
-                total = t_done - t.t_submit
-                queue = (t.t_flush - t.t_submit
-                         if t.t_flush is not None else None)
-                dispatch = (t_done - t.t_flush
-                            if t.t_flush is not None else None)
-                missed = t.deadline is not None and t_done > t.deadline
-                self.metrics.observe(queue, dispatch, total,
-                                     deadline_missed=missed)
-                self.deadline_policy.observe(total, t.sims_granted, t.depth)
-                self._done[ticket] = MoveResult(
-                    ticket=ticket, action=rec.action, coord=coord,
-                    is_pass=is_pass, root_visits=rec.root_visits,
-                    sims_granted=t.sims_granted, downgraded=t.downgraded,
-                    latency_s=total)
+                self._record_done(ticket, rec, svc.engine)
                 done.append(ticket)
+        return done
+
+    def _poll_unified(self) -> List[int]:
+        """One scheduler round: shed, pump once, reconcile once —
+        every bucket's work moves in a single superstep stream."""
+        done: List[int] = []
+        svc = self._buckets[self.default_komi]
+        if svc.outstanding == 0:
+            return done
+        inner_to_ticket = {t.inner: ticket
+                           for ticket, t in self._tickets.items()
+                           if ticket not in self._done
+                           and ticket not in self._shed_tickets}
+        now = time.monotonic()
+        for inner in self._sched.shed_expired(now):
+            ticket = inner_to_ticket.pop(inner, None)
+            if ticket is not None:
+                self._shed_with_calibration(ticket, now)
+        self._sched.pump()
+        self._mark_flushed(time.monotonic())
+        for rec in self._sched.reconcile():
+            ticket = inner_to_ticket.get(rec.ticket)
+            if ticket is None:
+                continue            # a game lane sharing the pool
+            self._record_done(ticket, rec, svc.engine)
+            done.append(ticket)
         return done
 
     def result(self, ticket: int, wait: bool = True,

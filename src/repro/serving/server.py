@@ -240,10 +240,14 @@ class GoMoveServer:
         return {
             "metrics": svc.metrics.snapshot(),
             "outstanding": svc.outstanding,
-            "buckets": sorted(svc._buckets),
+            "buckets": sorted(
+                svc._sched.buckets if svc.unified else svc._buckets),
             "admission_limit": svc.admission_limit,
             "host_syncs": svc.host_syncs,
             "host_blocked_s": svc.host_blocked_s,
+            # per-bucket occupancy / queue depth / in-flight supersteps
+            "scheduler": svc.scheduler_stats(),
+            "shard_occupancy": [float(x) for x in svc.shard_occupancy()],
         }
 
     # ------------------------------------------------------------------ http

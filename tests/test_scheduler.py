@@ -1,0 +1,367 @@
+"""Unified multi-bucket scheduler tests (core/scheduler.py + GoService).
+
+Tiers, mirroring tests/test_sharded_service.py:
+
+* pure host-side unit tests — DepthController clamp/hysteresis/
+  convergence, BucketScheduler shard partitions + headroom borrowing
+  (against a stub service, no device);
+* bit-identity pins under ``mesh=None`` — mixed-komi streaming through
+  the unified scheduler at ``depth=1`` with borrowing disabled answers
+  every ticket identically (action, root visits) to the per-bucket
+  ``_pipes`` path, while spending strictly fewer host syncs; with a
+  single bucket the two paths are bit-identical *including* host syncs
+  (the acceptance invariant: unified is the old program when there is
+  nothing to unify);
+* an 8-faked-device subprocess test (slow tier) re-pins the mixed-komi
+  identity with real shard partitions and borrowing, following the
+  tests/test_distributed.py discipline so single-device tier-1 runs
+  still cover the sharded path.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.scheduler import BucketScheduler, DepthController
+from repro.serving.go_service import DeadlinePolicy, GoService
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+multidevice = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _boards(n, n2=25, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        b = np.zeros(n2, np.int8)
+        stones = rng.choice(n2, size=4, replace=False)
+        b[stones[:2]] = 1
+        b[stones[2:]] = -1
+        out.append(b.tolist())
+    return out
+
+
+def _drain(svc, tickets):
+    """Poll until every ticket answers; returns ticket -> MoveResult."""
+    done = {}
+    polls = 0
+    while len(done) < len(tickets):
+        for t in svc.poll():
+            done[t] = svc.result(t, wait=False)
+        polls += 1
+        assert polls < 10_000, "drain stalled"
+    return done
+
+
+# --------------------------------------------------------------------------
+# DepthController
+
+
+class TestDepthController:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            DepthController(min_depth=0)
+        with pytest.raises(ValueError):
+            DepthController(min_depth=3, max_depth=2)
+        with pytest.raises(ValueError):
+            DepthController(lo_wait_s=0.5, hi_wait_s=0.1)
+
+    def test_raises_to_clamp_and_never_past(self):
+        c = DepthController(min_depth=1, max_depth=3, patience=2)
+        depth, seen = 1, []
+        # device always ahead: zero wait, results landed and waiting
+        for _ in range(50):
+            depth = c.observe(depth, blocked_s=0.0, landed_lag=4)
+            seen.append(depth)
+        assert max(seen) == 3                    # reached the clamp ...
+        assert seen[-1] == 3                     # ... and stayed
+        assert all(1 <= d <= 3 for d in seen)    # never outside it
+
+    def test_lowers_under_blocking_and_floors(self):
+        c = DepthController(min_depth=1, max_depth=4, patience=2)
+        depth, seen = 4, []
+        for _ in range(50):                      # device always behind
+            depth = c.observe(depth, blocked_s=1.0, landed_lag=0)
+            seen.append(depth)
+        assert seen[-1] == 1
+        assert all(1 <= d <= 4 for d in seen)
+
+    def test_deadband_converges(self):
+        c = DepthController(min_depth=1, max_depth=4,
+                            lo_wait_s=1e-4, hi_wait_s=1e-2)
+        depth = 2
+        # steady mid-band wait: inside the deadband, depth never moves
+        for _ in range(100):
+            depth = c.observe(depth, blocked_s=1e-3, landed_lag=2)
+        assert depth == 2
+        assert c.adjustments == 0
+
+    def test_patience_filters_one_off_spikes(self):
+        c = DepthController(min_depth=1, max_depth=4, patience=3)
+        depth = 2
+        # a single raise signal between holds must not move the depth
+        depth = c.observe(depth, blocked_s=0.0, landed_lag=1)
+        depth = c.observe(depth, blocked_s=1e-3, landed_lag=0)
+        assert depth == 2 and c.adjustments == 0
+
+
+# --------------------------------------------------------------------------
+# BucketScheduler partitions + borrowing (stub service, host only)
+
+
+class _StubService:
+    """Just enough SearchService surface for mask/partition tests."""
+
+    def __init__(self, n_shard):
+        self.n_shard = n_shard
+        self.pipeline_depth = 1
+        self.superstep = 2
+        self._shard_filter = None
+
+
+class TestBucketPartitions:
+    def test_partition_covers_and_disjoint(self):
+        sched = BucketScheduler(_StubService(8))
+        for k in (5.5, 6.0, 6.5, 7.5):
+            sched.bucket(k)
+        masks = [sched._partition(b.index)
+                 for b in sched.buckets.values()]
+        stack = np.stack(masks)
+        assert (stack.sum(axis=0) == 1).all()    # disjoint and covering
+        assert all(m.sum() == 2 for m in masks)  # 8 shards / 4 buckets
+
+    def test_more_buckets_than_shards_overlap(self):
+        sched = BucketScheduler(_StubService(2))
+        for k in range(5):
+            sched.bucket(float(k))
+        for b in sched.buckets.values():
+            assert sched._partition(b.index).sum() >= 1
+
+    def test_borrowing_lends_idle_shards_and_reclaims(self):
+        svc = _StubService(8)
+        sched = BucketScheduler(svc, borrowing=True)
+        busy, idle = sched.bucket(6.0), sched.bucket(7.5)
+        busy.outstanding = 4
+        # idle bucket lends: the busy bucket may place on every shard
+        assert sched._allowed(6.0, 1).all()
+        # lender submits -> reclaimed on demand: mask shrinks to own half
+        idle.outstanding = 1
+        own = sched._partition(busy.index)
+        assert (sched._allowed(6.0, 1) == own).all()
+        # the filter is installed on the service
+        assert svc._shard_filter == sched._allowed
+
+    def test_borrowing_disabled_pins_partition(self):
+        sched = BucketScheduler(_StubService(8), borrowing=False)
+        b = sched.bucket(6.0)
+        sched.bucket(7.5)          # idle, but must not be lent
+        assert (sched._allowed(6.0, 1) == sched._partition(b.index)).all()
+
+    def test_unregistered_komi_sees_all_shards(self):
+        sched = BucketScheduler(_StubService(8))
+        sched.bucket(6.0)
+        assert sched._allowed(99.0, 0) is None
+
+    def test_single_shard_mask_is_none(self):
+        sched = BucketScheduler(_StubService(1))
+        sched.bucket(6.0)
+        sched.bucket(7.5)
+        assert sched._allowed(6.0, 1) is None    # mesh=None: nothing to mask
+
+    def test_max_depth_below_initial_rejected(self):
+        with pytest.raises(ValueError):
+            BucketScheduler(_StubService(1), depth=3, max_depth=2)
+
+
+# --------------------------------------------------------------------------
+# DeadlinePolicy censored calibration (satellite: learn from sheds too)
+
+
+class TestCensoredCalibration:
+    def test_shed_wait_raises_optimistic_estimate(self):
+        pol = DeadlinePolicy(base_s=0.0, sim_cost_s=1e-6, slots=8,
+                             calibrate=True, ewma=0.5)
+        pol.observe_censored(waited_s=1.0, sims=10, depth=0)
+        assert pol.sim_cost_s > 1e-6             # pulled up toward 0.05
+
+    def test_fast_shed_never_lowers_estimate(self):
+        pol = DeadlinePolicy(base_s=0.0, sim_cost_s=1e-2, slots=8,
+                             calibrate=True, ewma=0.5)
+        pol.observe_censored(waited_s=1e-5, sims=10, depth=0)
+        assert pol.sim_cost_s == 1e-2            # censored: one-sided
+
+    def test_calibrate_off_is_inert(self):
+        pol = DeadlinePolicy(sim_cost_s=1e-3, calibrate=False)
+        pol.observe_censored(waited_s=9.9, sims=10, depth=0)
+        assert pol.sim_cost_s == 1e-3
+
+
+# --------------------------------------------------------------------------
+# bit-identity pins, mesh=None
+
+
+def _service(unified, **kw):
+    kw.setdefault("board_size", 5)
+    kw.setdefault("komi", 6.0)
+    kw.setdefault("max_sims", 8)
+    kw.setdefault("lanes", 4)
+    kw.setdefault("slots", 8)
+    kw.setdefault("seed", 0)
+    return GoService(unified=unified, **kw)
+
+
+class TestUnifiedIdentity:
+    def test_mixed_komi_same_moves_fewer_syncs(self):
+        boards = _boards(8)
+        komis = [6.0, 7.5] * 4                   # interleaved buckets
+        uni = _service(True, borrowing=False)
+        leg = _service(False)
+        out = {}
+        for svc in (uni, leg):
+            tickets = [svc.submit(b, komi=k)
+                       for b, k in zip(boards, komis)]
+            out[svc] = (tickets, _drain(svc, tickets))
+        t_uni, r_uni = out[uni]
+        t_leg, r_leg = out[leg]
+        assert t_uni == t_leg                    # same ticket numbering
+        for tu, tl in zip(t_uni, t_leg):
+            assert r_uni[tu].action == r_leg[tl].action
+            assert np.array_equal(r_uni[tu].root_visits,
+                                  r_leg[tl].root_visits)
+        # the tentpole's win: one pump stream instead of one per bucket
+        assert uni.host_syncs < leg.host_syncs
+        # one compiled dispatch serves both komis
+        assert uni._buckets[6.0]._dispatch._cache_size() == 1
+
+    def test_single_bucket_bit_identical_including_syncs(self):
+        boards = _boards(6)
+        uni = _service(True)
+        leg = _service(False)
+        for svc in (uni, leg):
+            tickets = [svc.submit(b) for b in boards]
+            done = _drain(svc, tickets)
+            svc._pin = (tickets,
+                        [done[t].action for t in tickets],
+                        [done[t].root_visits for t in tickets])
+        assert uni._pin[0] == leg._pin[0]
+        assert uni._pin[1] == leg._pin[1]
+        for a, b in zip(uni._pin[2], leg._pin[2]):
+            assert np.array_equal(a, b)
+        assert uni.host_syncs == leg.host_syncs  # bit-identical pump loop
+        assert uni.host_blocked_s > 0 and leg.host_blocked_s > 0
+
+    def test_adaptive_depth_clamped_and_converges(self):
+        svc = _service(True, pipeline_depth=1, max_pipeline_depth=3)
+        assert svc.adaptive_depth                # headroom engages it
+        boards = _boards(16)
+        tickets = [svc.submit(b, komi=6.0 if i % 2 else 7.5)
+                   for i, b in enumerate(boards)]
+        depths = []
+        done = {}
+        polls = 0
+        while len(done) < len(tickets):
+            for t in svc.poll():
+                done[t] = svc.result(t, wait=False)
+            depths.append(svc._sched.depth)
+            polls += 1
+            assert polls < 10_000
+        assert all(1 <= d <= 3 for d in depths)  # never past the clamp
+        # converged: the tail of the run settles on one depth
+        tail = depths[-max(3, len(depths) // 4):]
+        assert len(set(tail)) == 1
+
+    def test_scheduler_stats_shapes(self):
+        svc = _service(True)
+        svc.best_move(_boards(1)[0], komi=7.5)
+        s = svc.scheduler_stats()
+        assert s["unified"] and s["buckets"] == 2
+        for entry in s["per_bucket"].values():
+            assert {"queue_depth", "submitted", "completed",
+                    "shards_owned"} <= set(entry)
+        assert s["in_flight_supersteps"] == 0    # drained
+        occ = svc.shard_occupancy()
+        assert occ.shape == (1,) and 0.0 <= occ[0] <= 1.0
+
+    def test_metrics_payload_exports_scheduler(self):
+        from repro.serving.server import GoMoveServer
+        svc = _service(True)
+        payload = GoMoveServer(svc)._metrics_payload()
+        assert payload["scheduler"]["unified"]
+        assert "per_bucket" in payload["scheduler"]
+        assert payload["shard_occupancy"] == [0.0]
+
+
+# --------------------------------------------------------------------------
+# 8-shard identity (subprocess so tier-1 single-device runs cover it)
+
+_SHARDED_SRC = r"""
+import numpy as np
+from repro.compat import make_service_mesh
+from repro.serving.go_service import GoService
+
+mesh = make_service_mesh(8)
+kw = dict(board_size=5, komi=6.0, max_sims=8, lanes=4, slots=16,
+          seed=0, mesh=mesh)
+rng = np.random.default_rng(0)
+boards = []
+for _ in range(12):
+    b = np.zeros(25, np.int8)
+    stones = rng.choice(25, size=4, replace=False)
+    b[stones[:2]] = 1
+    b[stones[2:]] = -1
+    boards.append(b.tolist())
+komis = [6.0, 7.5, 5.5] * 4
+
+def run(unified, **extra):
+    svc = GoService(unified=unified, **kw, **extra)
+    tickets = [svc.submit(b, komi=k) for b, k in zip(boards, komis)]
+    done = {}
+    while len(done) < len(tickets):
+        for t in svc.poll():
+            done[t] = svc.result(t, wait=False)
+    return ([done[t].action for t in tickets], svc.host_syncs,
+            svc._buckets[6.0]._dispatch_mesh._cache_size()
+            if unified else None)
+
+moves_u, syncs_u, traces = run(True, borrowing=False)
+moves_b, syncs_b, _ = run(True, borrowing=True)
+moves_l, syncs_l, _ = run(False)
+assert moves_u == moves_l, (moves_u, moves_l)   # partitioned == per-bucket
+assert moves_b == moves_l, (moves_b, moves_l)   # borrowing changes nothing
+assert syncs_u < syncs_l, (syncs_u, syncs_l)
+assert traces == 1, traces                      # one dispatch, 3 komis
+print("OK", syncs_u, syncs_l)
+"""
+
+
+@pytest.mark.slow
+def test_sharded_unified_identity_subprocess():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SRC], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK" in out.stdout
+
+
+@multidevice
+def test_sharded_unified_identity_inprocess():
+    from repro.compat import make_service_mesh
+    mesh = make_service_mesh(8)
+    boards = _boards(6)
+    komis = [6.0, 7.5] * 3
+    results = {}
+    for unified in (True, False):
+        svc = _service(unified, slots=16, mesh=mesh,
+                       **({"borrowing": False} if unified else {}))
+        tickets = [svc.submit(b, komi=k) for b, k in zip(boards, komis)]
+        done = _drain(svc, tickets)
+        results[unified] = [done[t].action for t in tickets]
+    assert results[True] == results[False]
